@@ -1,0 +1,107 @@
+"""Shared benchmark fixtures: correlated latents, matched-savings
+threshold search, timing, and a briefly-trained miniature vDiT."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import RippleConfig
+from repro.core import reuse, savings
+from repro.data.synthetic import correlated_video_latents
+
+GRID = (8, 8, 8)
+N = GRID[0] * GRID[1] * GRID[2]
+D = 32
+
+
+def correlated_qk(seed=0, grid=GRID, d=D, rho=0.95, smooth=2):
+    lat = correlated_video_latents(jax.random.PRNGKey(seed), 1, grid, d,
+                                   temporal_rho=rho, spatial_smooth=smooth)
+    x = lat.reshape(1, 1, -1, d)
+    wq = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 1), (d, d))
+    wk = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 2), (d, d))
+    return (jnp.einsum("bhnd,df->bhnf", x, wq),
+            jnp.einsum("bhnd,df->bhnf", x, wk))
+
+
+def savings_at(q, k, theta, grid=GRID, axes=("t", "x", "y"), window=2,
+               granularity="channel"):
+    th = {a: jnp.asarray(theta, jnp.float32) for a in ("t", "x", "y")}
+    rq = reuse.compute_reuse(q, grid, th, axes=axes, window=window,
+                             granularity=granularity)
+    rk = reuse.compute_reuse(k, grid, th, axes=axes, window=window,
+                             granularity=granularity)
+    return float(savings.partial_score_savings(rq.mask, rk.mask)), rq, rk
+
+
+def theta_for_savings(q, k, target, grid=GRID, axes=("t", "x", "y"),
+                      window=2, granularity="channel"):
+    lo, hi = 0.0, 8.0
+    for _ in range(28):
+        mid = 0.5 * (lo + hi)
+        s, _, _ = savings_at(q, k, mid, grid, axes, window, granularity)
+        if s < target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def attention_out(q, k, v):
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def timed(fn, *args, warmup=2, iters=5) -> float:
+    """Median wall time per call in microseconds (CPU; relative only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_mini_vdit():
+    """A miniature vDiT trained ~30 steps on correlated latents so its
+    attention distributions are meaningful (cached per process)."""
+    import dataclasses
+    from repro.config.base import ShapeSpec
+    from repro.configs import get_smoke_config
+    from repro.data.synthetic import DataSpec, latent_video_batch
+    from repro.launch.workloads import build_workload, model_fns
+    from repro.models.params import init_params
+    from repro.training import train_loop
+
+    arch = get_smoke_config("vdit-paper")
+    shape = ShapeSpec(name="mini", kind="train", img_res=32, batch=4,
+                      steps=10)
+    arch = dataclasses.replace(
+        arch, shapes=(shape,),
+        train=dataclasses.replace(arch.train, remat=False,
+                                  learning_rate=3e-3, warmup_steps=5))
+    wl = build_workload(arch, "mini", mesh=None)
+    step = wl.jitted()
+    params = init_params(model_fns(arch), jax.random.PRNGKey(0))
+    state = train_loop.train_state_init(params, arch.train)
+    m = arch.model
+    g = m.grid(img_res=32)
+    spec = DataSpec(seed=0)
+    for i in range(30):
+        b = latent_video_batch(spec, i, 4,
+                               (g[0] * m.t_patch, g[1] * m.patch,
+                                g[2] * m.patch), m.in_channels,
+                               txt_tokens=m.txt_tokens, txt_dim=m.txt_dim)
+        state, _ = step(state, b, jax.random.PRNGKey(i))
+    return arch, state.params

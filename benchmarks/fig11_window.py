@@ -1,0 +1,48 @@
+"""Paper Fig. 11 — sensitivity to the reuse window size.
+
+At a fixed threshold (the window-2 setting, exactly as the paper does),
+larger windows require all K members to agree, so fewer tokens qualify
+(savings drop) while each reuse is more aggressive (error rises when it
+fires).  Window 2 is the savings/quality sweet spot.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (GRID, attention_out, correlated_qk,
+                               savings_at, theta_for_savings)
+
+
+def run():
+    q, k = correlated_qk(0)
+    v = jax.random.normal(jax.random.PRNGKey(7), q.shape)
+    base = attention_out(q, k, v)
+    theta = theta_for_savings(q, k, 0.85, window=2)  # the W=2 threshold
+    rows = []
+    for window in (2, 4, 8):
+        s, rq, rk = savings_at(q, k, theta, window=window)
+        out = attention_out(rq.snapped, rk.snapped, v)
+        rows.append({
+            "window": window,
+            "savings": round(s, 4),
+            "mse": float(jnp.mean((out - base) ** 2)),
+        })
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        print(f"fig11_window[w={r['window']}],{us:.0f},"
+              f"savings={r['savings']};mse={r['mse']:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Kernel micro-bench: structural MXU savings of the ripple kernel and
+relative CPU timings (interpret mode — correctness-representative only;
+the MXU skip fraction is the TPU-meaningful number).
+
+Reports, on token-granularity reuse over correlated latents at the
+paper's 75%/85% operating points:
+  * the paper-accounting savings (partial scores),
+  * the pair-collapse fraction,
+  * the block-level MXU skip the Pallas kernel realizes (block 128),
+  * the same after pair-major reordering along the dominant axis
+    (the layout trick from DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import theta_for_savings
+from repro.core import reuse, savings as savings_lib
+from repro.core.collapse import pair_major_order
+from repro.data.synthetic import correlated_video_latents
+from repro.kernels.ripple.ops import ripple_block_stats
+
+GRID = (8, 16, 16)
+N = GRID[0] * GRID[1] * GRID[2]
+D = 64
+
+
+def _qk(seed=0):
+    lat = correlated_video_latents(jax.random.PRNGKey(seed), 1, GRID, D,
+                                   temporal_rho=0.97, spatial_smooth=3)
+    x = lat.reshape(1, 1, N, D)
+    wq = 0.4 * jax.random.normal(jax.random.PRNGKey(seed + 1), (D, D))
+    wk = 0.4 * jax.random.normal(jax.random.PRNGKey(seed + 2), (D, D))
+    return (jnp.einsum("bhnd,df->bhnf", x, wq),
+            jnp.einsum("bhnd,df->bhnf", x, wk))
+
+
+def run():
+    q, k = _qk()
+    rows = []
+    for target in (0.75, 0.85):
+        theta = theta_for_savings(q, k, target, grid=GRID,
+                                  granularity="token")
+        th = {a: jnp.asarray(theta) for a in ("t", "x", "y")}
+        rq = reuse.compute_reuse(q, GRID, th, granularity="token")
+        rk = reuse.compute_reuse(k, GRID, th, granularity="token")
+        paper = float(savings_lib.partial_score_savings(rq.mask, rk.mask))
+        pq, pk = savings_lib.pair_collapse_fractions(rq.mask, rk.mask)
+        skip_raw = float(ripple_block_stats(rq.snapped, rk.snapped,
+                                            block_q=128, block_k=128))
+        # pair-major reorder along x (already adjacent) vs t
+        perm = jnp.asarray(pair_major_order(GRID, "t"))
+        q_t = rq.snapped[..., perm, :]
+        k_t = rk.snapped[..., perm, :]
+        skip_tmajor = float(ripple_block_stats(q_t, k_t, block_q=128,
+                                               block_k=128))
+        # collapse-aware scheduling: protect t-representatives from x/y
+        # snaps so the pair structure survives high thresholds
+        rq_p = reuse.compute_reuse(q, GRID, th, granularity="token",
+                                   protect_axis="t")
+        rk_p = reuse.compute_reuse(k, GRID, th, granularity="token",
+                                   protect_axis="t")
+        paper_p = float(savings_lib.partial_score_savings(rq_p.mask,
+                                                          rk_p.mask))
+        skip_prot = float(ripple_block_stats(
+            rq_p.snapped[..., perm, :], rk_p.snapped[..., perm, :],
+            block_q=128, block_k=128))
+        rows.append({
+            "target": target, "theta": round(theta, 4),
+            "paper_savings": round(paper, 3),
+            "pair_collapse_q": round(float(pq), 3),
+            "pair_collapse_k": round(float(pk), 3),
+            "mxu_block_skip_xmajor": round(skip_raw, 3),
+            "mxu_block_skip_tmajor": round(skip_tmajor, 3),
+            "paper_savings_protected": round(paper_p, 3),
+            "mxu_block_skip_protected": round(skip_prot, 3),
+        })
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        print(f"kernel_bench[{int(r['target']*100)}%],{us:.0f},"
+              f"paper={r['paper_savings']};"
+              f"collapse_q={r['pair_collapse_q']};"
+              f"collapse_k={r['pair_collapse_k']};"
+              f"mxu_skip_x={r['mxu_block_skip_xmajor']};"
+              f"mxu_skip_t={r['mxu_block_skip_tmajor']};"
+              f"protected:paper={r['paper_savings_protected']},"
+              f"mxu_skip={r['mxu_block_skip_protected']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

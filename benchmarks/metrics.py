@@ -1,0 +1,46 @@
+"""Image/video quality metrics (PSNR / SSIM / MSE) in pure numpy/jnp."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mse(a, b) -> float:
+    return float(jnp.mean(jnp.square(jnp.asarray(a, jnp.float32)
+                                     - jnp.asarray(b, jnp.float32))))
+
+
+def psnr(a, b, data_range: float | None = None) -> float:
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    if data_range is None:
+        data_range = float(max(a.max() - a.min(), 1e-6))
+    m = np.mean((a - b) ** 2)
+    if m == 0:
+        return float("inf")
+    return float(10.0 * np.log10(data_range ** 2 / m))
+
+
+def ssim(a, b, data_range: float | None = None, win: int = 7) -> float:
+    """Mean SSIM with a uniform window over the last two spatial dims."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    win = min(win, a.shape[-1], a.shape[-2])
+    if data_range is None:
+        data_range = float(max(a.max() - a.min(), 1e-6))
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+
+    def box(x):
+        from numpy.lib.stride_tricks import sliding_window_view
+        w = sliding_window_view(x, (win, win), axis=(-2, -1))
+        return w.mean(axis=(-2, -1))
+
+    mu_a, mu_b = box(a), box(b)
+    var_a = box(a * a) - mu_a ** 2
+    var_b = box(b * b) - mu_b ** 2
+    cov = box(a * b) - mu_a * mu_b
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2))
+    return float(s.mean())

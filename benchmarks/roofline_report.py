@@ -1,0 +1,59 @@
+"""Render the dry-run JSON-lines output as the EXPERIMENTS.md roofline
+table.  Usage: PYTHONPATH=src python -m benchmarks.roofline_report
+dryrun_singlepod.jsonl"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    seen = set()
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:           # keep the latest entry per cell
+            rows = [x for x in rows if (x["arch"], x["shape"], x["mesh"]) != key]
+        seen.add(key)
+        rows.append(r)
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def render(rows):
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | MODEL_FLOPs/HLO | peak mem (GB) | note |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        note = ""
+        if r.get("steps_multiplier", 1) > 1:
+            note = f"x{r['steps_multiplier']} sampler steps"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['compute_s'])} | "
+            f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r.get('peak_mem_gb', 0):.1f} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_singlepod.jsonl"
+    rows = load(path)
+    print(render(rows))
+    print(f"\n{len(rows)} cells.")
+    worst = sorted(rows, key=lambda r: r["useful_ratio"])[:3]
+    coll = sorted(rows, key=lambda r: -r["collective_s"])[:3]
+    print("\nworst useful-ratio:",
+          [(r["arch"], r["shape"], round(r["useful_ratio"], 2)) for r in worst])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"], fmt_ms(r["collective_s"])) for r in coll])
+
+
+if __name__ == "__main__":
+    main()

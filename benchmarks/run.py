@@ -1,0 +1,38 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+wall time of the whole benchmark computation on this CPU container
+(relative only); ``derived`` is the headline metric reproduced from the
+paper.  Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    from benchmarks import (fig7_mse, fig9_steps, fig11_window,
+                            kernel_bench, tbl3_ablation, tbl4_channelwise)
+    mods = [fig7_mse, fig9_steps, fig11_window, tbl3_ablation,
+            tbl4_channelwise, kernel_bench]
+    if not quick:
+        from benchmarks import tbl2_savings
+        mods.insert(0, tbl2_savings)
+    failures = []
+    for mod in mods:
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc()
+            failures.append((mod.__name__, repr(e)))
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,343 @@
+"""Typed configuration system.
+
+Every architecture in ``repro/configs`` builds an :class:`ArchConfig`; the
+launcher (`repro.launch`) selects one with ``--arch`` and a workload shape
+with ``--shape``.  Configs are plain frozen dataclasses so they hash, print,
+and diff cleanly, and can be overridden from the CLI with
+``key.subkey=value`` strings via :func:`apply_overrides`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# TimeRipple (the paper's technique)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RippleConfig:
+    """Configuration of the TimeRipple reuse technique (paper §3.3).
+
+    The technique snaps spatio-temporally similar (token, channel) entries
+    of Q and K to their window representative, which is exactly equivalent
+    to reusing their partial attention scores (DESIGN.md §2).
+    """
+
+    enabled: bool = False
+    # Which grid axes participate in the similarity checks. Subset of
+    # ("t", "x", "y"); image models use ("x", "y").
+    axes: Tuple[str, ...] = ("t", "x", "y")
+    # 'channel': per-channel Δ test (abstract reading; default).
+    # 'token'  : mean-Δ over the RoPE channel group gates the whole token.
+    granularity: str = "channel"
+    # Reuse window size along each axis (paper Fig. 11: 2 is the sweet spot).
+    window: int = 2
+    # Eq. 4 adaptive threshold schedule. Steps < i_min and the final step
+    # run dense; linear ramp theta_min -> theta_max on [i_min, i_max];
+    # plateau at theta_max afterwards.
+    theta_min: float = 0.2
+    theta_max: float = 0.5
+    i_min: int = 10
+    i_max: int = 20
+    # Fixed threshold mode (paper Tbl. 3 'Fixed' ablation).
+    fixed_threshold: Optional[float] = None
+    # Per-axis thresholds; None means the shared schedule value is used
+    # for every axis (paper: "setting θt, θx, θy with the same threshold
+    # is more efficient and effective").
+    theta_t: Optional[float] = None
+    theta_x: Optional[float] = None
+    theta_y: Optional[float] = None
+    # RoPE channel-group split (temporal, x, y) as fractions of head_dim.
+    # HunyuanVideo: 16/56/56 of 128.
+    channel_groups: Tuple[float, float, float] = (0.125, 0.4375, 0.4375)
+    # Apply reuse to Q, K or both (paper: both).
+    snap_q: bool = True
+    snap_k: bool = True
+    # Combine with SVG-style block masking (paper TIMERIPPLE+SVG variant).
+    svg_mask: bool = False
+    svg_keep_ratio: float = 0.3
+    # Structured TPU execution path: collapse fully-reused K pairs and
+    # skip fully-reused Q rows (DESIGN.md §4). 'reference' computes the
+    # snapped attention densely (paper-faithful accounting only).
+    execution: str = "reference"  # 'reference' | 'collapse'
+    # Experimental 1-D reuse on LM sequence windows. Off by default and
+    # not part of the reproduction claims.
+    enable_1d: bool = False
+
+    def active(self) -> bool:
+        return self.enabled
+
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 2
+    expert_ffw_dim: int = 0
+    # Token-capacity factor for fixed-shape dispatch at scale.
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer LM (dense or MoE)."""
+
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # Sliding-window attention: window size for local layers, and the
+    # local:global interleave pattern (gemma3: 5 local then 1 global).
+    sliding_window: int = 0
+    local_global_pattern: int = 0  # N -> every (N+1)th layer is global
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+
+@dataclass(frozen=True)
+class DiTConfig:
+    """Image diffusion transformer (DiT, arXiv:2212.09748)."""
+
+    img_res: int
+    patch: int
+    num_layers: int
+    d_model: int
+    num_heads: int
+    in_channels: int = 4  # VAE latent channels
+    vae_factor: int = 8
+    num_classes: int = 1000
+    mlp_ratio: float = 4.0
+    learn_sigma: bool = True
+
+    def latent_res(self, img_res: Optional[int] = None) -> int:
+        return (img_res or self.img_res) // self.vae_factor
+
+    def num_tokens(self, img_res: Optional[int] = None) -> int:
+        side = self.latent_res(img_res) // self.patch
+        return side * side
+
+
+@dataclass(frozen=True)
+class MMDiTConfig:
+    """Flux-style MMDiT: double-stream joint blocks + single-stream blocks."""
+
+    img_res: int
+    latent_res: int
+    n_double_blocks: int
+    n_single_blocks: int
+    d_model: int
+    num_heads: int
+    in_channels: int = 16
+    patch: int = 2
+    txt_tokens: int = 512
+    txt_dim: int = 4096
+    mlp_ratio: float = 4.0
+    axes_dim: Tuple[int, ...] = (16, 56, 56)  # RoPE split (t/ids, x, y)
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    """SD1.5-style latent UNet (arXiv:2112.10752)."""
+
+    img_res: int
+    latent_res: int
+    ch: int
+    ch_mult: Tuple[int, ...]
+    n_res_blocks: int
+    attn_res: Tuple[int, ...]  # downsample factors at which attention runs
+    ctx_dim: int
+    in_channels: int = 4
+    num_heads: int = 8
+    ctx_tokens: int = 77
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    img_res: int
+    patch: int
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    num_classes: int = 1000
+    in_channels: int = 3
+    pool: str = "cls"  # 'cls' | 'gap'
+
+
+@dataclass(frozen=True)
+class EffNetConfig:
+    img_res: int
+    width_mult: float
+    depth_mult: float
+    num_classes: int = 1000
+    dropout: float = 0.5
+    in_channels: int = 3
+
+
+@dataclass(frozen=True)
+class VDiTConfig:
+    """The paper's native setting: a video DiT with (t, x, y) token grid
+    and factorized RoPE channel groups."""
+
+    frames: int
+    img_res: int
+    patch: int
+    t_patch: int
+    num_layers: int
+    d_model: int
+    num_heads: int
+    in_channels: int = 16
+    vae_factor: int = 8
+    t_vae_factor: int = 4
+    mlp_ratio: float = 4.0
+    txt_tokens: int = 256
+    txt_dim: int = 4096
+    # RoPE channel split (t, x, y) in head-dim units; Hunyuan: 16/56/56.
+    axes_dim: Tuple[int, ...] = (16, 56, 56)
+
+    def grid(self, frames=None, img_res=None) -> Tuple[int, int, int]:
+        t = (frames or self.frames) // self.t_vae_factor // self.t_patch
+        s = (img_res or self.img_res) // self.vae_factor // self.patch
+        return (max(t, 1), s, s)
+
+
+# ---------------------------------------------------------------------------
+# Workload shapes & top-level arch config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One workload cell: (architecture x input shape)."""
+
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode' | 'generate' | 'classify' | 'serve'
+    # LM shapes
+    seq_len: int = 0
+    global_batch: int = 0
+    # diffusion shapes
+    img_res: int = 0
+    batch: int = 0
+    steps: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    schedule: str = "cosine"  # 'cosine' | 'linear' | 'constant'
+    grad_accum: int = 1
+    ema_decay: float = 0.0  # 0 disables EMA
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # 'full' rematerializes everything; 'dots' saves matmul outputs
+    # (fewer recomputed FLOPs, more live memory).
+    remat_policy: str = "full"
+    # Megatron-style sequence parallelism: residual-stream activations
+    # shard their token dim over 'model'; XLA turns the TP all-reduces
+    # into reduce-scatter/all-gather pairs and norms run on 1/16 tokens.
+    seq_parallel: bool = False
+    # Cross-pod int8 gradient compression with error feedback.
+    grad_compression: bool = False
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str = "/tmp/repro_ckpt"
+    interval_steps: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # 'lm' | 'dit' | 'mmdit' | 'unet' | 'vit' | 'effnet' | 'vdit'
+    model: Any
+    shapes: Tuple[ShapeSpec, ...]
+    ripple: RippleConfig = field(default_factory=RippleConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    checkpoint: CheckpointConfig = field(default_factory=CheckpointConfig)
+    source: str = ""  # provenance tag from the assignment brief
+    # decode-time sharding variant (§Perf): replicate q-heads so the KV
+    # cache's sequence dim owns the model axis without resharding.
+    decode_replicate_heads: bool = False
+    # decode-time weights: plain TP (replicated over data) instead of
+    # FSDP — kills the per-step weight all-gather when batch is small.
+    decode_no_fsdp: bool = False
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.name}: unknown shape {name!r}; have "
+                       f"{[s.name for s in self.shapes]}")
+
+
+# ---------------------------------------------------------------------------
+# CLI overrides
+# ---------------------------------------------------------------------------
+
+
+def _coerce(value: str, target: Any) -> Any:
+    if isinstance(target, bool):
+        return value.lower() in ("1", "true", "yes", "on")
+    if isinstance(target, int):
+        return int(value)
+    if isinstance(target, float):
+        return float(value)
+    if isinstance(target, tuple):
+        items = [v for v in value.split(",") if v]
+        if target and isinstance(target[0], (int, float)):
+            cast = type(target[0])
+            return tuple(cast(v) for v in items)
+        return tuple(items)
+    return value
+
+
+def apply_overrides(cfg, overrides):
+    """Apply ``a.b.c=value`` CLI override strings to a nested dataclass."""
+    for item in overrides:
+        key, _, raw = item.partition("=")
+        parts = key.split(".")
+        cfg = _apply_one(cfg, parts, raw)
+    return cfg
+
+
+def _apply_one(cfg, parts, raw):
+    if len(parts) == 1:
+        current = getattr(cfg, parts[0])
+        return replace(cfg, **{parts[0]: _coerce(raw, current)})
+    child = getattr(cfg, parts[0])
+    if not dataclasses.is_dataclass(child):
+        raise TypeError(f"cannot descend into non-dataclass field {parts[0]}")
+    return replace(cfg, **{parts[0]: _apply_one(child, parts[1:], raw)})

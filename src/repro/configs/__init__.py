@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+vDiT).  ``get_config(name)`` returns the full production ArchConfig;
+``get_smoke_config(name)`` returns the reduced same-family config used by
+the CPU smoke tests (the full configs are exercised only via the
+dry-run's ShapeDtypeStructs)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config.base import ArchConfig
+
+_MODULES = {
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "dit-xl2": "repro.configs.dit_xl2",
+    "dit-b2": "repro.configs.dit_b2",
+    "flux-dev": "repro.configs.flux_dev",
+    "unet-sd15": "repro.configs.unet_sd15",
+    "vit-l16": "repro.configs.vit_l16",
+    "efficientnet-b7": "repro.configs.efficientnet_b7",
+    "vdit-paper": "repro.configs.vdit_paper",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "vdit-paper"]
+ALL_ARCHS: List[str] = list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ALL_ARCHS}")
+    return importlib.import_module(_MODULES[name]).make_config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ALL_ARCHS}")
+    return importlib.import_module(_MODULES[name]).make_smoke_config()

@@ -1,0 +1,26 @@
+"""dit-xl2 [diffusion] — img_res=256 patch=2 n_layers=28 d_model=1152
+n_heads=16. [arXiv:2212.09748; paper]
+
+TimeRipple: 2-D mode (x/y axes; image DiT has no temporal axis)."""
+
+from repro.config.base import TrainConfig, ArchConfig, DiTConfig, RippleConfig
+from repro.configs.lm_shapes import DIFFUSION_SHAPES
+
+
+def make_config() -> ArchConfig:
+    model = DiTConfig(img_res=256, patch=2, num_layers=28, d_model=1152,
+                      num_heads=16)
+    ripple = RippleConfig(enabled=True, axes=("x", "y"),
+                          theta_min=0.2, theta_max=0.5, i_min=10, i_max=20)
+    return ArchConfig(name="dit-xl2", family="dit", model=model,
+                      shapes=DIFFUSION_SHAPES, ripple=ripple,
+                      train=TrainConfig(grad_accum=8),
+                      source="arXiv:2212.09748; paper")
+
+
+def make_smoke_config() -> ArchConfig:
+    model = DiTConfig(img_res=32, patch=2, num_layers=2, d_model=64,
+                      num_heads=4)
+    cfg = make_config()
+    return ArchConfig(name="dit-xl2-smoke", family="dit", model=model,
+                      shapes=cfg.shapes, ripple=cfg.ripple)

@@ -1,0 +1,31 @@
+"""The four LM-family workload shapes shared by all assigned LM archs."""
+
+from repro.config.base import ShapeSpec
+
+LM_SHAPES = (
+    ShapeSpec(name="train_4k", kind="train", seq_len=4096, global_batch=256),
+    ShapeSpec(name="prefill_32k", kind="prefill", seq_len=32768,
+              global_batch=32),
+    ShapeSpec(name="decode_32k", kind="decode", seq_len=32768,
+              global_batch=128),
+    ShapeSpec(name="long_500k", kind="decode", seq_len=524288,
+              global_batch=1),
+)
+
+DIFFUSION_SHAPES = (
+    ShapeSpec(name="train_256", kind="train", img_res=256, batch=256,
+              steps=1000),
+    ShapeSpec(name="gen_1024", kind="generate", img_res=1024, batch=4,
+              steps=50),
+    ShapeSpec(name="gen_fast", kind="generate", img_res=512, batch=16,
+              steps=4),
+    ShapeSpec(name="train_1024", kind="train", img_res=1024, batch=32,
+              steps=1000),
+)
+
+VISION_SHAPES = (
+    ShapeSpec(name="cls_224", kind="train", img_res=224, batch=256),
+    ShapeSpec(name="cls_384", kind="train", img_res=384, batch=64),
+    ShapeSpec(name="serve_b1", kind="classify", img_res=224, batch=1),
+    ShapeSpec(name="serve_b128", kind="classify", img_res=224, batch=128),
+)

@@ -1,0 +1,39 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60 routed top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+
+Routed experts padded 60 -> 64 for even expert-parallel sharding over the
+16-way model axis (router never selects the 4 padding experts — their
+router logits exist but training drives them to the same competition as
+real ones; at dry-run scale only shapes matter).
+
+TimeRipple: inapplicable (1-D text tokens; DESIGN.md §6)."""
+
+from repro.config.base import (ArchConfig, LMConfig, MoEConfig,
+                               RippleConfig, TrainConfig)
+from repro.configs.lm_shapes import LM_SHAPES
+
+
+def make_config() -> ArchConfig:
+    model = LMConfig(
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, vocab_size=151936, head_dim=128,
+        moe=MoEConfig(num_experts=64, num_shared_experts=4, top_k=4,
+                      expert_ffw_dim=1408, capacity_factor=1.25),
+    )
+    return ArchConfig(name="qwen2-moe-a2.7b", family="lm", model=model,
+                      shapes=LM_SHAPES, ripple=RippleConfig(enabled=False),
+                      train=TrainConfig(grad_accum=8),
+                      source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf")
+
+
+def make_smoke_config() -> ArchConfig:
+    model = LMConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=64,
+        vocab_size=256, head_dim=16,
+        moe=MoEConfig(num_experts=8, num_shared_experts=2, top_k=4,
+                      expert_ffw_dim=64, capacity_factor=2.0),
+    )
+    cfg = make_config()
+    return ArchConfig(name="qwen2-moe-smoke", family="lm", model=model,
+                      shapes=cfg.shapes, ripple=cfg.ripple)

@@ -1,0 +1,20 @@
+# TimeRipple — the paper's primary contribution, implemented as a
+# composable JAX module. See DESIGN.md §1-2 for the semantics and
+# the exact snapped-operand identity the implementation is built on.
+from repro.core.reuse import (
+    window_delta,
+    compute_reuse,
+    snap_tokens,
+    ReuseResult,
+)
+from repro.core.schedule import threshold_for_step, threshold_schedule
+from repro.core.savings import (
+    partial_score_savings,
+    collapse_savings,
+    theoretical_speedup,
+    attention_flops,
+)
+from repro.core.collapse import collapsed_attention, pair_flags
+from repro.core.ripple_attention import ripple_attention, RippleStats
+from repro.core.calibrate import calibrate_threshold, fit_step_sensitivity
+from repro.core.svg_mask import svg_block_mask

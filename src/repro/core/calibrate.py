@@ -1,0 +1,111 @@
+"""Threshold calibration + the analytical step-sensitivity model.
+
+The paper's knob is a *savings ratio* (TIMERIPPLE_75% / _85%): thresholds
+are chosen so reuse skips a target fraction of partial attention scores.
+``calibrate_threshold`` bisects the shared θ on sample Q/K activations to
+hit that target — this is how the Tbl. 1 hyper-parameters were found.
+
+``fit_step_sensitivity`` reproduces the Fig. 9 analytical model: the MSE a
+fixed θ induces decays with the denoising step; fitting a line (in log
+space) over [i_min, i_max] and inverting MSE(θ, i) = const yields the
+equal-impact linear ramp of Eq. 4.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import RippleConfig
+from repro.core import reuse as reuse_lib
+from repro.core import savings as savings_lib
+
+
+def savings_at_threshold(q, k, grid, cfg: RippleConfig, theta: float) -> float:
+    thetas = {a: jnp.asarray(theta, jnp.float32) for a in ("t", "x", "y")}
+    rq = reuse_lib.compute_reuse(q, grid, thetas, axes=cfg.axes,
+                                 window=cfg.window, granularity=cfg.granularity,
+                                 channel_groups=cfg.channel_groups)
+    rk = reuse_lib.compute_reuse(k, grid, thetas, axes=cfg.axes,
+                                 window=cfg.window, granularity=cfg.granularity,
+                                 channel_groups=cfg.channel_groups)
+    return float(savings_lib.partial_score_savings(rq.mask, rk.mask))
+
+
+def calibrate_threshold(
+    q: jax.Array,
+    k: jax.Array,
+    grid: Tuple[int, int, int],
+    cfg: RippleConfig,
+    target_savings: float,
+    lo: float = 0.0,
+    hi: float = 4.0,
+    iters: int = 24,
+    tol: float = 5e-3,
+) -> float:
+    """Bisect the shared θ to reach ``target_savings`` on sample Q/K."""
+    fn = jax.jit(
+        lambda theta: _savings_jit(q, k, grid, cfg, theta)
+    )
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        s = float(fn(jnp.asarray(mid)))
+        if abs(s - target_savings) < tol:
+            return mid
+        if s < target_savings:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def _savings_jit(q, k, grid, cfg, theta):
+    thetas = {a: theta for a in ("t", "x", "y")}
+    rq = reuse_lib.compute_reuse(q, grid, thetas, axes=cfg.axes,
+                                 window=cfg.window, granularity=cfg.granularity,
+                                 channel_groups=cfg.channel_groups)
+    rk = reuse_lib.compute_reuse(k, grid, thetas, axes=cfg.axes,
+                                 window=cfg.window, granularity=cfg.granularity,
+                                 channel_groups=cfg.channel_groups)
+    return savings_lib.partial_score_savings(rq.mask, rk.mask)
+
+
+def fit_step_sensitivity(steps: np.ndarray, mses: np.ndarray) -> Dict[str, float]:
+    """Linear fit of log-MSE vs step (the straight line of Fig. 9)."""
+    steps = np.asarray(steps, np.float64)
+    logm = np.log(np.maximum(np.asarray(mses, np.float64), 1e-30))
+    A = np.stack([steps, np.ones_like(steps)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, logm, rcond=None)
+    slope, intercept = float(coef[0]), float(coef[1])
+    return {"slope": slope, "intercept": intercept}
+
+
+def equal_mse_schedule(
+    fit: Dict[str, float],
+    mse_of_theta: Callable[[float, int], float],
+    i_min: int,
+    i_max: int,
+    theta_at_imin: float,
+    theta_hi: float = 4.0,
+) -> np.ndarray:
+    """Per-step θ inducing constant MSE across [i_min, i_max].
+
+    Target MSE = the MSE θ_at_imin induces at i_min (per the fitted
+    model); later steps tolerate larger θ. Bisection per step against the
+    measured ``mse_of_theta(θ, step)``.
+    """
+    target = mse_of_theta(theta_at_imin, i_min)
+    thetas = []
+    for i in range(i_min, i_max + 1):
+        lo, hi = 0.0, theta_hi
+        for _ in range(20):
+            mid = 0.5 * (lo + hi)
+            if mse_of_theta(mid, i) < target:
+                lo = mid
+            else:
+                hi = mid
+        thetas.append(0.5 * (lo + hi))
+    return np.asarray(thetas)

@@ -1,0 +1,150 @@
+"""Exact pair-collapse execution of snapped attention (DESIGN.md §2, §4).
+
+If a window of K tokens is snapped to identical values, its pre-softmax
+attention columns are identical, so softmax can fold them into one
+representative column with integer multiplicity in the denominator and a
+window-summed V row in the numerator::
+
+    softmax([s, s]) · [v0; v1]  ==  (exp(s)·(v0+v1)) / (2·exp(s) + …)
+
+Symmetrically, a window of identically-snapped Q rows needs one computed
+output row (the followers copy it).  Both identities are *exact*, which
+is what lets the TPU kernel skip real MXU work at block granularity while
+``allclose``-matching the dense snapped oracle.
+
+Collapse requires window partners adjacent in token order; use
+:func:`pair_major_order` to permute a (t, y, x) grid so partners along a
+chosen axis become adjacent.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pair_flags(snapped: jax.Array, window: int = 2) -> jax.Array:
+    """True for each window whose members are value-identical.
+
+    snapped: (..., N, d); returns (..., N // window) bool.  Uses value
+    equality so it is correct regardless of which axis produced the snap.
+    """
+    *lead, N, d = snapped.shape
+    n = N // window
+    w = snapped[..., : n * window, :].reshape(*lead, n, window, d)
+    rep = w[..., :1, :]
+    return jnp.all(w == rep, axis=(-1, -2))
+
+
+def pair_major_order(grid: Tuple[int, int, int], axis: str,
+                     window: int = 2) -> np.ndarray:
+    """Permutation making ``window`` partners along ``axis`` adjacent.
+
+    Token order is (t, y, x) row-major. Returns ``perm`` with
+    ``x_pair_major = x[..., perm, :]``; invert with ``argsort(perm)``.
+    """
+    T, H, W = grid
+    idx = np.arange(T * H * W).reshape(T, H, W)
+    if axis == "t":
+        n = T // window
+        head = idx[: n * window].reshape(n, window, H, W)
+        head = np.moveaxis(head, 1, -1)  # (n, H, W, window)
+        perm = np.concatenate([head.reshape(-1), idx[n * window :].reshape(-1)])
+    elif axis == "y":
+        n = H // window
+        head = idx[:, : n * window].reshape(T, n, window, W)
+        head = np.moveaxis(head, 2, -1)
+        perm = np.concatenate([head.reshape(-1), idx[:, n * window :].reshape(-1)])
+    elif axis == "x":
+        perm = idx.reshape(-1)  # x partners are already adjacent
+    else:
+        raise ValueError(axis)
+    return perm
+
+
+def collapsed_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    k_collapse: Optional[jax.Array] = None,
+    q_collapse: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    bias: Optional[jax.Array] = None,
+    window: int = 2,
+) -> jax.Array:
+    """Weighted-softmax attention with window collapse (pure-jnp reference).
+
+    q: (..., Nq, d), k: (..., Nk, d), v: (..., Nk, dv).  ``k_collapse`` /
+    ``q_collapse`` are per-window bools (from :func:`pair_flags`); None
+    recomputes them from value equality.  ``bias`` is an additive logit
+    bias (..., Nq, Nk); collapse assumes bias is window-constant over
+    collapsed K windows (true for the padding masks we use).
+
+    This function verifies the *math*; the FLOP savings are realized by
+    the Pallas kernel in ``repro/kernels/ripple`` which block-skips.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    if k_collapse is None:
+        k_collapse = pair_flags(k, window)
+    if q_collapse is None:
+        q_collapse = pair_flags(q, window)
+
+    *lead, Nq, d = q.shape
+    Nk = k.shape[-2]
+    nk = Nk // window
+    dv = v.shape[-1]
+
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    if bias is not None:
+        logits = logits + bias
+    logits = logits.astype(jnp.float32)
+
+    # --- K-side collapse: fold member columns into the representative. ---
+    head = logits[..., : nk * window].reshape(*lead, Nq, nk, window)
+    rep_logit = head[..., 0]
+    m_head = jnp.max(head, axis=-1)
+    m_tail = (
+        jnp.max(logits[..., nk * window :], axis=-1, keepdims=True)
+        if Nk > nk * window
+        else jnp.full((*lead, Nq, 1), -jnp.inf)
+    )
+    m = jnp.maximum(jnp.max(m_head, axis=-1, keepdims=True), m_tail)
+
+    v_head = v[..., : nk * window, :].reshape(*lead, nk, window, dv)
+    v_sum = jnp.sum(v_head, axis=-2)
+    v_rep_path = v_sum  # collapsed: exp(rep) * Σ v
+    exp_head = jnp.exp(head - m[..., None])
+    kc = k_collapse[..., None, :]  # (..., 1, nk) broadcast over q
+    # collapsed window: weight = window·exp(rep); numerator exp(rep)·Σv
+    z_win = jnp.where(kc, window * jnp.exp(rep_logit - m), jnp.sum(exp_head, axis=-1))
+    num_win = jnp.where(
+        kc[..., None],
+        jnp.exp(rep_logit - m)[..., None] * v_rep_path[..., None, :, :],
+        jnp.einsum("...qkw,...kwv->...qkv", exp_head, v_head),
+    )
+    z = jnp.sum(z_win, axis=-1)
+    num = jnp.sum(num_win, axis=-2)
+    if Nk > nk * window:
+        tail_logits = logits[..., nk * window :]
+        tail_exp = jnp.exp(tail_logits - m)
+        z = z + jnp.sum(tail_exp, axis=-1)
+        num = num + jnp.einsum("...qk,...kv->...qv", tail_exp, v[..., nk * window :, :])
+    out = (num / z[..., None]).astype(v.dtype)
+
+    # --- Q-side collapse: followers copy the representative's output. ---
+    nq = Nq // window
+    if nq > 0:
+        head_out = out[..., : nq * window, :].reshape(*lead, nq, window, dv)
+        rep_out = head_out[..., :1, :]
+        qc = q_collapse[..., :, None, None]
+        head_out = jnp.where(qc, jnp.broadcast_to(rep_out, head_out.shape), head_out)
+        out = jnp.concatenate(
+            [head_out.reshape(*lead, nq * window, dv), out[..., nq * window :, :]],
+            axis=-2,
+        )
+    return out

@@ -1,0 +1,243 @@
+"""TimeRipple reuse: windowed Δ similarity checks + operand snapping.
+
+Paper §3.3 steps ①-②.  For both Q and K, tokens on the (T, H, W) latent
+grid undergo a similarity check along each of the temporal / x / y axes.
+The similarity of a window ``a`` of ``K`` tokens at one channel is the
+standard error (Eq. 3)::
+
+    Δ(a) = sqrt( Σ_i (a_i − ā)² / K )
+
+Windows partition each axis (window size 2 ⇒ "every two adjacent
+frames").  Where Δ is below the axis threshold, the non-representative
+window elements are *snapped* to the representative (the first element —
+paper Fig. 5 reuses the first frame/row/token of each consecutive pair).
+Because attention logits are bilinear, snapping the operand is exactly
+equivalent to reusing the partial attention scores (DESIGN.md §2).
+
+Token order convention: row-major ``(t, y, x)`` — ``index = (t*H + y)*W + x``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+AXES = ("t", "x", "y")
+# Grid dims are (..., T, H, W, d): axis name -> which dim the window runs on
+# (negative, counted from the channel dim at -1).
+_AXIS_DIM = {"t": -4, "y": -3, "x": -2}
+
+
+@dataclasses.dataclass
+class ReuseResult:
+    """Output of :func:`compute_reuse`.
+
+    snapped:  x with reusable entries overwritten by their representative.
+    mask:     bool, same shape as x; True where the value was snapped.
+    axis_masks: per-axis bool masks (before priority resolution).
+    """
+
+    snapped: jax.Array
+    mask: jax.Array
+    axis_masks: Dict[str, jax.Array]
+
+
+def window_delta(x: jax.Array, dim: int, window: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-window, per-channel Δ (Eq. 3) and the window representative.
+
+    ``x`` has the window axis at ``dim`` (length L); the trailing axis is
+    channels. Returns ``(delta, rep)`` with the window axis reduced to
+    ``L // window`` groups. Remainder elements (L % window) are excluded
+    — callers never snap them.
+    """
+    dim = dim % x.ndim
+    L = x.shape[dim]
+    n = L // window
+    head = jax.lax.slice_in_dim(x, 0, n * window, axis=dim)
+    new_shape = head.shape[:dim] + (n, window) + head.shape[dim + 1 :]
+    grouped = head.reshape(new_shape)
+    mean = grouped.mean(axis=dim + 1, keepdims=True)
+    # Population std over the window — for window 2 this is |a0 − a1| / 2.
+    delta = jnp.sqrt(jnp.mean(jnp.square(grouped - mean), axis=dim + 1))
+    rep = jax.lax.index_in_dim(grouped, 0, axis=dim + 1, keepdims=False)
+    return delta, rep
+
+
+def _expand_window(mask_or_rep: jax.Array, dim: int, window: int, length: int,
+                   first_is_rep: bool) -> jax.Array:
+    """Broadcast per-window values back to per-token positions.
+
+    For masks, the representative slot (first of each window) is forced
+    False when ``first_is_rep`` — the representative itself is always
+    computed, only the followers reuse it.
+    """
+    dim = dim % (mask_or_rep.ndim)  # same rank as x
+    n = mask_or_rep.shape[dim]
+    expanded = jnp.repeat(mask_or_rep, window, axis=dim)
+    if first_is_rep:
+        # zero out every window-first position
+        idx = jnp.arange(n * window) % window == 0
+        shape = [1] * expanded.ndim
+        shape[dim] = n * window
+        expanded = jnp.logical_and(expanded, ~idx.reshape(shape))
+    pad = length - n * window
+    if pad > 0:
+        pad_shape = list(expanded.shape)
+        pad_shape[dim] = pad
+        filler = (
+            jnp.zeros(pad_shape, dtype=expanded.dtype)
+            if expanded.dtype == jnp.bool_
+            else jnp.zeros(pad_shape, dtype=expanded.dtype)
+        )
+        expanded = jnp.concatenate([expanded, filler], axis=dim)
+    return expanded
+
+
+def _group_bounds(head_dim: int, channel_groups: Sequence[float]) -> Dict[str, Tuple[int, int]]:
+    """RoPE channel-group slices (t, x, y) from fractional split."""
+    ct = int(round(channel_groups[0] * head_dim))
+    cx = int(round(channel_groups[1] * head_dim))
+    ct = max(min(ct, head_dim), 0)
+    cx = max(min(cx, head_dim - ct), 0)
+    return {"t": (0, ct), "x": (ct, ct + cx), "y": (ct + cx, head_dim)}
+
+
+def axis_reuse_mask(
+    x_grid: jax.Array,
+    axis: str,
+    theta: jax.Array,
+    window: int,
+    granularity: str = "channel",
+    channel_groups: Sequence[float] = (0.125, 0.4375, 0.4375),
+) -> Tuple[jax.Array, jax.Array]:
+    """Reuse mask and representative values along one grid axis.
+
+    x_grid: (..., T, H, W, d).  Returns (mask, rep_values) both shaped
+    like ``x_grid``; ``rep_values`` holds the representative's value at
+    every position (identity at non-snappable positions).
+    """
+    dim = _AXIS_DIM[axis] % x_grid.ndim
+    length = x_grid.shape[dim]
+    if length < window:
+        mask = jnp.zeros(x_grid.shape, dtype=jnp.bool_)
+        return mask, x_grid
+    delta, rep = window_delta(x_grid, dim, window)
+    theta = jnp.asarray(theta, dtype=x_grid.dtype)
+    if granularity == "channel":
+        ok = delta < theta  # (..., n, H, W, d)
+    elif granularity == "token":
+        ok = jnp.mean(delta, axis=-1, keepdims=True) < theta
+        ok = jnp.broadcast_to(ok, delta.shape)
+    elif granularity == "group":
+        # mean Δ within each RoPE channel group gates that group's channels.
+        bounds = _group_bounds(x_grid.shape[-1], channel_groups)
+        parts = []
+        for name in AXES:
+            lo, hi = bounds[name]
+            if hi <= lo:
+                continue
+            seg = delta[..., lo:hi]
+            seg_ok = jnp.mean(seg, axis=-1, keepdims=True) < theta
+            parts.append(jnp.broadcast_to(seg_ok, seg.shape))
+        ok = jnp.concatenate(parts, axis=-1)
+    else:
+        raise ValueError(f"unknown granularity {granularity!r}")
+    mask = _expand_window(ok, dim, window, length, first_is_rep=True)
+    rep_full = _expand_window(rep, dim, window, length, first_is_rep=False)
+    # Remainder positions: rep_full was zero-padded; fall back to identity.
+    n = (length // window) * window
+    if n < length:
+        idx = jnp.arange(length) < n
+        shape = [1] * x_grid.ndim
+        shape[dim] = length
+        rep_full = jnp.where(idx.reshape(shape), rep_full, x_grid)
+    return mask, rep_full
+
+
+def compute_reuse(
+    x: jax.Array,
+    grid: Tuple[int, int, int],
+    thetas: Dict[str, jax.Array],
+    axes: Sequence[str] = AXES,
+    window: int = 2,
+    granularity: str = "channel",
+    channel_groups: Sequence[float] = (0.125, 0.4375, 0.4375),
+    protect_axis: Optional[str] = None,
+) -> ReuseResult:
+    """Full TimeRipple reuse for one operand (Q or K).
+
+    x: (..., N, d) with N == T*H*W tokens in (t, y, x) row-major order.
+    thetas: per-axis thresholds {"t": θt, "x": θx, "y": θy} (jax scalars ok).
+    Aggregation is a logical OR across axes (paper step ②); where several
+    axes pass, the first axis in ``axes`` wins the copy source
+    (they are interchangeable — all passed the similarity test).
+
+    ``protect_axis`` is the collapse-aware scheduling refinement
+    (beyond-paper, DESIGN.md §4): window *representatives* along that
+    axis are never snapped by the *other* axes.  Without it, a high
+    threshold lets x/y snap the t-representatives, the value-identity of
+    t-pairs breaks, and the structured kernel loses its block skips —
+    protecting the representatives costs only the cross-axis reuse of
+    half the tokens but preserves the full pair-collapse structure.
+    """
+    T, H, W = grid
+    *lead, N, d = x.shape
+    if N != T * H * W:
+        raise ValueError(f"token count {N} != grid {grid}")
+    x_grid = x.reshape(*lead, T, H, W, d)
+
+    protected = None
+    if protect_axis is not None:
+        dim = _AXIS_DIM[protect_axis] % x_grid.ndim
+        length = x_grid.shape[dim]
+        is_rep = (jnp.arange(length) % window == 0) \
+            & (jnp.arange(length) < (length // window) * window)
+        shp = [1] * x_grid.ndim
+        shp[dim] = length
+        protected = jnp.broadcast_to(is_rep.reshape(shp), x_grid.shape)
+
+    snapped = x_grid
+    claimed = jnp.zeros(x_grid.shape, dtype=jnp.bool_)
+    axis_masks: Dict[str, jax.Array] = {}
+    for axis in axes:
+        mask, rep = axis_reuse_mask(
+            x_grid, axis, thetas[axis], window, granularity, channel_groups
+        )
+        if protected is not None and axis != protect_axis:
+            mask = jnp.logical_and(mask, ~protected)
+        axis_masks[axis] = mask
+        take = jnp.logical_and(mask, ~claimed)  # first-wins priority
+        snapped = jnp.where(take, rep, snapped)
+        claimed = jnp.logical_or(claimed, mask)
+
+    return ReuseResult(
+        snapped=snapped.reshape(*lead, N, d),
+        mask=claimed.reshape(*lead, N, d),
+        axis_masks={a: m.reshape(*lead, N, d) for a, m in axis_masks.items()},
+    )
+
+
+def snap_tokens(
+    x: jax.Array,
+    grid: Tuple[int, int, int],
+    thetas: Dict[str, jax.Array],
+    **kw,
+) -> jax.Array:
+    """Convenience: snapped operand only."""
+    return compute_reuse(x, grid, thetas, **kw).snapped
+
+
+def sequence_reuse_1d(x: jax.Array, theta: jax.Array, window: int = 2) -> ReuseResult:
+    """Experimental 1-D reuse on LM token sequences (DESIGN.md §6).
+
+    Treats the sequence as a (T, 1, 1) grid with only the temporal check.
+    Not part of the paper's claims; off by default everywhere.
+    """
+    *lead, N, d = x.shape
+    return compute_reuse(
+        x, (N, 1, 1), {"t": theta, "x": jnp.inf, "y": jnp.inf},
+        axes=("t",), window=window,
+    )

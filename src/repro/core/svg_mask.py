@@ -1,0 +1,68 @@
+"""SVG-style structured attention masking (Sparse VideoGen, Xi et al. '25).
+
+Implemented as the baseline the paper combines with (TIMERIPPLE+SVG row of
+Tbl. 2).  SVG classifies each head online as *spatial* (tokens attend
+within their own frame → frame-block-diagonal mask) or *temporal* (tokens
+attend to the same spatial location across frames → strided-diagonal
+mask) by measuring which mask retains more attention mass on a row
+sample, then skips masked blocks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spatial_mask(grid: Tuple[int, int, int]) -> np.ndarray:
+    """Frame-block-diagonal mask: attend within the same frame (+sink frame)."""
+    T, H, W = grid
+    f = np.repeat(np.arange(T), H * W)
+    mask = f[:, None] == f[None, :]
+    mask |= f[None, :] == 0  # first-frame attention sink (per SVG)
+    return mask
+
+
+def temporal_mask(grid: Tuple[int, int, int], halo: int = 1) -> np.ndarray:
+    """Strided-diagonal mask: same spatial site across frames (± halo)."""
+    T, H, W = grid
+    s = np.tile(np.arange(H * W), T)
+    diff = np.abs(s[:, None] - s[None, :])
+    mask = diff <= halo
+    return mask
+
+
+def mask_density(mask: np.ndarray) -> float:
+    return float(mask.mean())
+
+
+def classify_heads(q: jax.Array, k: jax.Array, grid, sample_rows: int = 64,
+                   scale=None) -> jax.Array:
+    """Per-head bool: True = spatial head, False = temporal head.
+
+    Measures retained softmax mass of each candidate mask on a row
+    subsample (SVG's online profiling step).
+    """
+    *lead, N, d = q.shape
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    rows = np.linspace(0, N - 1, min(sample_rows, N)).astype(np.int32)
+    qs = q[..., jnp.asarray(rows), :]
+    logits = jnp.einsum("...qd,...kd->...qk", qs, k) * scale
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    sp = jnp.asarray(spatial_mask(grid)[rows])
+    tm = jnp.asarray(temporal_mask(grid)[rows])
+    mass_sp = jnp.sum(jnp.where(sp, probs, 0.0), axis=(-1, -2))
+    mass_tm = jnp.sum(jnp.where(tm, probs, 0.0), axis=(-1, -2))
+    return mass_sp >= mass_tm
+
+
+def svg_block_mask(q: jax.Array, k: jax.Array, grid) -> jax.Array:
+    """Boolean keep-mask (..., N, N) per head, SVG spatial/temporal choice."""
+    is_spatial = classify_heads(q, k, grid)
+    sp = jnp.asarray(spatial_mask(grid))
+    tm = jnp.asarray(temporal_mask(grid))
+    return jnp.where(is_spatial[..., None, None], sp, tm)

@@ -1,0 +1,120 @@
+"""Deterministic, shard-aware synthetic data pipelines.
+
+No datasets ship in this offline container, so every family gets a
+seeded generator with realistic statistics:
+
+* token streams     — Zipf-distributed ids with short-range repetition
+                      structure so LMs have something learnable;
+* latent videos     — Gauss-Markov fields with controllable temporal and
+                      spatial correlation (matches the redundancy the
+                      paper exploits — the knobs set how much TimeRipple
+                      can reuse);
+* images            — band-limited Gaussian textures per class.
+
+Generators are pure functions of (seed, index), so any shard of any
+batch is reproducible from metadata alone — requirement for deterministic
+restart after failure (checkpoint stores the cursor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+
+def token_batch(spec: DataSpec, index: int, batch: int, seq_len: int,
+                vocab: int) -> dict:
+    """Zipf tokens with 8-token motif repetition (next-token learnable)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed), index), spec.shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf via exponential quantization
+    u = jax.random.uniform(k1, (batch, seq_len), minval=1e-6)
+    ids = jnp.clip((vocab ** u - 1).astype(jnp.int32), 0, vocab - 1)
+    # motif: every other 8-window repeats the previous one
+    motif = jnp.roll(ids, 8, axis=1)
+    gate = (jnp.arange(seq_len) // 8) % 2 == 1
+    ids = jnp.where(gate[None, :], motif, ids)
+    tokens = ids[:, :-1]
+    targets = ids[:, 1:]
+    pad = jnp.zeros((batch, 1), jnp.int32)
+    return {"tokens": jnp.concatenate([tokens, pad], 1),
+            "targets": jnp.concatenate([targets, pad], 1)}
+
+
+def correlated_video_latents(
+    key: jax.Array, batch: int, grid: Tuple[int, int, int], channels: int,
+    *, temporal_rho: float = 0.9, spatial_smooth: int = 2,
+) -> jax.Array:
+    """(B, T, H, W, C) Gauss-Markov latents: AR(1) across frames with
+    coefficient ``temporal_rho``; box-smoothed ``spatial_smooth`` times
+    spatially.  High rho/smooth => high spatio-temporal redundancy."""
+    T, H, W = grid
+    k0, k1 = jax.random.split(key)
+    base = jax.random.normal(k0, (batch, T, H, W, channels))
+
+    def smooth(x):
+        for _ in range(spatial_smooth):
+            x = (x + jnp.roll(x, 1, 2) + jnp.roll(x, -1, 2)
+                 + jnp.roll(x, 1, 3) + jnp.roll(x, -1, 3)) / 5.0
+        return x
+
+    base = smooth(base)
+
+    def ar(carry, z):
+        x = temporal_rho * carry + np.sqrt(1 - temporal_rho ** 2) * z
+        return x, x
+
+    first = base[:, 0]
+    _, frames = jax.lax.scan(ar, first, jnp.moveaxis(base, 1, 0))
+    out = jnp.moveaxis(frames, 0, 1)
+    return out / (jnp.std(out) + 1e-6)
+
+
+def latent_video_batch(spec: DataSpec, index: int, batch: int,
+                       grid: Tuple[int, int, int], channels: int,
+                       txt_tokens: int = 0, txt_dim: int = 0) -> dict:
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed + 7), index),
+        spec.shard)
+    k0, k1 = jax.random.split(key)
+    out = {"latents": correlated_video_latents(k0, batch, grid, channels)}
+    if txt_tokens:
+        out["txt"] = 0.05 * jax.random.normal(k1, (batch, txt_tokens, txt_dim))
+    return out
+
+
+def image_batch(spec: DataSpec, index: int, batch: int, res: int,
+                channels: int = 3, num_classes: int = 1000) -> dict:
+    """Class-conditional band-limited textures (classifiable)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed + 13), index),
+        spec.shard)
+    k0, k1, k2 = jax.random.split(key, 3)
+    labels = jax.random.randint(k0, (batch,), 0, num_classes)
+    freq = 1.0 + (labels % 8).astype(jnp.float32)
+    xx = jnp.linspace(0, 2 * np.pi, res)
+    pattern = jnp.sin(freq[:, None, None] * xx[None, :, None]
+                      + freq[:, None, None] * 0.5 * xx[None, None, :])
+    noise = 0.3 * jax.random.normal(k2, (batch, res, res, channels))
+    images = pattern[..., None] + noise
+    return {"images": images, "labels": labels}
+
+
+def batch_iterator(make_batch, spec: DataSpec, start_index: int = 0) -> Iterator:
+    """Infinite deterministic iterator with a resumable cursor."""
+    i = start_index
+    while True:
+        yield make_batch(spec, i)
+        i += 1

@@ -1,0 +1,61 @@
+"""Diffusion noise schedules: DDPM (linear/cosine betas) and rectified flow."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPMSchedule:
+    """Discrete-time DDPM. q(x_t | x_0) = N(sqrt(ā_t) x_0, (1-ā_t) I)."""
+
+    num_train_steps: int = 1000
+    beta_start: float = 1e-4
+    beta_end: float = 0.02
+    kind: str = "linear"  # 'linear' | 'cosine'
+
+    def betas(self) -> jax.Array:
+        if self.kind == "linear":
+            return jnp.linspace(self.beta_start, self.beta_end,
+                                self.num_train_steps)
+        t = jnp.arange(self.num_train_steps + 1) / self.num_train_steps
+        f = jnp.cos((t + 0.008) / 1.008 * jnp.pi / 2) ** 2
+        alpha_bar = f / f[0]
+        betas = 1 - alpha_bar[1:] / alpha_bar[:-1]
+        return jnp.clip(betas, 0, 0.999)
+
+    def alpha_bars(self) -> jax.Array:
+        return jnp.cumprod(1.0 - self.betas())
+
+    def add_noise(self, x0, noise, t):
+        """t: (B,) int in [0, num_train_steps)."""
+        ab = self.alpha_bars()[t]
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        return (jnp.sqrt(ab).reshape(shape) * x0
+                + jnp.sqrt(1 - ab).reshape(shape) * noise)
+
+
+@dataclasses.dataclass(frozen=True)
+class RectifiedFlowSchedule:
+    """Rectified flow / flow matching: x_t = (1-t) x0 + t·noise, target
+    velocity v = noise - x0 (Flux-style, t in (0, 1))."""
+
+    timestep_shift: float = 1.0  # resolution-dependent shift, 1 = none
+
+    def interpolate(self, x0, noise, t):
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        t = t.reshape(shape)
+        return (1.0 - t) * x0 + t * noise
+
+    def velocity_target(self, x0, noise):
+        return noise - x0
+
+    def sample_t(self, rng, batch):
+        t = jax.random.uniform(rng, (batch,))
+        s = self.timestep_shift
+        return s * t / (1 + (s - 1) * t)

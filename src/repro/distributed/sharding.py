@@ -1,0 +1,168 @@
+"""Logical-axis sharding: the single place where logical names meet the mesh.
+
+Models annotate parameters (``repro.models.params``) and activations with
+*logical* axis names; workloads pick a rule table mapping logical names to
+mesh axes.  The launcher composes these into concrete
+``NamedSharding``/``PartitionSpec`` trees for pjit.
+
+Rule tables are functions of the mesh because the production mesh comes
+in two shapes — single-pod ``(data=16, model=16)`` and multi-pod
+``(pod=2, data=16, model=16)`` — and the batch axis must absorb the
+"pod" dimension only when it exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# --- parameter rules ---------------------------------------------------------
+
+def param_rules(mesh: Optional[Mesh], fsdp: bool = True) -> Dict[str, Any]:
+    """Logical param axis -> mesh axes. FSDP shards the 'embed' dim of
+    weights over the batch axes (ZeRO-3 style); tensor dims over 'model'."""
+    bd = batch_axes(mesh)
+    return {
+        "embed": bd if fsdp else None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "layers": None,
+        None: None,
+    }
+
+
+def spec_from_axes(axes: Sequence[Optional[str]], rules: Dict[str, Any],
+                   shape: Optional[Tuple[int, ...]] = None,
+                   mesh: Optional[Mesh] = None) -> P:
+    """Map a logical-axis tuple to a PartitionSpec, dropping assignments
+    that do not divide the dimension (e.g. kv heads 8 on a model axis of
+    16 fall back to replicated)."""
+    entries = []
+    used = set()
+    for i, a in enumerate(axes):
+        target = rules.get(a, None)
+        if target is not None and mesh is not None and shape is not None:
+            if shape[i] % axis_size(mesh, target) != 0:
+                target = None
+        # one mesh axis may appear only once in a spec
+        flat = (target,) if isinstance(target, str) else tuple(target or ())
+        if any(t in used for t in flat):
+            target = None
+        else:
+            used.update(flat)
+        entries.append(target)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_sharding_tree(logical_tree, mesh: Mesh, rules: Dict[str, Any],
+                        abstract_tree=None):
+    """Tree of NamedShardings for a logical-axes tree (+shapes to validate
+    divisibility when ``abstract_tree`` given)."""
+    def is_axes(x):
+        return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+    if abstract_tree is None:
+        return jax.tree_util.tree_map(
+            lambda axes: NamedSharding(mesh, spec_from_axes(axes, rules)),
+            logical_tree, is_leaf=is_axes)
+    return jax.tree_util.tree_map(
+        lambda axes, ab: NamedSharding(
+            mesh, spec_from_axes(axes, rules, ab.shape, mesh)),
+        logical_tree, abstract_tree, is_leaf=is_axes)
+
+
+# --- activation rules / ShardCtx ---------------------------------------------
+
+
+def train_act_rules(mesh: Optional[Mesh],
+                    seq_parallel: bool = False) -> Dict[str, Any]:
+    bd = batch_axes(mesh)
+    return {
+        "batch": bd, "seq": "model" if seq_parallel else None,
+        "embed": None,
+        "heads": "model", "kv": None, "mlp": "model", "vocab": "model",
+        "expert": "model", "kv_seq": None, None: None,
+        # attention operands always need the full sequence per head:
+        "attn_seq": None,
+    }
+
+
+def decode_act_rules(mesh: Optional[Mesh], long_context: bool = False,
+                     replicate_heads: bool = False) -> Dict[str, Any]:
+    bd = batch_axes(mesh)
+    rules = train_act_rules(mesh)
+    # KV cache sequence shards over 'model' (flash-decode combine); for
+    # 512k single-request decode it spreads over every axis.
+    rules["kv_seq"] = (*bd, "model") if long_context else "model"
+    if long_context:
+        rules["batch"] = ()
+    if replicate_heads:
+        # decode attention FLOPs are tiny; replicating q-heads avoids the
+        # heads<->kv_seq resharding ping-pong on the model axis.
+        rules["heads"] = None
+    return rules
+
+
+def seqpar_act_rules(mesh: Optional[Mesh], batch: int) -> Dict[str, Any]:
+    """Inference sequence-parallel rules for small-batch diffusion/vision:
+    give the batch the largest prefix of (pod, data) that divides it and
+    hand leftover axes to the token dim."""
+    bd = list(batch_axes(mesh))
+    b_axes, s_axes = [], []
+    remaining = batch
+    for a in bd:
+        n = mesh.shape[a] if mesh else 1
+        if remaining % n == 0 and remaining >= n:
+            b_axes.append(a)
+            remaining //= n
+        else:
+            s_axes.append(a)
+    rules = train_act_rules(mesh)
+    rules["batch"] = tuple(b_axes)
+    rules["seq"] = tuple(s_axes)
+    # inference sequence parallelism shards attention rows too
+    rules["attn_seq"] = tuple(s_axes)
+    return rules
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Threaded through model code; applies activation constraints."""
+
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+
+    def c(self, x, axes: Sequence[Optional[str]]):
+        """Constrain activation ``x`` whose dims carry logical ``axes``."""
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = spec_from_axes(axes, self.rules, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NULL_CTX = ShardCtx()

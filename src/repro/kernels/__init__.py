@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   flash/      baseline tiled online-softmax attention
+#   ripple/     pair-collapse block-skipping attention (the paper's reuse,
+#               restructured for the MXU — DESIGN.md §4)
+#   reuse_mask/ fused Eq.3 Δ-check + snap
+#   adaln/      fused adaLN-zero modulation (DiT hot path)
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+# interpret=True on CPU), ref.py (pure-jnp oracle).

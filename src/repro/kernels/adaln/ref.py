@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused adaLN modulation kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adaln_modulate_ref(x, shift, scale, eps: float = 1e-6):
+    """x: (B, N, d); shift/scale: (B, d)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    norm = (x32 - mu) / jnp.sqrt(var + eps)
+    out = norm * (1.0 + scale[:, None, :].astype(jnp.float32)) \
+        + shift[:, None, :].astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  scale: float | None = None) -> jax.Array:
+    """q: (..., Nq, d), k: (..., Nk, d), v: (..., Nk, dv)."""
+    if scale is None:
+        scale = float(1.0 / (q.shape[-1] ** 0.5))
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kv->...qv", p.astype(v.dtype), v)

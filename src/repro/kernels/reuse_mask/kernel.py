@@ -1,0 +1,72 @@
+"""Fused Δ-check + snap Pallas kernel (paper Fig. 6 steps ①-②).
+
+Computes, for adjacent window-2 pairs of tokens (pair-major layout —
+callers permute other axes into adjacency with
+``core.collapse.pair_major_order``):
+
+    Δ_c   = |x[2j+1, c] − x[2j, c]| / 2          (Eq. 3 for K=2)
+    snap  = Δ_c < θ
+    out[2j+1, c] = snap ? x[2j, c] : x[2j+1, c]
+
+in one VMEM pass, emitting the snapped operand and the mask. This fuses
+what would otherwise be 5 HBM round-trips (slice, sub, abs, cmp, select)
+into one read + two writes. θ arrives via scalar prefetch so the same
+compiled kernel serves every denoising step's threshold.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _reuse_kernel(theta_ref, x_e_ref, x_o_ref, out_o_ref, mask_o_ref):
+    theta = theta_ref[0]
+    x_e = x_e_ref[...]
+    x_o = x_o_ref[...]
+    delta = jnp.abs(x_o - x_e) * 0.5
+    snap = delta < theta
+    out_o_ref[...] = jnp.where(snap, x_e, x_o)
+    mask_o_ref[...] = snap.astype(jnp.int8)
+
+
+def reuse_snap_kernel(x_even: jax.Array, x_odd: jax.Array, theta: jax.Array,
+                      *, block: int = 256, interpret: bool = False):
+    """x_even/x_odd: (R, P, d) pair-split tokens; theta: (1,) f32.
+
+    Returns (snapped_odd, mask_odd:int8); the even (representative) half
+    is unchanged by definition.
+    """
+    R, P, d = x_even.shape
+    block = min(block, P)
+    assert P % block == 0
+    grid = (R, P // block)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block, d), lambda r, i, *_: (r, i, 0)),
+            pl.BlockSpec((None, block, d), lambda r, i, *_: (r, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block, d), lambda r, i, *_: (r, i, 0)),
+            pl.BlockSpec((None, block, d), lambda r, i, *_: (r, i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _reuse_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, P, d), x_even.dtype),
+            jax.ShapeDtypeStruct((R, P, d), jnp.int8),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(theta, x_even, x_odd)

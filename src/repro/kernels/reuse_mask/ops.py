@@ -1,0 +1,44 @@
+"""Jitted wrapper for the fused reuse-snap kernel.
+
+Operates on (B, H, N, d) operands along adjacent window-2 pairs (permute
+with ``core.collapse.pair_major_order`` for t/y axes first).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.reuse_mask.kernel import reuse_snap_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def reuse_snap(x, theta, *, block: int = 256, interpret: bool | None = None):
+    """x: (B, H, N, d), theta: scalar -> (snapped x, mask int8)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, N, d = x.shape
+    assert N % 2 == 0
+    P = N // 2
+    xr = x.reshape(B * H, N, d)
+    x_e, x_o = xr[:, 0::2], xr[:, 1::2]
+
+    blk = min(block, P)
+    Pp = -(-P // blk) * blk
+    if Pp != P:
+        padw = ((0, 0), (0, Pp - P), (0, 0))
+        x_e = jnp.pad(x_e, padw)
+        x_o = jnp.pad(x_o, padw)
+    th = jnp.asarray([theta], jnp.float32).astype(x.dtype)
+    o_o, m_o = reuse_snap_kernel(x_e, x_o, th, block=blk, interpret=interpret)
+    o_o, m_o = o_o[:, :P], m_o[:, :P]
+
+    snapped = jnp.stack([xr[:, 0::2], o_o], axis=2).reshape(B * H, N, d)
+    mask = jnp.stack([jnp.zeros_like(m_o), m_o], axis=2).reshape(B * H, N, d)
+    return snapped.reshape(B, H, N, d), mask.reshape(B, H, N, d)

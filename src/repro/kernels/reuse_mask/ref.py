@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused reuse-snap kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reuse_snap_ref(x_even, x_odd, theta):
+    """Window-2 Eq. 3 check + snap along adjacent pairs."""
+    delta = jnp.abs(x_odd - x_even) * 0.5
+    snap = delta < theta
+    return jnp.where(snap, x_even, x_odd), snap.astype(jnp.int8)

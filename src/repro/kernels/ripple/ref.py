@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the ripple kernel.
+
+The collapse identities are exact (DESIGN.md §2), so the oracle for the
+pair-collapse kernel is simply dense softmax attention on the *snapped*
+operands.  Any deviation of the kernel from this oracle is a bug, never
+an "approximation error" — the approximation lives entirely in the
+snapping step, which is shared by both paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ripple_attention_ref(q_snapped: jax.Array, k_snapped: jax.Array,
+                         v: jax.Array, scale: float | None = None) -> jax.Array:
+    if scale is None:
+        scale = float(1.0 / (q_snapped.shape[-1] ** 0.5))
+    s = jnp.einsum("...qd,...kd->...qk", q_snapped, k_snapped)
+    s = s.astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kv->...qv", p.astype(v.dtype), v)
+
+
+def split_pairs(x: jax.Array):
+    """(..., N, d) -> even/odd (..., N/2, d); N must be even."""
+    return x[..., 0::2, :], x[..., 1::2, :]
+
+
+def block_flags(x_even: jax.Array, x_odd: jax.Array, block: int) -> jax.Array:
+    """(BH, P, d) pair-split values -> (BH, P/block) int32; 1 where every
+    pair in the block is value-identical (follower fully snapped)."""
+    eq = jnp.all(x_even == x_odd, axis=-1)  # (BH, P)
+    BH, P = eq.shape
+    nb = P // block
+    return jnp.all(eq[:, : nb * block].reshape(BH, nb, block), axis=-1).astype(jnp.int32)

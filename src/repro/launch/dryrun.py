@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and emit the roofline table.
+
+This proves — without hardware — that the distribution config is
+coherent: shardings propagate, collectives exist for every resharding,
+and the per-device footprint fits a TPU v5e (16 GB).  Failures here are
+bugs in the system, not environment problems.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dit-xl2 \
+        --shape train_256 [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import —
+jax locks the device count at first backend init.  Do not set this
+anywhere global (tests and benches must see 1 device).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.workloads import build_workload, model_fns
+from repro.models.params import param_count
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, verbose: bool = True, cost_probe: bool = True,
+             arch=None):
+    """Lower + compile one (arch x shape x mesh) cell; return the
+    RooflineReport (raises on any sharding/compile failure).
+
+    Two compiles per cell:
+      1. the production form (rolled scan-over-layers, chunked attention)
+         — proves compile + gives memory_analysis (what actually runs);
+      2. the *cost probe* (``cost_probe_mode``: loops unrolled, chunking
+         off) — exact FLOPs / bytes / collective-bytes, since XLA's cost
+         analysis counts a while-loop body only once.  Collectives are
+         parsed from the compiled (post-SPMD) HLO text.
+    Multi-pod validation passes ``cost_probe=False`` (pass/fail + memory;
+    the roofline table is single-pod only).
+    """
+    import dataclasses
+
+    from repro.utils.loops import cost_probe_mode, unroll_mode
+
+    if arch is None:
+        arch = get_config(arch_name)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    wl = build_workload(arch, shape_name, mesh)
+    with jax.sharding.set_mesh(mesh):
+        compiled = wl.lower().compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+
+    def _measure(c):
+        cost = c.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = rl.collective_bytes_from_hlo(c.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)), coll)
+
+    if cost_probe:
+        # probe config: grad-accum folded out (identical total cost for a
+        # single-level layers loop; memory is irrelevant at compile time)
+        probe_arch = arch
+        if arch.train.grad_accum > 1:
+            probe_arch = dataclasses.replace(
+                arch, train=dataclasses.replace(arch.train, grad_accum=1))
+        if wl.probe == "two_point" and wl.loop_trips >= 2:
+            with jax.sharding.set_mesh(mesh), cost_probe_mode():
+                with unroll_mode(1):
+                    m1 = _measure(build_workload(
+                        probe_arch, shape_name, mesh).lower().compile())
+                with unroll_mode(2):
+                    m2 = _measure(build_workload(
+                        probe_arch, shape_name, mesh).lower().compile())
+            # m(u) = out + u·body  =>  total(L) = m1 + (L-1)·(m2-m1)
+            L = wl.loop_trips
+            flops = m1[0] + (L - 1) * max(m2[0] - m1[0], 0.0)
+            byts = m1[1] + (L - 1) * max(m2[1] - m1[1], 0.0)
+            coll = {k: m1[2].get(k, 0) + (L - 1) * max(
+                m2[2].get(k, 0) - m1[2].get(k, 0), 0)
+                for k in set(m1[2]) | set(m2[2])}
+        elif wl.probe == "unroll":
+            # MMDiT has two scans with different trip counts; the unroll
+            # two-point can only lump their bodies.  Exact decomposition:
+            # probe the double-only and single-only model variants with
+            # the two-point identity, plus a zero-block outer probe:
+            #   total = two_point(double-only) + two_point(single-only)
+            #           − m(zero blocks)
+            m = probe_arch.model
+            def variant(D, S):
+                return dataclasses.replace(probe_arch,
+                    model=dataclasses.replace(
+                        m, n_double_blocks=D, n_single_blocks=S))
+
+            def two_point(a, L):
+                with jax.sharding.set_mesh(mesh), cost_probe_mode():
+                    with unroll_mode(1):
+                        m1 = _measure(build_workload(
+                            a, shape_name, mesh).lower().compile())
+                    if L < 2:
+                        return m1
+                    with unroll_mode(2):
+                        m2 = _measure(build_workload(
+                            a, shape_name, mesh).lower().compile())
+                keys = set(m1[2]) | set(m2[2])
+                return (m1[0] + (L - 1) * max(m2[0] - m1[0], 0.0),
+                        m1[1] + (L - 1) * max(m2[1] - m1[1], 0.0),
+                        {k: m1[2].get(k, 0) + (L - 1) * max(
+                            m2[2].get(k, 0) - m1[2].get(k, 0), 0)
+                         for k in keys})
+
+            D, S = m.n_double_blocks, m.n_single_blocks
+            md = two_point(variant(D, 0), D)
+            msb = two_point(variant(0, S), S)
+            m0 = two_point(variant(0, 0), 0)
+            flops = md[0] + msb[0] - m0[0]
+            byts = md[1] + msb[1] - m0[1]
+            keys = set(md[2]) | set(msb[2]) | set(m0[2])
+            coll = {k: max(md[2].get(k, 0) + msb[2].get(k, 0)
+                           - m0[2].get(k, 0), 0) for k in keys}
+        else:
+            with jax.sharding.set_mesh(mesh), cost_probe_mode(), \
+                    unroll_mode(1):
+                flops, byts, coll = _measure(build_workload(
+                    probe_arch, shape_name, mesh).lower().compile())
+    else:
+        flops, byts, coll = _measure(compiled)
+    t2 = time.time()
+
+    defs = model_fns(arch)
+    n_params = param_count(defs)
+    active = (rl.active_params_lm(arch.model) if arch.family == "lm"
+              else n_params)
+    report = rl.analyze_values(
+        flops, byts, coll, arch, arch.shape(shape_name),
+        mesh_desc="x".join(str(s) for s in mesh.devices.shape),
+        chips=chips, param_count=n_params, active_param_count=active,
+        steps_multiplier=wl.steps_multiplier)
+    # memory figures always from the production (rolled) compile
+    report.peak_mem_bytes = float(
+        mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    if verbose:
+        print(f"--- {arch_name} x {shape_name} on {report.mesh} "
+              f"({chips} chips), compile {t1 - t0:.1f}s"
+              + (f" + probe {t2 - t1:.1f}s" if cost_probe else ""))
+        print(f"    memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+              f"alias={mem.alias_size_in_bytes/1e9:.2f}GB")
+        print(f"    cost_analysis: flops/dev={report.hlo_flops:.3e} "
+              f"bytes/dev={report.hlo_bytes:.3e}")
+        print(f"    collectives/dev: {report.collective_breakdown}")
+        print(f"    roofline: compute={report.compute_s*1e3:.2f}ms "
+              f"memory={report.memory_s*1e3:.2f}ms "
+              f"collective={report.collective_s*1e3:.2f}ms "
+              f"-> {report.dominant}-bound; useful={report.useful_ratio:.2f}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16 (256)")
+    ap.add_argument("--json", help="append reports to this JSON-lines file")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the cost probe (pass/fail + memory only; "
+                         "used for the multi-pod validation pass)")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in get_config(a).shapes:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch_name, shape_name in cells:
+        try:
+            report = run_cell(arch_name, shape_name, mesh=mesh,
+                              cost_probe=not args.no_probe)
+            if args.json:
+                with open(args.json, "a") as f:
+                    row = report.row()
+                    row["collectives"] = report.collective_breakdown
+                    row["steps_multiplier"] = report.steps_multiplier
+                    f.write(json.dumps(row) + "\n")
+        except Exception as e:  # noqa: BLE001 — report all failures at end
+            traceback.print_exc()
+            failures.append((arch_name, shape_name, repr(e)))
+
+    print(f"\n=== dry-run complete: {len(cells) - len(failures)}/{len(cells)} "
+          f"cells passed on mesh {'x'.join(str(s) for s in mesh.devices.shape)}")
+    for f_ in failures:
+        print("FAILED:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: per selected cell, run the paper-faithful
+baseline and each candidate change through the identical dry-run probe,
+printing before/after roofline terms for EXPERIMENTS.md §Perf.
+
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [cell ...]
+Cells: qwen3_sp qwen3_dots flux_gen_b1 phi_decode
+"""
+
+import dataclasses
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def emit(tag, report):
+    row = report.row()
+    row["tag"] = tag
+    row["collectives"] = report.collective_breakdown
+    with open("hillclimb.jsonl", "a") as f:
+        f.write(json.dumps(row) + "\n")
+    print(f"[{tag}] compute={report.compute_s*1e3:.1f}ms "
+          f"memory={report.memory_s*1e3:.1f}ms "
+          f"collective={report.collective_s*1e3:.1f}ms "
+          f"dominant={report.dominant} useful={report.useful_ratio:.2f} "
+          f"mem={report.peak_mem_bytes/1e9:.1f}GB")
+
+
+def qwen3_variants(mesh, which):
+    base = get_config("qwen3-32b")
+    if which == "sp":
+        # Hypothesis: sequence-parallel residual stream cuts the
+        # memory-term (norm/elementwise bytes /16) and converts TP
+        # all-reduce into RS+AG (same volume, but the duplicated
+        # elementwise work disappears from bytes-accessed).
+        v = dataclasses.replace(base, train=dataclasses.replace(
+            base.train, seq_parallel=True))
+        emit("qwen3.train_4k.seq_parallel",
+             run_cell("qwen3-32b", "train_4k", mesh=mesh, arch=v,
+                      verbose=False))
+    elif which == "dots":
+        # Hypothesis: saving matmul outputs in remat removes the
+        # recomputed-forward matmul FLOPs (~25% of compute term),
+        # trading activation memory (checked against the 16 GB budget).
+        v = dataclasses.replace(base, train=dataclasses.replace(
+            base.train, remat_policy="dots"))
+        emit("qwen3.train_4k.remat_dots",
+             run_cell("qwen3-32b", "train_4k", mesh=mesh, arch=v,
+                      verbose=False))
+    elif which == "sp_dots":
+        v = dataclasses.replace(base, train=dataclasses.replace(
+            base.train, seq_parallel=True, remat_policy="dots"))
+        emit("qwen3.train_4k.sp+dots",
+             run_cell("qwen3-32b", "train_4k", mesh=mesh, arch=v,
+                      verbose=False))
+
+
+def flux_gen_variants(mesh, which):
+    base = get_config("flux-dev")
+    if which == "batch_seq":
+        # Hypothesis: gen_1024's 94 GB/dev all-gather comes from
+        # sequence-sharded tokens being re-gathered for every joint
+        # attention; replicating tokens and sharding only heads kills the
+        # AG at the cost of replicated FFN token work. Predicted: large
+        # collective-term drop, compute-term rise (batch is tiny).
+        # Realized by treating the cell as batch-only parallel: override
+        # shape batch so seqpar rules put everything on batch/model.
+        sh = [dataclasses.replace(s, batch=16) if s.name == "gen_1024"
+              else s for s in base.shapes]
+        v = dataclasses.replace(base, shapes=tuple(sh))
+        emit("flux.gen_1024.batch16",
+             run_cell("flux-dev", "gen_1024", mesh=mesh, arch=v,
+                      verbose=False))
+
+
+def phi_decode_variants(mesh, which):
+    base = get_config("phi3.5-moe-42b-a6.6b")
+    if which == "nofsdp":
+        # Hypothesis (iteration 2, after repheads was refuted): the
+        # decode collective term is the FSDP weight all-gather — every
+        # step re-gathers the data-sharded weights for one token's worth
+        # of compute.  Plain TP weights (replicated over 'data') keep
+        # 42B/16 = 5.3 GB bf16-class shards per chip and eliminate the
+        # gather entirely.  Predicted: collective term collapses;
+        # memory/compute unchanged.
+        v = dataclasses.replace(base, decode_no_fsdp=True)
+        emit("phi.decode_32k.no_fsdp",
+             run_cell("phi3.5-moe-42b-a6.6b", "decode_32k", mesh=mesh,
+                      arch=v, verbose=False))
+        return
+    if which == "repheads":
+        # Hypothesis: decode_32k is collective-bound because q-heads and
+        # the KV cache's sequence dim both want the model axis — GSPMD
+        # ping-pongs activations between the two shardings every layer.
+        # Replicating q-heads at decode (attention FLOPs are negligible
+        # for one token) removes the resharding; FFN/expert TP unchanged.
+        v = dataclasses.replace(base, decode_replicate_heads=True)
+        emit("phi.decode_32k.replicate_heads",
+             run_cell("phi3.5-moe-42b-a6.6b", "decode_32k", mesh=mesh,
+                      arch=v, verbose=False))
+
+
+def main():
+    cells = sys.argv[1:] or ["qwen3_sp"]
+    mesh = make_production_mesh(multi_pod=False)
+    for c in cells:
+        if c.startswith("qwen3_"):
+            qwen3_variants(mesh, c.split("_", 1)[1])
+        elif c == "flux_gen_b1":
+            flux_gen_variants(mesh, "batch_seq")
+        elif c == "phi_decode":
+            phi_decode_variants(mesh, "repheads")
+        elif c == "phi_nofsdp":
+            phi_decode_variants(mesh, "nofsdp")
+        else:
+            raise SystemExit(f"unknown cell {c}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Single pod: 16x16 = 256 chips (TPU v5e pod slice), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the pod axis
+carries pure data parallelism so cross-pod traffic is gradient-only
+(DCN-friendly); see DESIGN.md §7.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state — required for the
+dry-run's XLA_FLAGS device-count override to work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,221 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_global / (chips x 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_global / (chips x 819e9 B/s HBM)
+    collective = collective_bytes_per_chip / (50e9 B/s per ICI link)
+
+``compiled.cost_analysis()`` under SPMD reports the *local* (per-device)
+partitioned module (verified empirically: an 8-way sharded matmul reports
+1/8 the flops), so HLO_FLOPs_global / chips == the local value and the
+terms below use the local numbers against single-chip peaks — identical
+math to the spec formula.  Collective
+
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (per-device bytes: XLA HLO shapes
+after SPMD partitioning are local shapes).
+
+Also reported: MODEL_FLOPS = 6·N·D (dense LM) or 6·N_active·D (MoE), and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs that exposes remat and
+redundant-compute waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.config.base import ArchConfig, LMConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (~per-chip effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    if not _SHAPE_RE.search(shape_str):
+        # scalar like 'f32[]' handled above; bare 'f32' means scalar
+        base = shape_str.strip().strip("()")
+        if base in _DTYPE_BYTES:
+            total += _DTYPE_BYTES[base]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) summed over the HLO.
+
+    '-start' ops are counted once ('-done' carries the same buffer).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # skip the -done halves so async collectives count once
+        line = hlo_text[m.start(): hlo_text.find("(", m.end(2))]
+        if f"{kind}-done" in line:
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per-device FLOPs (local SPMD module)
+    hlo_bytes: float            # per-device HBM bytes
+    collective_bytes: float     # per-device bytes over the program
+    collective_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    steps_multiplier: int = 1
+    peak_mem_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        global_flops = self.hlo_flops * self.chips
+        return self.model_flops / global_flops if global_flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "peak_mem_gb": self.peak_mem_bytes / 1e9,
+        }
+
+
+def model_flops_estimate(arch: ArchConfig, shape: ShapeSpec,
+                         param_count: int, active_param_count: int) -> float:
+    """6·N·D per trained token (fwd+bwd); 2·N·D per inference token."""
+    if shape.kind == "train":
+        if arch.family == "lm":
+            tokens = shape.global_batch * shape.seq_len
+        else:
+            tokens = _vision_tokens(arch, shape) * shape.batch
+        return 6.0 * active_param_count * tokens
+    # inference kinds: 2·N_active·D per processed token per step
+    if arch.family == "lm":
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode: one new token per sequence
+            tokens = shape.global_batch * 1
+        return 2.0 * active_param_count * tokens
+    tokens = _vision_tokens(arch, shape) * shape.batch
+    from repro.launch.workloads import _cfg_factor
+    f = _cfg_factor(arch) if shape.kind == "generate" else 1
+    return 2.0 * active_param_count * tokens * f
+
+
+def _vision_tokens(arch: ArchConfig, shape: ShapeSpec) -> int:
+    m = arch.model
+    fam = arch.family
+    res = shape.img_res
+    if fam in ("dit",):
+        return (res // m.vae_factor // m.patch) ** 2
+    if fam == "mmdit":
+        return (res // 8 // m.patch) ** 2 + m.txt_tokens
+    if fam == "unet":
+        return (res // 8) ** 2           # dominated by the top level
+    if fam == "vdit":
+        g = m.grid(img_res=res)
+        return g[0] * g[1] * g[2] + m.txt_tokens
+    if fam == "vit":
+        return (res // m.patch) ** 2 + 1
+    if fam == "effnet":
+        return (res // 32) ** 2          # proxy: bottleneck grid
+    raise ValueError(fam)
+
+
+def analyze_values(flops: float, byts: float, coll: Dict[str, int],
+                   arch: ArchConfig, shape: ShapeSpec, mesh_desc: str,
+                   chips: int, param_count: int,
+                   active_param_count: Optional[int] = None,
+                   steps_multiplier: int = 1) -> RooflineReport:
+    """Roofline report from already-extracted per-device cost values
+    (the dry-run's two-point/unrolled probes produce these)."""
+    coll_total = float(sum(coll.values()))
+    mf = model_flops_estimate(arch, shape, param_count,
+                              active_param_count or param_count)
+    return RooflineReport(
+        arch=arch.name, shape=shape.name, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=coll_total, collective_breakdown=coll,
+        compute_s=flops / PEAK_FLOPS,      # local flops vs one chip's peak
+        memory_s=byts / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+        model_flops=mf, steps_multiplier=steps_multiplier)
+
+
+def analyze(compiled, hlo_text: str, arch: ArchConfig, shape: ShapeSpec,
+            mesh_desc: str, chips: int, param_count: int,
+            active_param_count: Optional[int] = None,
+            steps_multiplier: int = 1) -> RooflineReport:
+    """Single-artifact analysis (no loop correction — prefer the probe
+    path in dryrun.run_cell for scanned models)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return analyze_values(
+        float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_from_hlo(hlo_text), arch, shape, mesh_desc, chips,
+        param_count, active_param_count, steps_multiplier)
+
+
+def active_params_lm(cfg: LMConfig) -> int:
+    """Active (per-token) parameter count for MoE LMs."""
+    from repro.models import transformer_lm as lm_lib
+    from repro.models.params import param_count as pc
+    defs = lm_lib.lm_defs(cfg)
+    total = pc(defs)
+    if cfg.moe is None:
+        return total
+    from repro.models.moe import moe_defs
+    moe = moe_defs(cfg.d_model, cfg.moe)
+    routed = pc({k: moe[k] for k in ("wi_gate", "wi_up", "wo")}) \
+        * cfg.num_layers
+    active_routed = routed * cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - routed + active_routed)

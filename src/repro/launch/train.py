@@ -1,0 +1,137 @@
+"""Training launcher: ``python -m repro.launch.train --arch dit-b2
+--shape train_256 --steps 200 [--smoke] [--ckpt-dir DIR] [overrides...]``
+
+Wires: config -> model defs -> sharded train state -> synthetic data
+pipeline -> jitted train step -> host loop with async checkpointing and
+auto-resume (restart the same command after a crash and it continues
+from the newest valid checkpoint).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config.base import ShapeSpec, apply_overrides
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.data import synthetic
+from repro.launch.mesh import make_host_mesh
+from repro.launch.workloads import build_workload, model_fns
+from repro.models.params import init_params
+from repro.training import train_loop
+from repro.utils.logging import get_logger
+
+log = get_logger("launch.train")
+
+
+def make_batch_fn(arch, shape: ShapeSpec):
+    fam = arch.family
+    m = arch.model
+    if fam == "lm":
+        return lambda spec, i: synthetic.token_batch(
+            spec, i, shape.global_batch, shape.seq_len, m.vocab_size)
+    if fam in ("dit", "mmdit", "unet", "vdit"):
+        def diff_batch(spec, i):
+            if fam == "dit":
+                g = (1, m.latent_res(shape.img_res), m.latent_res(shape.img_res))
+                b = synthetic.latent_video_batch(spec, i, shape.batch, g,
+                                                 m.in_channels)
+                lat = b["latents"][:, 0]
+                key = jax.random.fold_in(jax.random.PRNGKey(spec.seed), i)
+                return {"latents": lat,
+                        "labels": jax.random.randint(
+                            key, (shape.batch,), 0, m.num_classes)}
+            if fam == "mmdit":
+                lr = shape.img_res // 8
+                b = synthetic.latent_video_batch(
+                    spec, i, shape.batch, (1, lr, lr), m.in_channels,
+                    txt_tokens=m.txt_tokens, txt_dim=m.txt_dim)
+                key = jax.random.fold_in(jax.random.PRNGKey(spec.seed + 3), i)
+                return {"latents": b["latents"][:, 0], "txt": b["txt"],
+                        "vec": 0.05 * jax.random.normal(key, (shape.batch, 768))}
+            if fam == "unet":
+                lr = shape.img_res // 8
+                b = synthetic.latent_video_batch(
+                    spec, i, shape.batch, (1, lr, lr), m.in_channels,
+                    txt_tokens=m.ctx_tokens, txt_dim=m.ctx_dim)
+                return {"latents": b["latents"][:, 0], "ctx": b["txt"]}
+            g = m.grid(img_res=shape.img_res)
+            b = synthetic.latent_video_batch(
+                spec, i, shape.batch,
+                (g[0] * m.t_patch, g[1] * m.patch, g[2] * m.patch),
+                m.in_channels, txt_tokens=m.txt_tokens, txt_dim=m.txt_dim)
+            return b
+        return diff_batch
+    # vision
+    return lambda spec, i: synthetic.image_batch(
+        spec, i, shape.batch, shape.img_res,
+        num_classes=m.num_classes)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch-override", type=int, default=0)
+    ap.add_argument("overrides", nargs="*",
+                    help="config overrides like train.learning_rate=1e-4")
+    args = ap.parse_args(argv)
+
+    arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    arch = apply_overrides(arch, args.overrides)
+    shape = arch.shape(args.shape)
+    if args.batch_override:
+        field = ("global_batch" if arch.family == "lm" else "batch")
+        shape = dataclasses.replace(shape, **{field: args.batch_override})
+        arch = dataclasses.replace(
+            arch, shapes=tuple(shape if s.name == shape.name else s
+                               for s in arch.shapes))
+
+    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+    wl = build_workload(arch, args.shape, mesh)
+    step_fn = wl.jitted()
+
+    defs = model_fns(arch)
+    params = init_params(defs, jax.random.PRNGKey(args.seed))
+    state = train_loop.train_state_init(params, arch.train)
+
+    ckpt = None
+    start_step = 0
+    if args.ckpt_dir:
+        ckpt = Checkpointer(args.ckpt_dir, keep=3,
+                            async_save=arch.checkpoint.async_save)
+        found, restored, extra = ckpt.restore_latest(state)
+        if found is not None:
+            state, start_step = restored, found
+            log.info("resumed from checkpoint step %d", start_step)
+
+    spec = synthetic.DataSpec(seed=args.seed)
+    batch_fn = make_batch_fn(arch, shape)
+    it = synthetic.batch_iterator(batch_fn, spec, start_index=start_step)
+
+    def wrapped_step(state, batch, rng):
+        return step_fn(state, batch, rng)
+
+    state, history = train_loop.run_train_loop(
+        wrapped_step, state, it, args.steps, rng=jax.random.PRNGKey(args.seed),
+        checkpointer=ckpt, checkpoint_every=args.ckpt_every if ckpt else 0,
+        start_step=start_step)
+    if ckpt:
+        ckpt.wait()
+    final = history[-1] if history else {}
+    log.info("training done: %s", final)
+    return state, history
+
+
+if __name__ == "__main__":
+    main()

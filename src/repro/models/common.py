@@ -1,0 +1,202 @@
+"""Shared layers: norms, MLPs, RoPE (1-D and factorized 3-D), patch embed,
+sinusoidal embeddings.  Pure functions over param dicts."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import ParamDef, fan_in, normal, ones, zeros
+
+
+# --- norms ------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int):
+    return {"scale": ParamDef((d,), (None,), ones)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_defs(d: int, elementwise: bool = True):
+    if not elementwise:
+        return {}
+    return {"scale": ParamDef((d,), (None,), ones),
+            "bias": ParamDef((d,), (None,), zeros)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if params:
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --- linear / mlp -----------------------------------------------------------
+
+
+def linear_defs(d_in: int, d_out: int, axes=("embed", "mlp"), bias: bool = True,
+                init=None, out_axis_bias=None):
+    defs = {"w": ParamDef((d_in, d_out), axes, init or fan_in())}
+    if bias:
+        defs["b"] = ParamDef((d_out,), (out_axis_bias or axes[1],), zeros)
+    return defs
+
+
+def linear(params, x):
+    out = jnp.einsum("...d,df->...f", x, params["w"].astype(x.dtype))
+    if "b" in params:
+        out = out + params["b"].astype(x.dtype)
+    return out
+
+
+def mlp_defs(d: int, d_ff: int, gated: bool = True, bias: bool = False):
+    if gated:
+        return {
+            "wi_gate": ParamDef((d, d_ff), ("embed", "mlp"), fan_in()),
+            "wi_up": ParamDef((d, d_ff), ("embed", "mlp"), fan_in()),
+            "wo": ParamDef((d_ff, d), ("mlp", "embed"), fan_in()),
+        }
+    defs = {
+        "wi": ParamDef((d, d_ff), ("embed", "mlp"), fan_in()),
+        "wo": ParamDef((d_ff, d), ("mlp", "embed"), fan_in()),
+    }
+    if bias:
+        defs["bi"] = ParamDef((d_ff,), ("mlp",), zeros)
+        defs["bo"] = ParamDef((d,), ("embed",), zeros)
+    return defs
+
+
+def mlp(params, x, act=jax.nn.silu):
+    dt = x.dtype
+    if "wi_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(dt))
+        h = act(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+        if "bi" in params:
+            h = h + params["bi"].astype(dt)
+        h = act(h)
+    out = jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+    if "bo" in params:
+        out = out + params["bo"].astype(dt)
+    return out
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope_1d(x: jax.Array, positions: jax.Array,
+                  theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_3d_angles(grid: Tuple[int, int, int], axes_dim: Sequence[int],
+                   theta: float = 10000.0):
+    """Factorized (t, x, y) RoPE angles for a token grid (paper §3.1).
+
+    Channel groups carry distinct spatio-temporal roles: the first
+    ``axes_dim[0]`` channels rotate with the frame index, the next with
+    the x coordinate, the last with y.  Returns (cos, sin): (N, sum/2).
+    """
+    T, H, W = grid
+    tt, yy, xx = jnp.meshgrid(jnp.arange(T), jnp.arange(H), jnp.arange(W),
+                              indexing="ij")
+    coords = [tt.reshape(-1), xx.reshape(-1), yy.reshape(-1)]  # t, x, y
+    parts = []
+    for dim, pos in zip(axes_dim, coords):
+        freqs = rope_freqs(dim, theta)
+        parts.append(pos[:, None].astype(jnp.float32) * freqs)
+    ang = jnp.concatenate(parts, axis=-1)  # (N, sum(axes_dim)/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope_precomputed(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x: (..., N, H, hd) with hd == 2·cos.shape[-1]; rotate-half form
+    matching :func:`apply_rope_1d` (split-half pairing)."""
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- patch embed (reshape + matmul: exact for non-overlapping patches) ------
+
+
+def patch_embed_defs(patch: int, in_ch: int, d: int):
+    return {
+        "w": ParamDef((patch * patch * in_ch, d), (None, "embed"), fan_in()),
+        "b": ParamDef((d,), ("embed",), zeros),
+    }
+
+
+def patch_embed(params, x, patch: int):
+    """x: (B, H, W, C) -> (B, H/p * W/p, d)."""
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // patch) * (W // patch),
+                                              patch * patch * C)
+    return jnp.einsum("...d,df->...f", x, params["w"].astype(x.dtype)) + \
+        params["b"].astype(x.dtype)
+
+
+def unpatchify(x, patch: int, h: int, w: int, out_ch: int):
+    """(B, h*w, p*p*C) -> (B, h*p, w*p, C)."""
+    B = x.shape[0]
+    x = x.reshape(B, h, w, patch, patch, out_ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, h * patch, w * patch, out_ch)
+
+
+# --- timestep / positional embeddings ---------------------------------------
+
+
+def sincos_timestep_embed(t: jax.Array, dim: int, max_period: float = 10000.0):
+    """DDPM sinusoidal timestep embedding. t: (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def sincos_pos_embed_2d(h: int, w: int, dim: int):
+    """Fixed 2-D sin-cos position embedding (DiT/ViT style): (h*w, dim)."""
+    def _1d(n, d):
+        pos = jnp.arange(n, dtype=jnp.float32)
+        omega = 1.0 / (10000.0 ** (jnp.arange(d // 2, dtype=jnp.float32) / (d // 2)))
+        out = pos[:, None] * omega[None]
+        return jnp.concatenate([jnp.sin(out), jnp.cos(out)], axis=1)
+
+    eh = _1d(h, dim // 2)  # (h, dim/2)
+    ew = _1d(w, dim // 2)
+    emb = jnp.concatenate(
+        [jnp.repeat(eh, w, axis=0), jnp.tile(ew, (h, 1))], axis=1)
+    return emb  # (h*w, dim)

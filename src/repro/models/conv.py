@@ -1,0 +1,90 @@
+"""Convolution substrate for UNet / EfficientNet (NHWC throughout)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, fan_in, ones, zeros
+
+
+def conv_defs(k: int, c_in: int, c_out: int, bias: bool = True,
+              depthwise: bool = False):
+    if depthwise:
+        w = ParamDef((k, k, 1, c_in), (None, None, None, "heads"),
+                     fan_in(fan_axes=(0, 1)))
+    else:
+        w = ParamDef((k, k, c_in, c_out), (None, None, None, "heads"),
+                     fan_in(fan_axes=(0, 1, 2)))
+    defs = {"w": w}
+    if bias:
+        defs["b"] = ParamDef((c_out,), ("heads",), zeros)
+    return defs
+
+
+def conv2d(params, x, stride: int = 1, padding="SAME", depthwise: bool = False):
+    w = params["w"].astype(x.dtype)
+    groups = x.shape[-1] if depthwise else 1
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if "b" in params:
+        out = out + params["b"].astype(x.dtype)
+    return out
+
+
+def groupnorm_defs(c: int):
+    return {"scale": ParamDef((c,), (None,), ones),
+            "bias": ParamDef((c,), (None,), zeros)}
+
+
+def groupnorm(params, x, groups: int = 32, eps: float = 1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    x32 = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+    out = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (out * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def batchnorm_defs(c: int):
+    return {"scale": ParamDef((c,), (None,), ones),
+            "bias": ParamDef((c,), (None,), zeros)}
+
+
+def batchnorm(params, x, eps: float = 1e-3):
+    """Batch-statistics normalization over (N, H, W).  At serving batch=1
+    the spatial extent still provides the statistics (DESIGN.md notes the
+    running-stats substitution)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x32, axis=(0, 1, 2), keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def avg_pool(x, window: int, stride: Optional[int] = None):
+    stride = stride or window
+    out = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return (out / (window * window)).astype(x.dtype)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def upsample_nearest(x, factor: int = 2):
+    B, H, W, C = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :],
+                         (B, H, factor, W, factor, C))
+    return x.reshape(B, H * factor, W * factor, C)

@@ -1,0 +1,120 @@
+"""DiT — scalable image diffusion transformer (Peebles & Xie, arXiv:2212.09748).
+
+Covers the assigned ``dit-xl2`` and ``dit-b2`` configs.  adaLN-zero
+conditioning on (timestep, class label); fixed 2-D sin-cos position
+embeddings; patchify via exact reshape+matmul.  TimeRipple applies in 2-D
+mode (x/y axes; no temporal axis — DESIGN.md §6), driven by the sampler's
+denoising step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import DiTConfig, RippleConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.utils.loops import scan_layers
+from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.common import (layernorm, linear, linear_defs, mlp,
+                                 mlp_defs, patch_embed, patch_embed_defs,
+                                 sincos_pos_embed_2d, sincos_timestep_embed,
+                                 unpatchify)
+from repro.models.params import (ParamDef, fan_in, normal, zeros,
+                                 stack_layer_defs)
+
+_RIPPLE_OFF = RippleConfig()
+
+
+def _block_defs(cfg: DiTConfig):
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    return {
+        "attn": attention_defs(d, cfg.num_heads, cfg.num_heads, hd),
+        "mlp": mlp_defs(d, int(d * cfg.mlp_ratio), gated=False, bias=True),
+        # adaLN-zero: c -> (shift, scale, gate) x (attn, mlp); zero-init.
+        "ada": {"w": ParamDef((d, 6 * d), ("embed", None), zeros),
+                "b": ParamDef((6 * d,), (None,), zeros)},
+    }
+
+
+def dit_defs(cfg: DiTConfig):
+    d = cfg.d_model
+    p = cfg.patch
+    out_ch = cfg.in_channels * (2 if cfg.learn_sigma else 1)
+    return {
+        "patch": patch_embed_defs(p, cfg.in_channels, d),
+        "t_mlp1": linear_defs(256, d, axes=("embed", "mlp")),
+        "t_mlp2": linear_defs(d, d, axes=("mlp", "embed")),
+        "label_embed": ParamDef((cfg.num_classes + 1, d), (None, "embed"),
+                                normal(0.02)),  # +1 = CFG null class
+        "blocks": stack_layer_defs(_block_defs(cfg), cfg.num_layers),
+        "final_ada": {"w": ParamDef((d, 2 * d), ("embed", None), zeros),
+                      "b": ParamDef((2 * d,), (None,), zeros)},
+        "final": linear_defs(d, p * p * out_ch, axes=("embed", None),
+                             init=zeros),
+    }
+
+
+def _conditioning(params, t, labels, cfg: DiTConfig, dt):
+    temb = sincos_timestep_embed(t, 256).astype(dt)
+    c = jax.nn.silu(linear(params["t_mlp1"], temb))
+    c = linear(params["t_mlp2"], c)
+    c = c + params["label_embed"].astype(dt)[labels]
+    return jax.nn.silu(c)  # (B, d)
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def dit_apply(
+    params: Dict,
+    latents: jax.Array,   # (B, H_lat, W_lat, C)
+    t: jax.Array,         # (B,)
+    labels: jax.Array,    # (B,) int
+    cfg: DiTConfig,
+    *,
+    ripple: RippleConfig = _RIPPLE_OFF,
+    step: Optional[jax.Array] = None,
+    total_steps: Optional[int] = None,
+    ctx: ShardCtx = NULL_CTX,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+) -> jax.Array:
+    """Predict noise (+ sigma if learn_sigma): (B, H_lat, W_lat, out_ch)."""
+    dt = compute_dtype
+    B, H, W, C = latents.shape
+    p = cfg.patch
+    h, w = H // p, W // p
+    grid = (1, h, w)
+
+    x = patch_embed(params["patch"], latents.astype(dt), p)
+    pos = sincos_pos_embed_2d(h, w, cfg.d_model).astype(dt)
+    x = ctx.c(x + pos[None], ("batch", "seq", "embed"))
+    c = _conditioning(params, t, labels, cfg, dt)
+    hd = cfg.d_model // cfg.num_heads
+
+    def body(x, bp):
+        ada = linear(bp["ada"], c)  # (B, 6d)
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+        h_ = _modulate(layernorm({}, x), sh1, sc1)
+        attn = mha_ripple_attention(
+            bp["attn"], h_, n_heads=cfg.num_heads, head_dim=hd, grid=grid,
+            ripple=ripple, step=step, total_steps=total_steps, ctx=ctx)
+        x = x + g1[:, None, :] * attn
+        h_ = _modulate(layernorm({}, x), sh2, sc2)
+        x = x + g2[:, None, :] * mlp(bp["mlp"], h_, act=jax.nn.gelu)
+        return ctx.c(x, ("batch", "seq", "embed")), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(body, x, params["blocks"])
+
+    sh, sc = jnp.split(linear(params["final_ada"], c), 2, axis=-1)
+    x = _modulate(layernorm({}, x), sh, sc)
+    x = linear(params["final"], x)
+    out_ch = cfg.in_channels * (2 if cfg.learn_sigma else 1)
+    return unpatchify(x, p, h, w, out_ch)

@@ -1,0 +1,138 @@
+"""EfficientNet (arXiv:1905.11946) — assigned ``efficientnet-b7``
+(width_mult 2.0, depth_mult 3.1, img_res 600).
+
+MBConv blocks with squeeze-excitation, swish activation, batch-statistics
+normalization (running-stats substitution noted in DESIGN.md).  Attention-
+free — TimeRipple is inapplicable (DESIGN.md §6); built without it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import EffNetConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.common import linear, linear_defs
+from repro.models.conv import (batchnorm, batchnorm_defs, conv2d, conv_defs,
+                               global_avg_pool)
+
+# (expand_ratio, channels, layers, stride, kernel) — EfficientNet-B0 base
+_B0_STAGES = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+]
+
+
+def round_filters(c: int, width: float, divisor: int = 8) -> int:
+    c = c * width
+    new_c = max(divisor, int(c + divisor / 2) // divisor * divisor)
+    if new_c < 0.9 * c:
+        new_c += divisor
+    return int(new_c)
+
+
+def round_repeats(r: int, depth: float) -> int:
+    return int(math.ceil(depth * r))
+
+
+def _mbconv_defs(c_in: int, c_out: int, expand: int, kernel: int):
+    c_mid = c_in * expand
+    c_se = max(1, c_in // 4)
+    defs: Dict = {}
+    if expand != 1:
+        defs["expand"] = conv_defs(1, c_in, c_mid, bias=False)
+        defs["bn0"] = batchnorm_defs(c_mid)
+    defs["dw"] = conv_defs(kernel, c_mid, c_mid, bias=False, depthwise=True)
+    defs["bn1"] = batchnorm_defs(c_mid)
+    defs["se_reduce"] = conv_defs(1, c_mid, c_se)
+    defs["se_expand"] = conv_defs(1, c_se, c_mid)
+    defs["project"] = conv_defs(1, c_mid, c_out, bias=False)
+    defs["bn2"] = batchnorm_defs(c_out)
+    return defs
+
+
+def _mbconv(params, x, stride: int, expand: int):
+    h = x
+    if "expand" in params:
+        h = jax.nn.silu(batchnorm(params["bn0"], conv2d(params["expand"], h)))
+    h = conv2d(params["dw"], h, stride=stride, depthwise=True)
+    h = jax.nn.silu(batchnorm(params["bn1"], h))
+    # squeeze-excitation
+    se = jnp.mean(h, axis=(1, 2), keepdims=True)
+    se = jax.nn.silu(conv2d(params["se_reduce"], se))
+    se = jax.nn.sigmoid(conv2d(params["se_expand"], se))
+    h = h * se
+    h = batchnorm(params["bn2"], conv2d(params["project"], h))
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def effnet_stages(cfg: EffNetConfig):
+    """Resolved (expand, c_in, c_out, repeats, stride, kernel) list."""
+    stages = []
+    c_prev = round_filters(32, cfg.width_mult)
+    for expand, c, r, s, k in _B0_STAGES:
+        c_out = round_filters(c, cfg.width_mult)
+        stages.append((expand, c_prev, c_out, round_repeats(r, cfg.depth_mult),
+                       s, k))
+        c_prev = c_out
+    return stages
+
+
+def effnet_defs(cfg: EffNetConfig):
+    stem_c = round_filters(32, cfg.width_mult)
+    head_c = round_filters(1280, cfg.width_mult)
+    defs: Dict = {
+        "stem": conv_defs(3, cfg.in_channels, stem_c, bias=False),
+        "stem_bn": batchnorm_defs(stem_c),
+        "stages": [],
+    }
+    for expand, c_in, c_out, repeats, stride, kernel in effnet_stages(cfg):
+        blocks = []
+        for i in range(repeats):
+            blocks.append(_mbconv_defs(c_in if i == 0 else c_out, c_out,
+                                       expand, kernel))
+        defs["stages"].append(blocks)
+    last_c = effnet_stages(cfg)[-1][2]
+    defs["head"] = conv_defs(1, last_c, head_c, bias=False)
+    defs["head_bn"] = batchnorm_defs(head_c)
+    defs["classifier"] = linear_defs(head_c, cfg.num_classes,
+                                     axes=(None, "vocab"))
+    return defs
+
+
+def effnet_apply(
+    params: Dict,
+    images: jax.Array,   # (B, H, W, 3)
+    cfg: EffNetConfig,
+    *,
+    ctx: ShardCtx = NULL_CTX,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+) -> jax.Array:
+    dt = compute_dtype
+    x = ctx.c(images.astype(dt), ("batch", "seq", None, None))
+    x = jax.nn.silu(batchnorm(params["stem_bn"],
+                              conv2d(params["stem"], x, stride=2)))
+    stage_cfg = effnet_stages(cfg)
+    for (expand, _, _, repeats, stride, kernel), blocks in zip(
+            stage_cfg, params["stages"]):
+        for i, bp in enumerate(blocks):
+            fn = _mbconv
+            if remat:
+                fn = jax.checkpoint(_mbconv, static_argnums=(2, 3))
+            x = fn(bp, x, stride if i == 0 else 1, expand)
+        x = ctx.c(x, ("batch", "seq", None, None))
+    x = jax.nn.silu(batchnorm(params["head_bn"], conv2d(params["head"], x)))
+    feat = global_avg_pool(x)
+    return linear(params["classifier"], feat)

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN (Qwen-MoE / Phi-3.5-MoE style).
+
+Routed experts with top-k gating plus optional always-on shared experts.
+Two execution paths:
+
+* ``dense`` — every expert computed on every token, gate-weighted
+  combine.  Exact (no capacity drops); used for small configs and as the
+  oracle in tests.
+* ``ep`` — expert parallelism over the ``model`` mesh axis via
+  ``shard_map``.  Token activations entering the FFN are replicated
+  across ``model`` (standard Megatron TP invariant), so each model rank
+  selects the tokens routed to *its own* expert shard locally — dispatch
+  needs **no all_to_all**; the combine is the same ``psum`` over
+  ``model`` that TP FFN output already performs.  Expert weights are
+  FSDP-sharded on their input dim and all-gathered on use (ZeRO-3).
+  Tokens beyond the per-(rank, expert) capacity are dropped, exactly as
+  GShard/Switch do at scale.
+
+Router aux losses: load-balancing loss (Switch §2.2) and router z-loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import MoEConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.params import ParamDef, fan_in, normal
+
+
+def moe_defs(d_model: int, cfg: MoEConfig):
+    E = cfg.num_experts
+    F = cfg.expert_ffw_dim
+    defs = {
+        "router": ParamDef((d_model, E), ("embed", None), normal(0.02)),
+        "wi_gate": ParamDef((E, d_model, F), ("expert", "embed", None),
+                            fan_in(fan_axes=(1,))),
+        "wi_up": ParamDef((E, d_model, F), ("expert", "embed", None),
+                          fan_in(fan_axes=(1,))),
+        "wo": ParamDef((E, F, d_model), ("expert", None, "embed"),
+                       fan_in(fan_axes=(1,))),
+    }
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        defs["shared"] = {
+            "wi_gate": ParamDef((d_model, Fs), ("embed", "mlp"), fan_in()),
+            "wi_up": ParamDef((d_model, Fs), ("embed", "mlp"), fan_in()),
+            "wo": ParamDef((Fs, d_model), ("mlp", "embed"), fan_in()),
+            "gate": ParamDef((d_model, 1), ("embed", None), normal(0.02)),
+        }
+    return defs
+
+
+def _expert_ffn(w_gate, w_up, w_out, x):
+    """x: (E, C, d); expert-batched gated FFN."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def _router(params, x, cfg: MoEConfig):
+    """Returns (topk_idx (N,k), topk_w (N,k), aux_loss scalar). x: (N, d)."""
+    logits = jnp.einsum("nd,de->ne", x, params["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, cfg.top_k)
+    topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
+    # Switch-style load-balance loss + z-loss
+    E = cfg.num_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_idx, E), axis=1), axis=0) / cfg.top_k
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = cfg.aux_loss_weight * (lb + 1e-3 * z)
+    return topk_idx, topk_w, aux
+
+
+def _dense_moe(params, x_flat, cfg: MoEConfig):
+    """All-experts compute, gate-weighted combine. x_flat: (N, d)."""
+    topk_idx, topk_w, aux = _router(params, x_flat, cfg)
+    E = cfg.num_experts
+    gates = jnp.sum(
+        jax.nn.one_hot(topk_idx, E) * topk_w[..., None], axis=1)  # (N, E)
+    dt = x_flat.dtype
+    xe = jnp.broadcast_to(x_flat[None], (E, *x_flat.shape))
+    ye = _expert_ffn(params["wi_gate"].astype(dt), params["wi_up"].astype(dt),
+                     params["wo"].astype(dt), xe)  # (E, N, d)
+    out = jnp.einsum("ne,end->nd", gates.astype(dt), ye)
+    return out, aux
+
+
+def _local_dispatch_ffn(params_local, x, topk_idx, topk_w, e_lo, E_loc, C, dt):
+    """One model-rank's expert work: select tokens routed to experts in
+    [e_lo, e_lo + E_loc), up to capacity C per expert, compute, and
+    scatter back.  ``e_lo`` may be traced (from axis_index); ``E_loc``
+    must be static.
+
+    x: (N, d) local tokens (replicated over 'model'); params_local hold
+    this rank's expert slab (E_loc, ...). Returns (N, d) partial output —
+    zero for tokens this rank doesn't own — to be psum'd over 'model'.
+    """
+    N, d = x.shape
+    k = topk_idx.shape[1]
+    e_hi = e_lo + E_loc
+    slot_e = topk_idx.reshape(-1)                      # (N·k,)
+    slot_w = topk_w.reshape(-1)
+    slot_tok = jnp.arange(N * k) // k
+    mine = jnp.logical_and(slot_e >= e_lo, slot_e < e_hi)
+    local_e = jnp.where(mine, slot_e - e_lo, E_loc)    # E_loc = trash bin
+    # position of each slot within its expert queue (stable by slot order)
+    onehot = jax.nn.one_hot(local_e, E_loc + 1, dtype=jnp.int32)  # (N·k, E_loc+1)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.sum(pos * onehot, axis=1)                # (N·k,)
+    keep = jnp.logical_and(mine, pos < C)
+    dest_e = jnp.where(keep, local_e, E_loc)
+    dest_c = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E_loc + 1, C, d), dt)
+    buf = buf.at[dest_e, dest_c].add(jnp.where(keep[:, None], x[slot_tok], 0))
+    y = _expert_ffn(params_local["wi_gate"].astype(dt),
+                    params_local["wi_up"].astype(dt),
+                    params_local["wo"].astype(dt), buf[:E_loc])
+    y = jnp.concatenate([y, jnp.zeros((1, C, d), y.dtype)], axis=0)
+    gathered = y[dest_e, dest_c]                       # (N·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0) * slot_w[:, None].astype(dt)
+    out = jnp.zeros((N, d), dt).at[slot_tok].add(gathered)
+    return out
+
+
+def moe_ffn(
+    params: Dict,
+    x: jax.Array,
+    cfg: MoEConfig,
+    ctx: ShardCtx = NULL_CTX,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    use_ep = impl == "ep" or (
+        impl == "auto" and ctx.mesh is not None and "model" in ctx.mesh.axis_names
+        and cfg.num_experts % ctx.mesh.shape["model"] == 0)
+
+    if not use_ep:
+        out, aux = _dense_moe(params, x_flat, cfg)
+    else:
+        out, aux = _ep_moe(params, x_flat, cfg, ctx)
+
+    if cfg.num_shared_experts:
+        from repro.models.common import mlp
+        sh = params["shared"]
+        s_out = mlp({k: sh[k] for k in ("wi_gate", "wi_up", "wo")}, x_flat)
+        s_gate = jax.nn.sigmoid(
+            jnp.einsum("nd,dg->ng", x_flat, sh["gate"].astype(x.dtype)))
+        out = out + s_out * s_gate
+    return out.reshape(B, S, d), aux
+
+
+def _ep_moe(params, x_flat, cfg: MoEConfig, ctx: ShardCtx):
+    mesh = ctx.mesh
+    model_n = mesh.shape["model"]
+    E = cfg.num_experts
+    E_loc = E // model_n
+    N = x_flat.shape[0]
+    bd = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_tok_shards = 1
+    for a in bd:
+        n_tok_shards *= mesh.shape[a]
+    N_loc = N // n_tok_shards if N % n_tok_shards == 0 else N
+    tok_spec = bd if N % n_tok_shards == 0 else ()
+    C = max(int(N_loc * cfg.top_k * cfg.capacity_factor / E), 8)
+
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    router_w = params["router"]
+    expert_params = {k: params[k] for k in ("wi_gate", "wi_up", "wo")}
+
+    def body(x_loc, router_w, wi_gate, wi_up, wo):
+        # x_loc: (N_loc, d) — replicated over 'model'.
+        idx = jax.lax.axis_index("model")
+        e_lo = idx * E_loc
+        topk_idx, topk_w, aux = _router({"router": router_w}, x_loc, cfg)
+        partial = _local_dispatch_ffn(
+            {"wi_gate": wi_gate, "wi_up": wi_up, "wo": wo},
+            x_loc, topk_idx, topk_w, e_lo, E_loc, C, x_loc.dtype)
+        out = jax.lax.psum(partial, "model")
+        aux = jax.lax.pmean(aux, "model")
+        if tok_spec:
+            aux = jax.lax.pmean(aux, tok_spec)
+        return out, aux
+
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(tok_spec or None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(tok_spec or None, None), P()),
+    )(x_flat, router_w, expert_params["wi_gate"], expert_params["wi_up"],
+      expert_params["wo"])
+    return out, aux

@@ -1,0 +1,126 @@
+"""Parameter definition system — one source of truth per model.
+
+No flax in this environment, so models declare their parameters as a
+nested dict of :class:`ParamDef` (shape, dtype, initializer, *logical
+axes*).  From that single tree we derive:
+
+* ``init_params``      — real arrays for training/tests,
+* ``abstract_params``  — ShapeDtypeStructs for the dry-run (no allocation),
+* ``logical_axes``     — the logical-axis tree that
+  ``repro.distributed.sharding`` maps onto the production mesh.
+
+Logical axis names used across the zoo:
+  "embed"   model width (FSDP-sharded on ("pod","data") for params)
+  "heads"   attention heads / head-major fused dims (tensor-sharded)
+  "kv"      KV heads
+  "mlp"     FFN hidden (tensor-sharded)
+  "vocab"   vocabulary (tensor-sharded)
+  "expert"  MoE expert count (expert-parallel over "model")
+  "layers"  stacked scan-over-layers dim (never sharded)
+  None      replicated dimension
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Initializer
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# --- initializers -----------------------------------------------------------
+
+
+def zeros(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def normal(stddev: float = 0.02) -> Initializer:
+    def f(key, shape, dtype):
+        return stddev * jax.random.normal(key, shape, dtype)
+    return f
+
+
+def fan_in(scale: float = 1.0, fan_axes: Optional[Tuple[int, ...]] = None) -> Initializer:
+    """LeCun/He-style variance scaling on the input fan."""
+    def f(key, shape, dtype):
+        if fan_axes is None:
+            fan = int(np.prod(shape[:-1]))
+        else:
+            fan = int(np.prod([shape[a] for a in fan_axes]))
+        std = (scale / max(fan, 1)) ** 0.5
+        return std * jax.random.normal(key, shape, dtype)
+    return f
+
+
+def uniform_scale(scale: float) -> Initializer:
+    def f(key, shape, dtype):
+        return jax.random.uniform(key, shape, dtype, -scale, scale)
+    return f
+
+
+# --- tree derivations -------------------------------------------------------
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize real parameters; keys split deterministically by path."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.init(k, d.shape, d.dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStructs only — used by the multi-pod dry-run."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def)
+
+
+def logical_axes(defs):
+    """Same-structure tree of logical-axis tuples."""
+    return jax.tree_util.tree_map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree_util.tree_leaves(defs, is_leaf=_is_def))
+
+
+def stack_layer_defs(defs, num_layers: int):
+    """Add a leading 'layers' dim to every def (scan-over-layers stacking)."""
+    def add(d: ParamDef) -> ParamDef:
+        return ParamDef((num_layers,) + d.shape, ("layers",) + d.axes,
+                        _stacked_init(d.init, num_layers), d.dtype)
+    return jax.tree_util.tree_map(add, defs, is_leaf=_is_def)
+
+
+def _stacked_init(init: Initializer, num_layers: int) -> Initializer:
+    def f(key, shape, dtype):
+        keys = jax.random.split(key, num_layers)
+        return jax.vmap(lambda k: init(k, shape[1:], dtype))(keys)
+    return f

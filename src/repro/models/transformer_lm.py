@@ -1,0 +1,257 @@
+"""Decoder-only transformer LM family.
+
+One implementation covers all four assigned LM archs via ``LMConfig``:
+
+* qwen3-32b      — dense, GQA (64q/8kv), qk-norm
+* gemma3-4b      — dense, GQA (8q/4kv), 5:1 local:global sliding window
+* qwen2-moe      — 60 routed experts top-4 + 4 shared experts
+* phi3.5-moe     — 16 routed experts top-2
+
+Layers are stacked and executed with ``lax.scan`` so the HLO (and compile
+time on the 512-device dry-run) is depth-independent; remat wraps the
+block body for training.
+
+TimeRipple does not apply to 1-D text tokens (DESIGN.md §6) — these
+models are built without the technique. ``ripple.enable_1d`` routes Q/K
+through the experimental sequence-window reuse for curiosity benchmarks
+only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import LMConfig, RippleConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models import moe as moe_lib
+from repro.models.attention import attention_defs, gqa_attention
+from repro.models.common import mlp, mlp_defs, rmsnorm, rmsnorm_defs
+from repro.models.params import (ParamDef, fan_in, normal, init_params,
+                                 abstract_params, logical_axes,
+                                 stack_layer_defs)
+from repro.utils.loops import map_chunks, scan_layers
+
+
+# --- parameter tree ----------------------------------------------------------
+
+
+def _block_defs(cfg: LMConfig):
+    hd = cfg.resolved_head_dim
+    defs = {
+        "attn_norm": rmsnorm_defs(cfg.d_model),
+        "attn": attention_defs(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                               hd, qk_norm=cfg.qk_norm),
+        "mlp_norm": rmsnorm_defs(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        defs["moe"] = moe_lib.moe_defs(cfg.d_model, cfg.moe)
+    else:
+        defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, gated=True)
+    return defs
+
+
+def lm_defs(cfg: LMConfig):
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          normal(0.02)),
+        "blocks": stack_layer_defs(_block_defs(cfg), cfg.num_layers),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), normal(0.02))
+    return defs
+
+
+def layer_windows(cfg: LMConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = global). gemma3: every (N+1)-th
+    layer is global, the rest local."""
+    if cfg.sliding_window <= 0 or cfg.local_global_pattern <= 0:
+        return np.zeros((cfg.num_layers,), np.int32)
+    pat = cfg.local_global_pattern
+    win = np.full((cfg.num_layers,), cfg.sliding_window, np.int32)
+    win[pat::pat + 1] = 0  # every (pat+1)-th layer global
+    return win
+
+
+# --- forward -----------------------------------------------------------------
+
+
+def _block(cfg: LMConfig, ctx: ShardCtx, x, bp, window, positions,
+           cache=None, cache_index=None):
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(bp["attn_norm"], x)
+    attn_out, new_cache = gqa_attention(
+        bp["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+        head_dim=hd, positions=positions, rope_theta=cfg.rope_theta,
+        sliding_window=window, cache=cache, cache_index=cache_index, ctx=ctx)
+    x = x + attn_out
+    h = rmsnorm(bp["mlp_norm"], x)
+    if cfg.moe is not None:
+        ffn_out, aux = moe_lib.moe_ffn(bp["moe"], h, cfg.moe, ctx=ctx)
+    else:
+        ffn_out, aux = mlp(bp["mlp"], h), jnp.zeros((), jnp.float32)
+    x = ctx.c(x + ffn_out, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def lm_apply(
+    params: Dict,
+    tokens: jax.Array,
+    cfg: LMConfig,
+    *,
+    ctx: ShardCtx = NULL_CTX,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    logits_mode: str = "all",  # 'all' | 'last' | 'none'
+    remat_policy: str = "full",
+):
+    """Forward pass. tokens: (B, S) int32.
+
+    With ``cache=(k, v)`` of shape (L, B, S_max, Hkv, hd) this is a
+    decode/continuation step writing at ``cache_index``.
+    Returns (logits-or-hidden, new_cache, aux_loss).
+    """
+    B, S = tokens.shape
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = ctx.c(x, ("batch", "seq", "embed"))
+    windows = jnp.asarray(layer_windows(cfg))
+    if cache is None:
+        positions = jnp.arange(S)[None, :]
+    else:
+        positions = cache_index + jnp.arange(S)[None, :]
+
+    def body(carry, layer_in):
+        x = carry
+        if cache is None:
+            bp, window = layer_in
+            x, _, aux = _block(cfg, ctx, x, bp, window, positions)
+            return x, aux
+        bp, window, (kc, vc) = layer_in
+        x, new_c, aux = _block(cfg, ctx, x, bp, window, positions,
+                               cache=(kc, vc), cache_index=cache_index)
+        return x, (aux, new_c)
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    if cache is None:
+        x, auxs = scan_layers(body, x, (params["blocks"], windows))
+        new_cache = None
+        aux = jnp.sum(auxs)
+    else:
+        x, (auxs, new_cache) = scan_layers(
+            body, x, (params["blocks"], windows, cache))
+        aux = jnp.sum(auxs)
+
+    x = rmsnorm(params["final_norm"], x)
+    if logits_mode == "none":
+        return x, new_cache, aux
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = ctx.c(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache, aux
+
+
+# Sequence-chunked cross entropy: above this many (token x vocab) cells
+# the logits never materialize for the whole sequence at once; each chunk
+# is rematerialized in the backward pass.
+_CE_CELL_BUDGET = 2048 * 65536
+_CE_CHUNK = 512
+
+
+def _ce(logits, targets):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def lm_loss(params, tokens, targets, cfg: LMConfig, *, ctx=NULL_CTX,
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            remat_policy: str = "full"):
+    """Next-token cross entropy. tokens/targets: (B, S)."""
+    B, S = tokens.shape
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+
+    if S * cfg.vocab_size <= _CE_CELL_BUDGET or S % _CE_CHUNK != 0:
+        logits, _, aux = lm_apply(params, tokens, cfg, ctx=ctx,
+                                  compute_dtype=compute_dtype, remat=remat,
+                                  remat_policy=remat_policy)
+        nll = _ce(logits, targets) / (B * S)
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    hidden, _, aux = lm_apply(params, tokens, cfg, ctx=ctx,
+                              compute_dtype=compute_dtype, remat=remat,
+                              logits_mode="none", remat_policy=remat_policy)
+
+    @jax.checkpoint
+    def chunk_ce(h_c, t_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, head)
+        logits = ctx.c(logits, ("batch", "seq", "vocab"))
+        return _ce(logits, t_c)
+
+    n = S // _CE_CHUNK
+    h = hidden.reshape(B, n, _CE_CHUNK, -1)
+    t = targets.reshape(B, n, _CE_CHUNK)
+    total = map_chunks(lambda i: chunk_ce(h[:, i], t[:, i]), n)
+    nll = jnp.sum(total) / (B * S)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# --- KV cache / serving ------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    sd = jax.ShapeDtypeStruct(shape, dtype)
+    return (sd, sd)
+
+
+def cache_logical_axes():
+    ax = ("layers", "batch", "kv_seq", "kv", None)
+    return (ax, ax)
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, max_len: int, *, ctx=NULL_CTX,
+               compute_dtype=jnp.bfloat16):
+    """Prefill: run the prompt, return (last_logits, cache at len S)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len, compute_dtype)
+    # Constrain the fresh cache like the rules dictate before the scan.
+    cache = tuple(ctx.c(c, ("layers", "batch", "kv_seq", "kv", None))
+                  for c in cache)
+    logits, new_cache, _ = lm_apply(
+        params, tokens, cfg, ctx=ctx, compute_dtype=compute_dtype,
+        cache=cache, cache_index=jnp.zeros((), jnp.int32),
+        logits_mode="last")
+    return logits, new_cache
+
+
+def lm_decode_step(params, token, cache, cache_index, cfg: LMConfig, *,
+                   ctx=NULL_CTX, compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B, 1); returns (logits (B,1,V), cache)."""
+    logits, new_cache, _ = lm_apply(
+        params, token, cfg, ctx=ctx, compute_dtype=compute_dtype,
+        cache=cache, cache_index=cache_index, logits_mode="last")
+    return logits, new_cache

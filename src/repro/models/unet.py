@@ -1,0 +1,235 @@
+"""SD1.5-style latent UNet (arXiv:2112.10752), assigned ``unet-sd15``.
+
+4 levels (ch_mult 1-2-4-4), 2 res blocks per level, spatial transformer
+blocks (self-attn + text cross-attn + geglu FF) at the attn_res
+downsample factors, mid block with attention, skip connections.
+
+TimeRipple applies to the *self*-attention of the transformer blocks in
+2-D mode on each level's (h, w) grid; cross-attention (text K/V has no
+grid) is never snapped — DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RippleConfig, UNetConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.common import linear, linear_defs, sincos_timestep_embed
+from repro.models.conv import (conv2d, conv_defs, groupnorm, groupnorm_defs,
+                               upsample_nearest)
+from repro.models.params import ParamDef, fan_in, zeros
+
+_RIPPLE_OFF = RippleConfig()
+
+
+def _resblock_defs(c_in: int, c_out: int, t_dim: int):
+    defs = {
+        "norm1": groupnorm_defs(c_in),
+        "conv1": conv_defs(3, c_in, c_out),
+        "temb": linear_defs(t_dim, c_out, axes=(None, None)),
+        "norm2": groupnorm_defs(c_out),
+        "conv2": conv_defs(3, c_out, c_out),
+    }
+    if c_in != c_out:
+        defs["skip"] = conv_defs(1, c_in, c_out)
+    return defs
+
+
+def _resblock(params, x, temb):
+    h = conv2d(params["conv1"], jax.nn.silu(groupnorm(params["norm1"], x)))
+    h = h + linear(params["temb"], jax.nn.silu(temb))[:, None, None, :]
+    h = conv2d(params["conv2"], jax.nn.silu(groupnorm(params["norm2"], h)))
+    skip = conv2d(params["skip"], x) if "skip" in params else x
+    return skip + h
+
+
+def _xformer_defs(c: int, n_heads: int, ctx_dim: int):
+    return {
+        "norm": groupnorm_defs(c),
+        "proj_in": conv_defs(1, c, c),
+        "ln1": {"scale": ParamDef((c,), (None,), lambda k, s, t: jnp.ones(s, t)),
+                "bias": ParamDef((c,), (None,), zeros)},
+        "self_attn": attention_defs(c, n_heads, n_heads, c // n_heads),
+        "ln2": {"scale": ParamDef((c,), (None,), lambda k, s, t: jnp.ones(s, t)),
+                "bias": ParamDef((c,), (None,), zeros)},
+        "cross_q": ParamDef((c, c), ("embed", "heads"), fan_in()),
+        "cross_k": ParamDef((ctx_dim, c), (None, "heads"), fan_in()),
+        "cross_v": ParamDef((ctx_dim, c), (None, "heads"), fan_in()),
+        "cross_o": ParamDef((c, c), ("heads", "embed"), fan_in()),
+        "ln3": {"scale": ParamDef((c,), (None,), lambda k, s, t: jnp.ones(s, t)),
+                "bias": ParamDef((c,), (None,), zeros)},
+        "ff1": ParamDef((c, 8 * c), ("embed", "mlp"), fan_in()),  # geglu
+        "ff2": ParamDef((4 * c, c), ("mlp", "embed"), fan_in()),
+        "proj_out": conv_defs(1, c, c),
+    }
+
+
+def _layernorm_sb(p, x):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _xformer(params, x, ctx_tokens, n_heads, ripple, step, total_steps, ctx):
+    B, H, W, C = x.shape
+    hd = C // n_heads
+    h = conv2d(params["proj_in"], groupnorm(params["norm"], x))
+    tok = h.reshape(B, H * W, C)
+    # self-attention with the ripple hook on the (1, H, W) grid
+    a = mha_ripple_attention(
+        params["self_attn"], _layernorm_sb(params["ln1"], tok),
+        n_heads=n_heads, head_dim=hd, grid=(1, H, W), ripple=ripple,
+        step=step, total_steps=total_steps, ctx=ctx)
+    tok = tok + a
+    # cross-attention to text
+    q = jnp.einsum("bnd,dh->bnh", _layernorm_sb(params["ln2"], tok),
+                   params["cross_q"].astype(tok.dtype))
+    k = jnp.einsum("bld,dh->blh", ctx_tokens, params["cross_k"].astype(tok.dtype))
+    v = jnp.einsum("bld,dh->blh", ctx_tokens, params["cross_v"].astype(tok.dtype))
+    q = q.reshape(B, -1, n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, -1, n_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, -1, n_heads, hd).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    attn = jax.nn.softmax(logits, -1).astype(tok.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", attn, v).transpose(0, 2, 1, 3)
+    o = jnp.einsum("bnh,hd->bnd", o.reshape(B, -1, C),
+                   params["cross_o"].astype(tok.dtype))
+    tok = tok + o
+    # geglu FF
+    hff = jnp.einsum("bnd,df->bnf", _layernorm_sb(params["ln3"], tok),
+                     params["ff1"].astype(tok.dtype))
+    a_, b_ = jnp.split(hff, 2, axis=-1)
+    hff = a_ * jax.nn.gelu(b_)
+    tok = tok + jnp.einsum("bnf,fd->bnd", hff, params["ff2"].astype(tok.dtype))
+    return x + conv2d(params["proj_out"], tok.reshape(B, H, W, C))
+
+
+def unet_defs(cfg: UNetConfig):
+    ch = cfg.ch
+    t_dim = ch * 4
+    chans = [ch * m for m in cfg.ch_mult]
+    defs: Dict = {
+        "t_mlp1": linear_defs(ch, t_dim, axes=(None, None)),
+        "t_mlp2": linear_defs(t_dim, t_dim, axes=(None, None)),
+        "conv_in": conv_defs(3, cfg.in_channels, ch),
+        "down": [], "up": [],
+    }
+    c_cur = ch
+    for lvl, c_out in enumerate(chans):
+        level = {"res": [], "attn": []}
+        for i in range(cfg.n_res_blocks):
+            level["res"].append(_resblock_defs(c_cur, c_out, t_dim))
+            c_cur = c_out
+            if 2 ** lvl in cfg.attn_res:
+                level["attn"].append(_xformer_defs(c_out, cfg.num_heads,
+                                                   cfg.ctx_dim))
+        if lvl < len(chans) - 1:
+            level["down"] = conv_defs(3, c_out, c_out)
+        defs["down"].append(level)
+    defs["mid"] = {
+        "res1": _resblock_defs(c_cur, c_cur, t_dim),
+        "attn": _xformer_defs(c_cur, cfg.num_heads, cfg.ctx_dim),
+        "res2": _resblock_defs(c_cur, c_cur, t_dim),
+    }
+    skip_chans = _skip_channels(cfg)
+    for lvl in reversed(range(len(chans))):
+        c_out = chans[lvl]
+        level = {"res": [], "attn": []}
+        for i in range(cfg.n_res_blocks + 1):
+            c_skip = skip_chans.pop()
+            level["res"].append(_resblock_defs(c_cur + c_skip, c_out, t_dim))
+            c_cur = c_out
+            if 2 ** lvl in cfg.attn_res:
+                level["attn"].append(_xformer_defs(c_out, cfg.num_heads,
+                                                   cfg.ctx_dim))
+        if lvl > 0:
+            level["up"] = conv_defs(3, c_out, c_out)
+        defs["up"].append(level)
+    defs["norm_out"] = groupnorm_defs(ch)
+    defs["conv_out"] = conv_defs(3, ch, cfg.in_channels)
+    return defs
+
+
+def _skip_channels(cfg: UNetConfig) -> List[int]:
+    ch = cfg.ch
+    chans = [ch * m for m in cfg.ch_mult]
+    skips = [ch]
+    c_cur = ch
+    for lvl, c_out in enumerate(chans):
+        for _ in range(cfg.n_res_blocks):
+            c_cur = c_out
+            skips.append(c_cur)
+        if lvl < len(chans) - 1:
+            skips.append(c_cur)
+    return skips
+
+
+def unet_apply(
+    params: Dict,
+    latents: jax.Array,   # (B, H_lat, W_lat, C)
+    t: jax.Array,         # (B,)
+    ctx_tokens: jax.Array,  # (B, 77, ctx_dim)
+    cfg: UNetConfig,
+    *,
+    ripple: RippleConfig = _RIPPLE_OFF,
+    step: Optional[jax.Array] = None,
+    total_steps: Optional[int] = None,
+    ctx: ShardCtx = NULL_CTX,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+) -> jax.Array:
+    dt = compute_dtype
+    x = latents.astype(dt)
+    ctx_tokens = ctx_tokens.astype(dt)
+    temb = sincos_timestep_embed(t, cfg.ch).astype(dt)
+    temb = linear(params["t_mlp2"],
+                  jax.nn.silu(linear(params["t_mlp1"], temb)))
+
+    resblock = jax.checkpoint(_resblock) if remat else _resblock
+
+    def run_xformer(p, h):
+        def fn(p_, h_):
+            # non-array config args stay in the closure (checkpoint only
+            # sees array inputs)
+            return _xformer(p_, h_, ctx_tokens, cfg.num_heads, ripple,
+                            step, total_steps, ctx)
+        return jax.checkpoint(fn)(p, h) if remat else fn(p, h)
+
+    h = conv2d(params["conv_in"], x)
+    skips = [h]
+    n_levels = len(cfg.ch_mult)
+    for lvl, level in enumerate(params["down"]):
+        for i, rp in enumerate(level["res"]):
+            h = resblock(rp, h, temb)
+            if level["attn"]:
+                h = run_xformer(level["attn"][i], h)
+            skips.append(h)
+        if "down" in level:
+            h = conv2d(level["down"], h, stride=2)
+            skips.append(h)
+
+    h = resblock(params["mid"]["res1"], h, temb)
+    h = run_xformer(params["mid"]["attn"], h)
+    h = resblock(params["mid"]["res2"], h, temb)
+
+    for idx, level in enumerate(params["up"]):
+        lvl = n_levels - 1 - idx
+        for i, rp in enumerate(level["res"]):
+            h = jnp.concatenate([h, skips.pop()], axis=-1)
+            h = resblock(rp, h, temb)
+            if level["attn"]:
+                h = run_xformer(level["attn"][i], h)
+        if "up" in level:
+            h = upsample_nearest(h, 2)
+            h = conv2d(level["up"], h)
+
+    h = jax.nn.silu(groupnorm(params["norm_out"], h))
+    return conv2d(params["conv_out"], h)

@@ -1,0 +1,84 @@
+"""ViT (arXiv:2010.11929) — assigned ``vit-l16``.
+
+Standard pre-norm encoder with a CLS token.  TimeRipple is available as
+a beyond-paper extension in 2-D mode (single forward pass ⇒ fixed
+threshold, no Eq. 4 schedule); off by default — DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RippleConfig, ViTConfig
+from repro.distributed.sharding import NULL_CTX, ShardCtx
+from repro.utils.loops import scan_layers
+from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.common import (layernorm, layernorm_defs, linear,
+                                 linear_defs, mlp, mlp_defs, patch_embed,
+                                 patch_embed_defs, sincos_pos_embed_2d)
+from repro.models.params import ParamDef, normal, stack_layer_defs
+
+_RIPPLE_OFF = RippleConfig()
+
+
+def _block_defs(cfg: ViTConfig):
+    d = cfg.d_model
+    return {
+        "ln1": layernorm_defs(d),
+        "attn": attention_defs(d, cfg.num_heads, cfg.num_heads,
+                               d // cfg.num_heads, bias=False),
+        "ln2": layernorm_defs(d),
+        "mlp": mlp_defs(d, cfg.d_ff, gated=False, bias=True),
+    }
+
+
+def vit_defs(cfg: ViTConfig):
+    return {
+        "patch": patch_embed_defs(cfg.patch, cfg.in_channels, cfg.d_model),
+        "cls": ParamDef((1, 1, cfg.d_model), (None, None, "embed"),
+                        normal(0.02)),
+        "blocks": stack_layer_defs(_block_defs(cfg), cfg.num_layers),
+        "ln_f": layernorm_defs(cfg.d_model),
+        "head": linear_defs(cfg.d_model, cfg.num_classes,
+                            axes=("embed", "vocab")),
+    }
+
+
+def vit_apply(
+    params: Dict,
+    images: jax.Array,   # (B, H, W, 3)
+    cfg: ViTConfig,
+    *,
+    ripple: RippleConfig = _RIPPLE_OFF,
+    ctx: ShardCtx = NULL_CTX,
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+) -> jax.Array:
+    dt = compute_dtype
+    B, H, W, _ = images.shape
+    h, w = H // cfg.patch, W // cfg.patch
+    x = patch_embed(params["patch"], images.astype(dt), cfg.patch)
+    pos = sincos_pos_embed_2d(h, w, cfg.d_model).astype(dt)
+    x = x + pos[None]
+    cls = jnp.broadcast_to(params["cls"].astype(dt), (B, 1, cfg.d_model))
+    x = ctx.c(jnp.concatenate([cls, x], axis=1), ("batch", "seq", "embed"))
+    hd = cfg.d_model // cfg.num_heads
+
+    def body(x, bp):
+        a = mha_ripple_attention(
+            bp["attn"], layernorm(bp["ln1"], x), n_heads=cfg.num_heads,
+            head_dim=hd, grid=(1, h, w), ripple=ripple,
+            step=jnp.zeros(()), total_steps=2, grid_slice=(1, h * w), ctx=ctx)
+        x = x + a
+        x = x + mlp(bp["mlp"], layernorm(bp["ln2"], x), act=jax.nn.gelu)
+        return ctx.c(x, ("batch", "seq", "embed")), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(body, x, params["blocks"])
+    x = layernorm(params["ln_f"], x)
+    feat = x[:, 0] if cfg.pool == "cls" else jnp.mean(x[:, 1:], axis=1)
+    return linear(params["head"], feat)

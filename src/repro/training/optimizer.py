@@ -1,0 +1,94 @@
+"""AdamW + LR schedules, built from scratch (no optax in this env).
+
+Optimizer state is fp32 regardless of the parameter dtype; the sharding
+of each state leaf follows its parameter (FSDP — the launcher maps both
+through the same logical axes)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.utils.pytree import tree_global_norm
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32zeros, params),
+        nu=jax.tree_util.tree_map(f32zeros, params),
+    )
+
+
+def abstract_adamw_state(abstract_params) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, abstract_params),
+        nu=jax.tree_util.tree_map(f32, abstract_params),
+    )
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    peak = cfg.learning_rate
+    warm = max(cfg.warmup_steps, 1)
+    total = max(cfg.total_steps, warm + 1)
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warmup = peak * step / warm
+        if cfg.schedule == "constant":
+            after = jnp.full_like(warmup, peak)
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+            after = peak * (1.0 - frac)
+        else:  # cosine
+            frac = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+            after = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warm, warmup, after)
+
+    return f
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: TrainConfig):
+    """One AdamW step with global-norm clipping. Returns
+    (new_params, new_state, metrics)."""
+    gnorm = tree_global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    step = state.step + 1
+    lr = lr_schedule(cfg)(step)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,151 @@
+"""Train-step construction + the host-side training loop.
+
+``make_train_step`` composes: loss -> grad (with optional microbatch
+accumulation via lax.scan) -> optional int8 error-feedback compression ->
+AdamW -> optional EMA, into a single jittable function whose signature is
+identical across model families:
+
+    train_step(state, batch, rng) -> (state, metrics)
+
+``TrainState`` is a NamedTuple so abstract versions can be built for the
+dry-run without touching device memory.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.distributed.collectives import (CompressionState,
+                                           abstract_compression_state,
+                                           compress_grads, compression_init)
+from repro.training.optimizer import (AdamWState, abstract_adamw_state,
+                                      adamw_init, adamw_update)
+from repro.utils.logging import get_logger
+from repro.utils.loops import scan_layers
+
+log = get_logger("train")
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    compression: Optional[CompressionState]
+    ema: Optional[Any]
+
+
+def train_state_init(params, cfg: TrainConfig) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        compression=compression_init(params) if cfg.grad_compression else None,
+        ema=jax.tree_util.tree_map(jnp.copy, params) if cfg.ema_decay else None,
+    )
+
+
+def abstract_train_state(abstract_params, cfg: TrainConfig) -> TrainState:
+    return TrainState(
+        params=abstract_params,
+        opt=abstract_adamw_state(abstract_params),
+        compression=(abstract_compression_state(abstract_params)
+                     if cfg.grad_compression else None),
+        ema=(jax.tree_util.tree_map(lambda p: p, abstract_params)
+             if cfg.ema_decay else None),
+    )
+
+
+def train_state_logical_axes(param_axes, cfg: TrainConfig) -> TrainState:
+    """Optimizer/EMA/compression state shards exactly like its param."""
+    return TrainState(
+        params=param_axes,
+        opt=AdamWState(step=(), mu=param_axes, nu=param_axes),
+        compression=(CompressionState(error=param_axes)
+                     if cfg.grad_compression else None),
+        ema=param_axes if cfg.ema_decay else None,
+    )
+
+
+def make_train_step(
+    loss_fn: Callable[..., Tuple[jax.Array, Dict]],
+    cfg: TrainConfig,
+) -> Callable:
+    """loss_fn(params, batch, rng) -> (scalar loss, metrics dict)."""
+
+    def compute_grads(params, batch, rng):
+        if cfg.grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, rng)
+            return loss, metrics, grads
+
+        # Microbatch accumulation: leading batch dim splits into
+        # (accum, micro); scan keeps peak activation memory at 1 micro.
+        def micro(carry, mb):
+            acc, rng = carry
+            rng, sub = jax.random.split(rng)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb, sub)
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            return (acc, rng), (loss, metrics)
+
+        split = lambda x: x.reshape(cfg.grad_accum,
+                                    x.shape[0] // cfg.grad_accum, *x.shape[1:])
+        micro_batch = jax.tree_util.tree_map(split, batch)
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, _), (losses, metrics) = scan_layers(
+            micro, (zero, rng), micro_batch)
+        grads = jax.tree_util.tree_map(lambda g: g / cfg.grad_accum, grads)
+        metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+        return jnp.mean(losses), metrics, grads
+
+    def step(state: TrainState, batch, rng) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = compute_grads(state.params, batch, rng)
+        compression = state.compression
+        if compression is not None:
+            grads, compression = compress_grads(grads, compression)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, cfg)
+        ema = state.ema
+        if ema is not None:
+            d = cfg.ema_decay
+            ema = jax.tree_util.tree_map(
+                lambda e, p: d * e + (1 - d) * p.astype(e.dtype),
+                ema, new_params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(new_params, new_opt, compression, ema), metrics
+
+    return step
+
+
+def run_train_loop(
+    step_fn,
+    state: TrainState,
+    batch_iter,
+    num_steps: int,
+    *,
+    rng: jax.Array,
+    checkpointer=None,
+    checkpoint_every: int = 0,
+    log_every: int = 10,
+    start_step: int = 0,
+) -> Tuple[TrainState, list]:
+    """Host loop: data feeding, metrics, periodic (async) checkpoints."""
+    history = []
+    t0 = time.time()
+    for i in range(start_step, num_steps):
+        batch = next(batch_iter)
+        rng, sub = jax.random.split(rng)
+        state, metrics = step_fn(state, batch, sub)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            log.info("step %d loss %.4f (%.2fs)", i, m.get("loss", float("nan")),
+                     time.time() - t0)
+        if checkpointer is not None and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            checkpointer.save(i + 1, state)
+    return state, history

@@ -1,0 +1,8 @@
+from repro.utils.pytree import (
+    tree_size_bytes,
+    tree_param_count,
+    tree_cast,
+    tree_zeros_like,
+    tree_global_norm,
+)
+from repro.utils.logging import get_logger

@@ -1,0 +1,76 @@
+"""Loop helpers with a dry-run unroll override.
+
+XLA's HLO cost analysis counts a ``while`` body ONCE, so any
+scan-over-layers (or chunked-attention / chunked-CE / grad-accum loop)
+hides its trip count from the roofline.  All internal loops in the
+framework go through these helpers; the dry-run sets ``unroll_mode
+('full')`` while lowering its *cost probe* so every body instance is
+explicit in the HLO and FLOPs/bytes/collective-bytes are exact.  The
+production path (default mode) keeps rolled loops — small HLO, fast
+compiles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = contextvars.ContextVar("repro_unroll", default=1)
+_COST_PROBE = contextvars.ContextVar("repro_cost_probe", default=False)
+
+
+@contextlib.contextmanager
+def unroll_mode(mode):
+    """mode: 1 (rolled, default) | int n | 'full'."""
+    tok = _UNROLL.set(mode)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+@contextlib.contextmanager
+def cost_probe_mode():
+    """Dry-run cost probe: unroll every loop AND take the un-chunked
+    (dense) attention / CE paths so HLO FLOPs/bytes/collectives are exact
+    totals.  Only ever used for lower()+compile(), never executed."""
+    t1 = _UNROLL.set("full")
+    t2 = _COST_PROBE.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(t1)
+        _COST_PROBE.reset(t2)
+
+
+def in_cost_probe() -> bool:
+    return _COST_PROBE.get()
+
+
+def _resolve(length: int):
+    mode = _UNROLL.get()
+    if mode == "full":
+        return max(length, 1)
+    return max(min(int(mode), length), 1)
+
+
+def scan_layers(body: Callable, init, xs, length: int | None = None):
+    """jax.lax.scan with the dry-run unroll override."""
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, unroll=_resolve(length))
+
+
+def map_chunks(fn: Callable, n: int):
+    """Like ``lax.map(fn, arange(n))`` but honouring the unroll override;
+    fn(i) -> pytree, stacked along a new leading axis."""
+    unroll = _resolve(n)
+    if unroll >= n:
+        outs = [fn(i) for i in range(n)]
+        return jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves, axis=0), *outs)
+    return jax.lax.map(fn, jnp.arange(n))

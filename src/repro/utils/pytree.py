@@ -1,0 +1,51 @@
+"""Pytree helpers used across the framework (no flax/chex in this env)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total size in bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype``."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_global_norm(tree):
+    """Global L2 norm over all leaves (used for gradient clipping)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)

@@ -1,0 +1,128 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the pure-jnp
+ref.py oracles (kernels execute in interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.adaln.ops import adaln_modulate
+from repro.kernels.adaln.ref import adaln_modulate_ref
+from repro.kernels.flash.ops import flash_attention
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.reuse_mask.ops import reuse_snap
+from repro.kernels.reuse_mask.ref import reuse_snap_ref
+from repro.kernels.ripple.ops import ripple_attention_pallas, ripple_block_stats
+from repro.kernels.ripple.ref import ripple_attention_ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("B,H,Nq,Nk,d,dv", [
+        (1, 1, 128, 128, 64, 64),
+        (2, 3, 256, 256, 32, 32),
+        (1, 2, 200, 333, 16, 48),   # unaligned both dims
+        (1, 1, 64, 512, 128, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, B, H, Nq, Nk, d, dv, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(Nq + Nk + d), 3)
+        q = jax.random.normal(ks[0], (B, H, Nq, d), dtype)
+        k = jax.random.normal(ks[1], (B, H, Nk, d), dtype)
+        v = jax.random.normal(ks[2], (B, H, Nk, dv), dtype)
+        out = flash_attention(q, k, v, block_q=128, block_k=128)
+        ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), atol=_tol(dtype),
+                                   rtol=1e-2)
+
+    def test_extreme_logits_stable(self):
+        q = 30.0 * jax.random.normal(jax.random.PRNGKey(0), (1, 1, 128, 32))
+        k = 30.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 1, 128, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 128, 32))
+        out = flash_attention(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def _snapped_operand(key, B, H, N, d, frac):
+    x = jax.random.normal(key, (B, H, N, d))
+    e, o = x[..., 0::2, :], x[..., 1::2, :]
+    coll = jax.random.uniform(jax.random.fold_in(key, 1),
+                              (B, H, N // 2, 1)) < frac
+    return jnp.stack([e, jnp.where(coll, e, o)], 3).reshape(B, H, N, d)
+
+
+class TestRippleKernel:
+    @pytest.mark.parametrize("N,d,frac", [
+        (256, 32, 0.0), (256, 32, 0.6), (256, 32, 1.0),
+        (512, 64, 0.9), (130, 16, 1.0),  # unaligned pairs
+    ])
+    def test_matches_snapped_oracle(self, N, d, frac):
+        q = _snapped_operand(jax.random.PRNGKey(1), 1, 2, N, d, frac)
+        k = _snapped_operand(jax.random.PRNGKey(2), 1, 2, N, d, frac)
+        v = jax.random.normal(jax.random.PRNGKey(3), (1, 2, N, d))
+        out = ripple_attention_pallas(q, k, v, block_q=64, block_k=64)
+        ref = ripple_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+    def test_structural_savings_reach_75_when_fully_collapsed(self):
+        q = _snapped_operand(jax.random.PRNGKey(4), 1, 1, 512, 32, 1.0)
+        k = _snapped_operand(jax.random.PRNGKey(5), 1, 1, 512, 32, 1.0)
+        s = float(ripple_block_stats(q, k, block_q=64, block_k=64))
+        assert abs(s - 0.75) < 1e-6
+
+    def test_zero_savings_when_nothing_collapses(self):
+        q = _snapped_operand(jax.random.PRNGKey(6), 1, 1, 512, 32, 0.0)
+        k = _snapped_operand(jax.random.PRNGKey(7), 1, 1, 512, 32, 0.0)
+        assert float(ripple_block_stats(q, k)) == 0.0
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_property_random_pair_structure(self, seed):
+        key = jax.random.PRNGKey(seed)
+        frac = float(jax.random.uniform(key))
+        q = _snapped_operand(jax.random.fold_in(key, 1), 1, 1, 128, 16, frac)
+        k = _snapped_operand(jax.random.fold_in(key, 2), 1, 1, 128, 16, frac)
+        v = jax.random.normal(jax.random.fold_in(key, 3), (1, 1, 128, 16))
+        out = ripple_attention_pallas(q, k, v, block_q=32, block_k=32)
+        ref = ripple_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+
+class TestReuseSnapKernel:
+    @pytest.mark.parametrize("N,d", [(256, 16), (300, 32), (64, 128)])
+    @pytest.mark.parametrize("theta", [0.0, 0.3, 10.0])
+    def test_matches_oracle(self, N, d, theta):
+        x = jax.random.normal(jax.random.PRNGKey(N + d), (2, 2, N, d))
+        snapped, mask = reuse_snap(x, theta, block=64)
+        ref_o, ref_m = reuse_snap_ref(x[..., 0::2, :], x[..., 1::2, :], theta)
+        np.testing.assert_allclose(np.asarray(snapped[..., 1::2, :]),
+                                   np.asarray(ref_o))
+        np.testing.assert_array_equal(np.asarray(mask[..., 1::2, :]),
+                                      np.asarray(ref_m))
+        # representatives untouched, never masked
+        np.testing.assert_array_equal(np.asarray(snapped[..., 0::2, :]),
+                                      np.asarray(x[..., 0::2, :]))
+        assert not np.asarray(mask[..., 0::2, :]).any()
+
+
+class TestAdaLNKernel:
+    @pytest.mark.parametrize("B,Ntok,d", [(2, 256, 64), (1, 100, 128),
+                                          (4, 64, 32)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, B, Ntok, d, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, Ntok, d), dtype)
+        sh = jax.random.normal(jax.random.PRNGKey(1), (B, d), dtype)
+        sc = jax.random.normal(jax.random.PRNGKey(2), (B, d), dtype)
+        out = adaln_modulate(x, sh, sc, block_t=64)
+        ref = adaln_modulate_ref(x, sh, sc)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=_tol(dtype), rtol=1e-2)
