@@ -9,6 +9,15 @@ paper's 75%/85% operating points:
   * the block-level MXU skip the Pallas kernel realizes (block 128),
   * the same after pair-major reordering along the dominant axis
     (the layout trick from DESIGN.md §4).
+
+Two dispatch-layer sections (DESIGN.md §8):
+  * ``autotune_sweep`` — drives ``core.dispatch.autotune_attention``
+    over the block-size candidates and persists the winner in the
+    on-disk cache the dispatcher reads;
+  * ``mask_pipeline_overhead`` — fused on-device reuse-mask kernel vs
+    the unfused host-side ``compute_reuse`` at the paper's
+    ``vdit_paper`` latent-grid shape, as modeled HBM traffic plus
+    measured walltime.
 """
 
 from __future__ import annotations
@@ -20,9 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import theta_for_savings
+from repro.core import dispatch as dispatch_lib
 from repro.core import reuse, savings as savings_lib
 from repro.core.collapse import pair_major_order
 from repro.data.synthetic import correlated_video_latents
+from repro.kernels.reuse_mask.ops import fused_compute_reuse
 from repro.kernels.ripple.ops import ripple_block_stats
 
 GRID = (8, 16, 16)
@@ -83,6 +94,73 @@ def run():
     return rows
 
 
+def mask_pipeline_overhead(grid=None, d=128, theta=0.35):
+    """Fused reuse-mask kernel vs the unfused host path at the paper's
+    ``vdit_paper`` shape (one head; both scale linearly in batch·heads).
+
+    HBM-traffic model: the fused kernel touches the operand once — one
+    read plus the snapped/mask writes.  The host path runs one windowed
+    pass per grid axis (read x, write per-token rep + mask each; the
+    axis-wise window reshapes defeat single-kernel fusion on TPU) and a
+    combine pass that re-reads x and the three (rep, mask) pairs to
+    emit snapped + mask.
+    """
+    if grid is None:
+        from repro.configs.vdit_paper import make_config
+        grid = make_config().model.grid()  # (32, 32, 32) at 512 res
+    n = grid[0] * grid[1] * grid[2]
+    lat = correlated_video_latents(jax.random.PRNGKey(0), 1, grid, d,
+                                   temporal_rho=0.95, spatial_smooth=2)
+    x = lat.reshape(1, 1, n, d)
+    th = {a: jnp.asarray(theta, jnp.float32) for a in ("t", "x", "y")}
+
+    # Operands must be *arguments* of the jitted functions — a nullary
+    # closure bakes them in as constants and XLA folds the whole host
+    # pipeline at compile time, timing nothing but dispatch overhead.
+    @jax.jit
+    def host(x):
+        r = reuse.compute_reuse(x, grid, th)
+        return r.snapped, r.mask
+
+    @jax.jit
+    def fused(x):
+        return fused_compute_reuse(x, grid, th)
+
+    host_us = dispatch_lib.time_best(lambda: host(x), repeats=5) * 1e6
+    fused_us = dispatch_lib.time_best(lambda: fused(x), repeats=5) * 1e6
+
+    e = x.dtype.itemsize
+    elems = x.size
+    fused_bytes = elems * (e + e + 1)               # read x, write snap+mask
+    axis_pass = elems * (e + e + 1)                 # read x, write rep+mask
+    combine = elems * (e + 3 * (e + 1) + e + 1)     # read x+3(rep,mask); write
+    host_bytes = 3 * axis_pass + combine
+    return {
+        "grid": grid, "d": d,
+        "fused_mask_bytes": fused_bytes,
+        "host_mask_bytes": host_bytes,
+        "bytes_ratio": round(fused_bytes / host_bytes, 3),
+        "fused_mask_us": round(fused_us, 1),
+        "host_mask_us": round(host_us, 1),
+        "walltime_ratio": round(fused_us / max(host_us, 1e-9), 3),
+        "fused_le_host": fused_bytes <= host_bytes,
+    }
+
+
+def autotune_sweep(n=1024, d=64):
+    """Sweep the dispatch autotuner's block candidates and persist the
+    winner in the on-disk cache ``attention_dispatch`` reads."""
+    q = correlated_video_latents(jax.random.PRNGKey(1), 1, (4, 16, 16), d,
+                                 temporal_rho=0.95).reshape(1, 1, n, d)
+    k = correlated_video_latents(jax.random.PRNGKey(2), 1, (4, 16, 16), d,
+                                 temporal_rho=0.95).reshape(1, 1, n, d)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 1, n, d))
+    entry = dispatch_lib.autotune_attention(
+        q, k, v, candidates=((64, 64), (128, 128), (256, 256)),
+        repeats=3, force=True)
+    return {"cache": dispatch_lib.autotune_cache_path(), **entry}
+
+
 def main():
     t0 = time.perf_counter()
     rows = run()
@@ -96,7 +174,24 @@ def main():
               f"mxu_skip_t={r['mxu_block_skip_tmajor']};"
               f"protected:paper={r['paper_savings_protected']},"
               f"mxu_skip={r['mxu_block_skip_protected']}")
-    return rows
+
+    m = mask_pipeline_overhead()
+    print(f"kernel_bench[mask_fusion@vdit_paper{m['grid']}xd{m['d']}],"
+          f"{m['fused_mask_us']:.0f},"
+          f"fused_bytes={m['fused_mask_bytes']};"
+          f"host_bytes={m['host_mask_bytes']};"
+          f"bytes_ratio={m['bytes_ratio']};"
+          f"fused_us={m['fused_mask_us']};host_us={m['host_mask_us']};"
+          f"walltime_ratio={m['walltime_ratio']};"
+          f"fused_le_host={m['fused_le_host']}")
+
+    a = autotune_sweep()
+    cand = ";".join(f"{c['block_q']}x{c['block_k']}={c['us']}us"
+                    for c in a["candidates"])
+    print(f"kernel_bench[autotune],{a['us']:.0f},"
+          f"best={a['block_q']}x{a['block_k']};device={a['device']};"
+          f"{cand};cache={a['cache']}")
+    return rows + [m, a]
 
 
 if __name__ == "__main__":

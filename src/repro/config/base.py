@@ -65,6 +65,16 @@ class RippleConfig:
     # skip fully-reused Q rows (DESIGN.md §4). 'reference' computes the
     # snapped attention densely (paper-faithful accounting only).
     execution: str = "reference"  # 'reference' | 'collapse'
+    # Attention backend consumed by ``core.dispatch.attention_dispatch``
+    # (DESIGN.md §8).  'auto' picks the Pallas kernel on TPU when the
+    # shape is eligible and otherwise falls back to ``execution``; the
+    # explicit values force one path ('dense' disables the pipeline).
+    backend: str = "auto"  # 'auto' | 'dense' | 'reference' | 'collapse' | 'pallas'
+    # Fused on-device Δ-check + snap (kernels/reuse_mask, DESIGN.md §8).
+    # 'auto' uses the fused kernel only where it is a win (TPU); 'on'
+    # forces it (interpret mode on CPU — tests/benchmarks), 'off' keeps
+    # the host-side jnp mask computation from ``core.reuse``.
+    fused_mask: str = "auto"  # 'auto' | 'on' | 'off'
     # Experimental 1-D reuse on LM sequence windows. Off by default and
     # not part of the reproduction claims.
     enable_1d: bool = False

@@ -15,6 +15,14 @@ from repro.core.savings import (
     attention_flops,
 )
 from repro.core.collapse import collapsed_attention, pair_flags
+from repro.core.dispatch import (
+    attention_dispatch,
+    autotune_attention,
+    DispatchPlan,
+    plan_for_shape,
+    resolve_plan,
+    shape_bucket,
+)
 from repro.core.ripple_attention import ripple_attention, RippleStats
 from repro.core.calibrate import calibrate_threshold, fit_step_sensitivity
 from repro.core.svg_mask import svg_block_mask

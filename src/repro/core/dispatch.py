@@ -1,0 +1,420 @@
+"""Unified attention dispatch — the single seam every attention-bearing
+model targets (DESIGN.md §8).
+
+``attention_dispatch(q, k, v, grid=..., cfg=..., ...)`` owns, in order:
+
+  1. **Backend selection** — dense SDPA, the dense snapped reference,
+     the exact pair-collapse math, or the block-skipping Pallas ripple
+     kernel; resolved from ``cfg.backend`` / the explicit ``backend``
+     argument, the platform, and shape eligibility.
+  2. **Mask pipeline placement** — the Fig. 6 step ①-② Δ-checks run
+     either fused on-device (``kernels/reuse_mask``) or on the host
+     (``core.reuse``), per ``cfg.fused_mask`` and grid eligibility.
+  3. **Shape bucketing** — plan lookups key on power-of-two shape
+     buckets, so nearby workload shapes share one resolved plan and the
+     jit cache does not fragment per exact token count.
+  4. **Block-size autotuning** — per (shape-bucket, backend) block sizes
+     for the Pallas kernel come from a persistent on-disk cache
+     (``REPRO_AUTOTUNE_CACHE``), populated offline by
+     :func:`autotune_attention` (benchmarks/kernel_bench.py sweeps it);
+     plan resolution never times kernels inside a trace.
+
+``core.ripple_attention.ripple_attention`` is a thin compatibility
+wrapper over this module; model code calls :func:`attention_dispatch`
+via ``models.attention.mha_attention``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RippleConfig
+from repro.core import reuse as reuse_lib
+from repro.core import savings as savings_lib
+from repro.core.collapse import collapsed_attention
+from repro.core.schedule import axis_thresholds
+from repro.core.svg_mask import svg_block_mask
+
+BACKENDS = ("auto", "dense", "reference", "collapse", "pallas")
+_DEFAULT_BLOCKS = (128, 128)
+# (block_q, block_k) candidates the autotuner sweeps; the ops-level
+# wrappers pad to block multiples so every candidate is shape-legal.
+BLOCK_CANDIDATES = ((64, 64), (128, 128), (128, 256), (256, 128),
+                    (256, 256))
+
+
+@dataclasses.dataclass
+class RippleStats:
+    savings: jax.Array             # paper accounting (partial-score reuse)
+    structural_savings: jax.Array  # realized by the collapse path
+    q_snap_frac: jax.Array
+    k_snap_frac: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Resolved execution plan for one (shape-bucket, backend) cell."""
+
+    backend: str          # 'dense' | 'reference' | 'collapse' | 'pallas'
+    block_q: int = 128
+    block_k: int = 128
+    fused_mask: bool = False
+    bucket: Tuple[int, ...] = ()
+    tuned: bool = False   # block sizes came from the autotune cache
+
+    def summary(self) -> str:
+        blk = (f" block={self.block_q}x{self.block_k}"
+               f"{' (tuned)' if self.tuned else ''}"
+               if self.backend == "pallas" else "")
+        mask = " fused-mask" if self.fused_mask else ""
+        return f"attention[{self.backend}{blk}{mask} bucket={self.bucket}]"
+
+
+def dense_attention(q, k, v, scale, bias=None):
+    """Plain SDPA; the 'dense' backend and the inactive-config path."""
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    if bias is not None:
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kv->...qv", probs.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing
+# ---------------------------------------------------------------------------
+
+
+def shape_bucket(n: int) -> int:
+    """Round up to the next power of two (min 64) — plan-cache bucket."""
+    return max(64, 1 << max(0, math.ceil(math.log2(max(n, 1)))))
+
+
+def _bucket_key(q_shape, v_shape, backend: str) -> Tuple:
+    *lead, n, d = q_shape
+    bh = math.prod(lead) if lead else 1
+    return (backend, shape_bucket(bh), shape_bucket(n), d, v_shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Persistent autotune cache
+# ---------------------------------------------------------------------------
+
+_DISK_CACHE: Optional[Dict[str, dict]] = None
+_DISK_CACHE_PATH: Optional[str] = None
+_PLAN_CACHE: Dict[Tuple, DispatchPlan] = {}
+
+
+def autotune_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_timeripple",
+                     "autotune.json"))
+
+
+def clear_plan_cache():
+    """Drop the in-memory caches (tests; after switching cache files)."""
+    global _DISK_CACHE, _DISK_CACHE_PATH
+    _DISK_CACHE = None
+    _DISK_CACHE_PATH = None
+    _PLAN_CACHE.clear()
+
+
+def _load_disk_cache(path: Optional[str] = None) -> Dict[str, dict]:
+    global _DISK_CACHE, _DISK_CACHE_PATH
+    p = path or autotune_cache_path()
+    if _DISK_CACHE is None or p != _DISK_CACHE_PATH:
+        try:
+            with open(p) as f:
+                _DISK_CACHE = json.load(f)
+        except (OSError, ValueError):
+            _DISK_CACHE = {}
+        _DISK_CACHE_PATH = p
+    return _DISK_CACHE
+
+
+def _store_disk(key: str, entry: dict, path: Optional[str] = None):
+    p = path or autotune_cache_path()
+    cache = _load_disk_cache(path)
+    cache[key] = entry
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+
+
+def autotune_key(backend: str, n_bucket: int, d: int, dv: int) -> str:
+    # Keyed by platform: block sizes tuned on a CPU interpret run must
+    # never steer the TPU kernel (and vice versa).
+    return f"{_platform()}:{backend}:n{n_bucket}:d{d}:dv{dv}"
+
+
+def autotune_attention(q, k, v, *, backend: str = "pallas",
+                       candidates: Sequence[Tuple[int, int]] = BLOCK_CANDIDATES,
+                       repeats: int = 3, cache_path: Optional[str] = None,
+                       force: bool = False,
+                       interpret: Optional[bool] = None) -> dict:
+    """Time each (block_q, block_k) candidate on *concrete* operands and
+    persist the winner keyed by the shape bucket.
+
+    Runs outside any trace (benchmarks, warm-up scripts) — never call it
+    from jitted model code; :func:`attention_dispatch` only *reads* the
+    cache it writes.  Returns the winning cache entry.
+    """
+    from repro.kernels.ripple.ops import ripple_attention_pallas
+
+    key = autotune_key(backend, shape_bucket(q.shape[-2]), q.shape[-1],
+                       v.shape[-1])
+    cache = _load_disk_cache(cache_path)
+    if key in cache and not force:
+        return cache[key]
+
+    results = []
+    for bq, bk in candidates:
+        def run(bq=bq, bk=bk):
+            return ripple_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                           interpret=interpret)
+        results.append({"block_q": bq, "block_k": bk,
+                        "us": round(time_best(run, repeats) * 1e6, 1)})
+    best = min(results, key=lambda r: r["us"])
+    entry = {**best, "device": _platform(), "candidates": results}
+    _store_disk(key, entry, cache_path)
+    _PLAN_CACHE.clear()  # plans may now resolve to the tuned blocks
+    return entry
+
+
+def time_best(fn, repeats: int = 3) -> float:
+    """Compile-and-warm once, then min-of-``repeats`` walltime in
+    seconds — the one timing idiom shared by the autotuner and the
+    kernel benchmarks."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tuned_blocks(backend: str, n: int, d: int, dv: int):
+    entry = _load_disk_cache().get(autotune_key(backend, shape_bucket(n),
+                                                d, dv))
+    if entry:
+        return int(entry["block_q"]), int(entry["block_k"]), True
+    return (*_DEFAULT_BLOCKS, False)
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution
+# ---------------------------------------------------------------------------
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def resolve_backend(cfg: RippleConfig, backend: Optional[str], *,
+                    has_bias: bool, n_tokens: int) -> str:
+    """Collapse 'auto' onto a concrete backend for this call."""
+    b = backend or cfg.backend or "auto"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")
+    if not cfg.active():
+        return "dense"
+    if b != "auto":
+        return b
+    pallas_ok = (_platform() == "tpu" and not has_bias and not cfg.svg_mask
+                 and cfg.window == 2 and n_tokens % 2 == 0)
+    if pallas_ok:
+        return "pallas"
+    return "collapse" if cfg.execution == "collapse" else "reference"
+
+
+def _fused_requested(cfg: RippleConfig) -> bool:
+    if cfg.fused_mask == "on":
+        return True
+    if cfg.fused_mask == "off":
+        return False
+    # 'auto': the fused kernel wins on TPU; in interpret mode on CPU it
+    # is correctness-representative but slower than the fused-by-XLA
+    # host path, so it stays off there.
+    return _platform() == "tpu"
+
+
+def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
+                 backend: Optional[str] = None,
+                 has_bias: bool = False) -> DispatchPlan:
+    """Shape-bucketed, cached plan resolution (trace-safe: shapes only)."""
+    n = q_shape[-2]
+    resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n)
+    key = _bucket_key(q_shape, v_shape, resolved) \
+        + (cfg.fused_mask, cfg.window, cfg.granularity)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+    if resolved == "pallas":
+        bq, bk, tuned = _tuned_blocks(resolved, n, q_shape[-1], v_shape[-1])
+    else:
+        (bq, bk), tuned = _DEFAULT_BLOCKS, False
+    plan = DispatchPlan(backend=resolved, block_q=bq, block_k=bk,
+                        fused_mask=_fused_requested(cfg),
+                        bucket=key[1:3], tuned=tuned)
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
+                   batch_heads: int = 1,
+                   backend: Optional[str] = None) -> DispatchPlan:
+    """Plan metadata for launchers/engines that only know shapes."""
+    shape = (batch_heads, n_tokens, head_dim)
+    return resolve_plan(shape, shape, cfg, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+
+
+def _zeroed_inactive(thetas: Dict[str, jax.Array],
+                     active_axes: Sequence[str]) -> Dict[str, jax.Array]:
+    out = dict(thetas)
+    for a in ("t", "x", "y"):
+        if a not in active_axes:
+            out[a] = jnp.zeros(())  # Δ ≥ 0 ⇒ never below 0 ⇒ disabled
+    return out
+
+
+def _snap_segment(seg, grid, thetas, cfg: RippleConfig, active_axes,
+                  use_fused: bool):
+    """Step ①-② on one contiguous grid segment: fused kernel when the
+    plan asks for it and the shape qualifies, host pipeline otherwise."""
+    if use_fused:
+        from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
+                                                  fused_reuse_eligible)
+        if fused_reuse_eligible(grid, window=cfg.window,
+                                granularity=cfg.granularity,
+                                axes=active_axes):
+            return fused_compute_reuse(seg, grid, thetas, axes=active_axes,
+                                       granularity=cfg.granularity)
+    r = reuse_lib.compute_reuse(
+        seg, grid, thetas, axes=active_axes, window=cfg.window,
+        granularity=cfg.granularity, channel_groups=cfg.channel_groups)
+    return r.snapped, r.mask
+
+
+def _snap_operand(x, do: bool, grid, thetas, cfg, active_axes, grid_slice,
+                  use_fused: bool):
+    if not do:
+        return x, jnp.zeros(x.shape, jnp.bool_)
+    if grid_slice is None:
+        return _snap_segment(x, grid, thetas, cfg, active_axes, use_fused)
+    s, n = grid_slice
+    seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
+    snapped_seg, mask_seg = _snap_segment(seg, grid, thetas, cfg,
+                                          active_axes, use_fused)
+    snapped = jax.lax.dynamic_update_slice_in_dim(x, snapped_seg, s, axis=-2)
+    mask = jnp.zeros(x.shape, jnp.bool_)
+    mask = jax.lax.dynamic_update_slice_in_dim(mask, mask_seg, s, axis=-2)
+    return snapped, mask
+
+
+def _svg_bias(q_s, k_s, grid, grid_slice, bias):
+    if grid_slice is None:
+        keep = svg_block_mask(q_s, k_s, grid)
+    else:
+        # classify/mask only the grid tokens; text rows/cols stay dense
+        s, n = grid_slice
+        q_seg = jax.lax.slice_in_dim(q_s, s, s + n, axis=-2)
+        k_seg = jax.lax.slice_in_dim(k_s, s, s + n, axis=-2)
+        keep_seg = svg_block_mask(q_seg, k_seg, grid)
+        N = q_s.shape[-2]
+        keep = jnp.broadcast_to(jnp.ones((N, N), jnp.bool_),
+                                q_s.shape[:-2] + (N, N))
+        keep = jax.lax.dynamic_update_slice(
+            keep, keep_seg.astype(jnp.bool_),
+            (0,) * (q_s.ndim - 2) + (s, s))
+    svg = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+    return svg if bias is None else bias + svg
+
+
+def attention_dispatch(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    grid: Tuple[int, int, int],
+    cfg: RippleConfig,
+    step: Optional[jax.Array] = None,
+    total_steps: Optional[int] = None,
+    thetas: Optional[Dict[str, jax.Array]] = None,
+    bias: Optional[jax.Array] = None,
+    grid_slice: Optional[Tuple[int, int]] = None,
+    backend: Optional[str] = None,
+    with_stats: bool = False,
+):
+    """TimeRipple attention behind one dispatch seam.
+
+    q, k, v: (..., N, head_dim), post-RoPE.  ``backend`` overrides
+    ``cfg.backend`` for this call ('dense' bypasses the reuse pipeline
+    entirely — e.g. cross-attention).  ``thetas`` overrides the Eq. 4
+    schedule (otherwise derived from ``step``/``total_steps``).  Returns
+    ``out`` or ``(out, RippleStats)``.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
+                        has_bias=bias is not None)
+    if plan.backend == "dense" or not cfg.active():
+        out = dense_attention(q, k, v, scale, bias)
+        if with_stats:
+            zero = jnp.zeros(())
+            return out, RippleStats(zero, zero, zero, zero)
+        return out
+
+    if thetas is None:
+        assert step is not None and total_steps is not None, (
+            "attention_dispatch needs explicit thetas or (step, total_steps)")
+        thetas = axis_thresholds(cfg, step, total_steps)
+    active_axes = tuple(cfg.axes)
+    thetas = _zeroed_inactive(thetas, active_axes)
+
+    q_s, q_mask = _snap_operand(q, cfg.snap_q, grid, thetas, cfg,
+                                active_axes, grid_slice, plan.fused_mask)
+    k_s, k_mask = _snap_operand(k, cfg.snap_k, grid, thetas, cfg,
+                                active_axes, grid_slice, plan.fused_mask)
+
+    if cfg.svg_mask:
+        bias = _svg_bias(q_s, k_s, grid, grid_slice, bias)
+
+    if plan.backend == "pallas":
+        # Deferred import: kernels are optional at module-import time.
+        from repro.kernels.ripple.ops import ripple_attention_pallas
+
+        out = ripple_attention_pallas(q_s, k_s, v, bias=bias,
+                                      window=cfg.window,
+                                      block_q=plan.block_q,
+                                      block_k=plan.block_k)
+    elif plan.backend == "collapse":
+        out = collapsed_attention(q_s, k_s, v, bias=bias, window=cfg.window,
+                                  scale=scale)
+    else:  # 'reference': dense attention on the snapped operands
+        out = dense_attention(q_s, k_s, v, scale, bias)
+
+    if with_stats:
+        stats = RippleStats(
+            savings=savings_lib.partial_score_savings(q_mask, k_mask),
+            structural_savings=savings_lib.collapse_savings(
+                q_mask, k_mask, cfg.window),
+            q_snap_frac=jnp.mean(q_mask.astype(jnp.float32)),
+            k_snap_frac=jnp.mean(k_mask.astype(jnp.float32)),
+        )
+        return out, stats
+    return out

@@ -1,14 +1,20 @@
-"""The drop-in TimeRipple attention module.
+"""The drop-in TimeRipple attention module (compatibility wrapper).
 
-``ripple_attention`` is what model code calls in place of plain scaled
-dot-product attention.  It runs the paper's pipeline (Fig. 6):
+``ripple_attention`` runs the paper's pipeline (Fig. 6):
 
-  ① Δ similarity checks on Q and K along the grid axes (``core.reuse``)
+  ① Δ similarity checks on Q and K along the grid axes (``core.reuse``,
+     or the fused on-device kernel — ``kernels/reuse_mask``)
   ② OR-aggregation into snap masks
   ③/④ attention with reused partial scores — realized either as the
      dense snapped oracle (`execution='reference'`), the exact
      pair-collapse math (`execution='collapse'`), or the block-skipping
      Pallas kernel (`backend='pallas'`).
+
+Since the dispatch refactor (DESIGN.md §8) the pipeline itself lives in
+``core.dispatch``; this module keeps the historical entry point and its
+``backend='jnp'|'pallas'`` convention for benchmarks, examples, and
+tests.  Model code routes through
+:func:`repro.core.dispatch.attention_dispatch` instead.
 
 Inputs are post-RoPE Q/K — the RoPE channel groups are what carry the
 spatio-temporal structure the checks exploit (paper §3.1-3.2).  When the
@@ -18,34 +24,20 @@ restricts reuse to the grid tokens; text tokens are never snapped.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.config.base import RippleConfig
-from repro.core import reuse as reuse_lib
-from repro.core import savings as savings_lib
-from repro.core.collapse import collapsed_attention, pair_flags
-from repro.core.schedule import axis_thresholds
-from repro.core.svg_mask import svg_block_mask
+from repro.core.dispatch import (RippleStats, attention_dispatch,
+                                 dense_attention)
 
-
-@dataclasses.dataclass
-class RippleStats:
-    savings: jax.Array             # paper accounting (partial-score reuse)
-    structural_savings: jax.Array  # realized by the collapse path
-    q_snap_frac: jax.Array
-    k_snap_frac: jax.Array
+__all__ = ["ripple_attention", "RippleStats"]
 
 
 def _dense_attention(q, k, v, scale, bias=None):
-    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
-    if bias is not None:
-        logits = logits + bias
-    probs = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("...qk,...kv->...qv", probs.astype(v.dtype), v)
+    # Historical alias; the implementation moved to core.dispatch.
+    return dense_attention(q, k, v, scale, bias)
 
 
 def ripple_attention(
@@ -65,86 +57,16 @@ def ripple_attention(
 ):
     """TimeRipple attention.  q,k,v: (..., N, head_dim), post-RoPE.
 
-    thetas overrides the Eq. 4 schedule (otherwise derived from
-    ``step``/``total_steps``).  Returns ``out`` or ``(out, RippleStats)``.
+    ``backend='jnp'`` executes per ``cfg.execution``; ``'pallas'`` forces
+    the ripple kernel.  thetas overrides the Eq. 4 schedule (otherwise
+    derived from ``step``/``total_steps``).  Returns ``out`` or
+    ``(out, RippleStats)``.
     """
-    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
-    if not cfg.active():
-        out = _dense_attention(q, k, v, scale, bias)
-        if with_stats:
-            zero = jnp.zeros(())
-            return out, RippleStats(zero, zero, zero, zero)
-        return out
-
-    if thetas is None:
-        assert step is not None and total_steps is not None, (
-            "ripple needs either explicit thetas or (step, total_steps)")
-        thetas = axis_thresholds(cfg, step, total_steps)
-    # Image models have no temporal axis: the t check never fires.
-    active_axes = tuple(a for a in cfg.axes)
-    for a in ("t", "x", "y"):
-        if a not in active_axes:
-            thetas = dict(thetas)
-            thetas[a] = jnp.zeros(())  # Δ ≥ 0 ⇒ never below 0 ⇒ disabled
-
-    def snap(x, do):
-        if not do:
-            return x, jnp.zeros(x.shape, jnp.bool_)
-        if grid_slice is None:
-            r = reuse_lib.compute_reuse(
-                x, grid, thetas, axes=active_axes, window=cfg.window,
-                granularity=cfg.granularity, channel_groups=cfg.channel_groups)
-            return r.snapped, r.mask
-        s, n = grid_slice
-        seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
-        r = reuse_lib.compute_reuse(
-            seg, grid, thetas, axes=active_axes, window=cfg.window,
-            granularity=cfg.granularity, channel_groups=cfg.channel_groups)
-        snapped = jax.lax.dynamic_update_slice_in_dim(x, r.snapped, s, axis=-2)
-        mask = jnp.zeros(x.shape, jnp.bool_)
-        mask = jax.lax.dynamic_update_slice_in_dim(mask, r.mask, s, axis=-2)
-        return snapped, mask
-
-    q_s, q_mask = snap(q, cfg.snap_q)
-    k_s, k_mask = snap(k, cfg.snap_k)
-
-    if cfg.svg_mask:
-        if grid_slice is None:
-            keep = svg_block_mask(q_s, k_s, grid)
-        else:
-            # classify/mask only the grid tokens; text rows/cols stay dense
-            s, n = grid_slice
-            q_seg = jax.lax.slice_in_dim(q_s, s, s + n, axis=-2)
-            k_seg = jax.lax.slice_in_dim(k_s, s, s + n, axis=-2)
-            keep_seg = svg_block_mask(q_seg, k_seg, grid)
-            N = q.shape[-2]
-            keep = jnp.broadcast_to(jnp.ones((N, N), jnp.bool_),
-                                    q_s.shape[:-2] + (N, N))
-            keep = jax.lax.dynamic_update_slice(
-                keep, keep_seg.astype(jnp.bool_),
-                (0,) * (q_s.ndim - 2) + (s, s))
-        svg_bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
-        bias = svg_bias if bias is None else bias + svg_bias
-
-    if backend == "pallas":
-        # Deferred import: kernels are optional at module-import time.
-        from repro.kernels.ripple.ops import ripple_attention_pallas
-
-        out = ripple_attention_pallas(q_s, k_s, v, bias=bias,
-                                      window=cfg.window)
-    elif cfg.execution == "collapse":
-        out = collapsed_attention(q_s, k_s, v, bias=bias, window=cfg.window,
-                                  scale=scale)
+    if backend == "jnp":
+        resolved = "collapse" if cfg.execution == "collapse" else "reference"
     else:
-        out = _dense_attention(q_s, k_s, v, scale, bias)
-
-    if with_stats:
-        stats = RippleStats(
-            savings=savings_lib.partial_score_savings(q_mask, k_mask),
-            structural_savings=savings_lib.collapse_savings(
-                q_mask, k_mask, cfg.window),
-            q_snap_frac=jnp.mean(q_mask.astype(jnp.float32)),
-            k_snap_frac=jnp.mean(k_mask.astype(jnp.float32)),
-        )
-        return out, stats
-    return out
+        resolved = backend
+    return attention_dispatch(
+        q, k, v, grid=grid, cfg=cfg, step=step, total_steps=total_steps,
+        thetas=thetas, bias=bias, grid_slice=grid_slice, backend=resolved,
+        with_stats=with_stats)

@@ -2,7 +2,8 @@
 #   flash/      baseline tiled online-softmax attention
 #   ripple/     pair-collapse block-skipping attention (the paper's reuse,
 #               restructured for the MXU — DESIGN.md §4)
-#   reuse_mask/ fused Eq.3 Δ-check + snap
+#   reuse_mask/ fused Eq.3 Δ-check + snap (single-axis pair kernel and
+#               the fused 3-axis mask pipeline — DESIGN.md §8)
 #   adaln/      fused adaLN-zero modulation (DiT hot path)
 # Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
 # interpret=True on CPU), ref.py (pure-jnp oracle).

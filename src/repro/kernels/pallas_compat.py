@@ -1,0 +1,12 @@
+"""Version tolerance for the Pallas TPU API surface the kernels use.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(jax ≥ 0.5); kernels import the symbol from here so they run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -1,17 +1,30 @@
-"""Fused Δ-check + snap Pallas kernel (paper Fig. 6 steps ①-②).
+"""Fused Δ-check + snap Pallas kernels (paper Fig. 6 steps ①-②).
 
-Computes, for adjacent window-2 pairs of tokens (pair-major layout —
-callers permute other axes into adjacency with
-``core.collapse.pair_major_order``):
+Two kernels live here:
 
-    Δ_c   = |x[2j+1, c] − x[2j, c]| / 2          (Eq. 3 for K=2)
-    snap  = Δ_c < θ
-    out[2j+1, c] = snap ? x[2j, c] : x[2j+1, c]
+* :func:`reuse_snap_kernel` — the original single-axis pair kernel.
+  Computes, for adjacent window-2 pairs of tokens (pair-major layout —
+  callers permute other axes into adjacency with
+  ``core.collapse.pair_major_order``):
 
-in one VMEM pass, emitting the snapped operand and the mask. This fuses
-what would otherwise be 5 HBM round-trips (slice, sub, abs, cmp, select)
-into one read + two writes. θ arrives via scalar prefetch so the same
-compiled kernel serves every denoising step's threshold.
+      Δ_c   = |x[2j+1, c] − x[2j, c]| / 2          (Eq. 3 for K=2)
+      snap  = Δ_c < θ
+      out[2j+1, c] = snap ? x[2j, c] : x[2j+1, c]
+
+  in one VMEM pass, emitting the snapped operand and the mask.
+
+* :func:`fused_reuse_kernel` — the full TimeRipple step ①-② pipeline
+  (DESIGN.md §8): windowed Δ checks along **all three** grid axes
+  (t, x, y) plus the OR-aggregation into the final snap mask with the
+  same first-wins axis priority as ``core.reuse.compute_reuse``, in one
+  kernel launch.  Each program owns one frame *pair* (or a slab of it),
+  so the t-partner, the y-row partner and the x-neighbour of every token
+  are all resident in the same VMEM tile and the whole check costs one
+  HBM read + two writes instead of the ~3 axis passes (slice, sub, abs,
+  cmp, repeat, select each) of the host-side path.
+
+θ arrives via scalar prefetch in both kernels so the same compiled
+kernel serves every denoising step's threshold.
 """
 
 from __future__ import annotations
@@ -22,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _reuse_kernel(theta_ref, x_e_ref, x_o_ref, out_o_ref, mask_o_ref):
@@ -65,8 +80,129 @@ def reuse_snap_kernel(x_even: jax.Array, x_odd: jax.Array, theta: jax.Array,
             jax.ShapeDtypeStruct((R, P, d), x_even.dtype),
             jax.ShapeDtypeStruct((R, P, d), jnp.int8),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
     )(theta, x_even, x_odd)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-axis Δ-check + snap (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+_AXIS_SLOT = {"t": 0, "x": 1, "y": 2}  # θ prefetch layout
+
+
+def _gate(delta, theta, granularity: str):
+    """Δ < θ at the requested granularity, broadcast back to Δ's shape."""
+    if granularity == "channel":
+        return delta < theta
+    # 'token': the mean Δ over channels gates every channel of the token.
+    ok = jnp.mean(delta, axis=-1, keepdims=True) < theta
+    return jnp.broadcast_to(ok, delta.shape)
+
+
+def _delta2(a0, a1):
+    """Window-2 Eq. 3 Δ, with the same op sequence as the host's
+    ``reuse.window_delta`` (mean, square, mean, sqrt) — algebraically
+    |a1−a0|/2, but kept bitwise-identical so a threshold can never land
+    between the two paths' roundings and flip a mask bit."""
+    m = (a0 + a1) * 0.5
+    return jnp.sqrt((jnp.square(a0 - m) + jnp.square(a1 - m)) * 0.5)
+
+
+def _fused_kernel(theta_ref, x_ref, out_ref, mask_ref,
+                  *, axes, granularity: str, width: int, with_t: bool):
+    """One program = one (frame-pair, token-slab) tile.
+
+    x_ref: (TT, block, d) with TT == 2 when the temporal check is live
+    (tile rows are the even/odd frames of one t-pair) and TT == 1 for
+    single-frame grids.  ``block`` is a multiple of ``2 * width`` so both
+    x-neighbours and both y-row partners of every token sit in-tile.
+    """
+    x = x_ref[...]
+    TT, block, d = x.shape
+    masks, reps = {}, {}
+
+    # t axis: Δ between the two frames; only the odd frame ever snaps.
+    if with_t:
+        delta_t = _delta2(x[0], x[1])
+        ok_t = _gate(delta_t, theta_ref[_AXIS_SLOT["t"]], granularity)
+        masks["t"] = jnp.stack([jnp.zeros_like(ok_t), ok_t])
+        reps["t"] = jnp.stack([x[0], x[0]])
+    else:
+        masks["t"] = jnp.zeros(x.shape, jnp.bool_)
+        reps["t"] = x
+
+    # x axis: adjacent even/odd tokens within a row.
+    xp = x.reshape(TT, block // 2, 2, d)
+    delta_x = _delta2(xp[:, :, 0], xp[:, :, 1])
+    ok_x = _gate(delta_x, theta_ref[_AXIS_SLOT["x"]], granularity)
+    masks["x"] = jnp.stack([jnp.zeros_like(ok_x), ok_x],
+                           axis=2).reshape(TT, block, d)
+    reps["x"] = jnp.broadcast_to(xp[:, :, :1], xp.shape) \
+        .reshape(TT, block, d)
+
+    # y axis: adjacent row pairs (rows are ``width`` tokens long).
+    nr = block // width
+    xr = x.reshape(TT, nr // 2, 2, width, d)
+    delta_y = _delta2(xr[:, :, 0], xr[:, :, 1])
+    ok_y = _gate(delta_y, theta_ref[_AXIS_SLOT["y"]], granularity)
+    masks["y"] = jnp.stack([jnp.zeros_like(ok_y), ok_y],
+                           axis=2).reshape(TT, block, d)
+    reps["y"] = jnp.broadcast_to(xr[:, :, :1], xr.shape) \
+        .reshape(TT, block, d)
+
+    # Step ② OR-aggregation, first-wins copy-source priority (the same
+    # semantics as core.reuse.compute_reuse — all masks derive from the
+    # *original* operand, not the progressively snapped one).
+    snapped = x
+    claimed = jnp.zeros(x.shape, jnp.bool_)
+    for a in axes:
+        take = jnp.logical_and(masks[a], jnp.logical_not(claimed))
+        snapped = jnp.where(take, reps[a], snapped)
+        claimed = jnp.logical_or(claimed, masks[a])
+    out_ref[...] = snapped
+    mask_ref[...] = claimed.astype(jnp.int8)
+
+
+def fused_reuse_kernel(x: jax.Array, thetas: jax.Array, *,
+                       axes, granularity: str, width: int, with_t: bool,
+                       block: int, interpret: bool = False):
+    """x: (G, TT, S, d) frame-pair-major grid tokens; thetas: (3,) [θt, θx, θy].
+
+    G indexes (lead × frame-pair), TT ∈ {1, 2} is the pair dim, S = H·W
+    tokens per frame.  Returns (snapped, mask:int8) shaped like x.
+    """
+    G, TT, S, d = x.shape
+    assert TT == (2 if with_t else 1)
+    assert S % block == 0 and block % (2 * width) == 0, (S, block, width)
+    grid = (G, S // block)
+
+    kernel = functools.partial(_fused_kernel, axes=tuple(axes),
+                               granularity=granularity, width=width,
+                               with_t=with_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, TT, block, d), lambda g, i, *_: (g, 0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, TT, block, d), lambda g, i, *_: (g, 0, i, 0)),
+            pl.BlockSpec((None, TT, block, d), lambda g, i, *_: (g, 0, i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((G, TT, S, d), x.dtype),
+            jax.ShapeDtypeStruct((G, TT, S, d), jnp.int8),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(thetas, x)

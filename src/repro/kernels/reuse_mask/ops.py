@@ -1,17 +1,25 @@
-"""Jitted wrapper for the fused reuse-snap kernel.
+"""Jitted wrappers for the reuse-snap kernels.
 
-Operates on (B, H, N, d) operands along adjacent window-2 pairs (permute
-with ``core.collapse.pair_major_order`` for t/y axes first).
+* :func:`reuse_snap` — single-axis adjacent-pair snap on (B, H, N, d)
+  operands (permute with ``core.collapse.pair_major_order`` for t/y axes
+  first).
+* :func:`fused_reuse_snap` / :func:`fused_compute_reuse` — the full
+  fused multi-axis Δ-check + OR-aggregated snap (DESIGN.md §8), the
+  on-device replacement for the host-side ``core.reuse.compute_reuse``
+  hot path.  :func:`fused_reuse_eligible` tells callers (the dispatch
+  layer) whether a (grid, config) combination can take the fused path.
 """
 
 from __future__ import annotations
 
 import functools
+import math
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.reuse_mask.kernel import reuse_snap_kernel
+from repro.kernels.reuse_mask.kernel import fused_reuse_kernel, reuse_snap_kernel
 
 
 def _on_tpu() -> bool:
@@ -42,3 +50,94 @@ def reuse_snap(x, theta, *, block: int = 256, interpret: bool | None = None):
     snapped = jnp.stack([xr[:, 0::2], o_o], axis=2).reshape(B * H, N, d)
     mask = jnp.stack([jnp.zeros_like(m_o), m_o], axis=2).reshape(B * H, N, d)
     return snapped.reshape(B, H, N, d), mask.reshape(B, H, N, d)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-axis path (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+# Target tokens per VMEM tile; the real block rounds down to a multiple
+# of 2·W that divides a frame.
+_TARGET_BLOCK = 2048
+
+
+def fused_reuse_eligible(grid: Tuple[int, int, int], *, window: int = 2,
+                         granularity: str = "channel",
+                         axes: Sequence[str] = ("t", "x", "y")) -> bool:
+    """Can the fused kernel reproduce ``compute_reuse`` for this setup?
+
+    Requirements: the paper's window-2 sweet spot, channel/token
+    granularity (the RoPE-'group' gate stays on the host path), even
+    spatial dims, and an even frame count whenever the temporal check is
+    active (T == 1 is fine — the t check never fires there, exactly as
+    on the host).
+    """
+    T, H, W = grid
+    if window != 2 or granularity not in ("channel", "token"):
+        return False
+    if H < 2 or H % 2 or W < 2 or W % 2:
+        return False
+    if "t" in axes and T > 1 and T % 2:
+        return False
+    if not set(axes) <= {"t", "x", "y"}:
+        return False
+    return True
+
+
+def _pick_block(H: int, W: int) -> int:
+    """Largest multiple of 2·W that divides H·W, ≲ the VMEM target."""
+    row_pairs = H // 2
+    m = max(1, min(row_pairs, _TARGET_BLOCK // (2 * W) or 1))
+    while row_pairs % m:
+        m -= 1
+    return m * 2 * W
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid", "axes", "granularity", "block", "interpret"))
+def fused_reuse_snap(x: jax.Array, thetas: jax.Array, *,
+                     grid: Tuple[int, int, int],
+                     axes: Tuple[str, ...] = ("t", "x", "y"),
+                     granularity: str = "channel",
+                     block: int = 0,
+                     interpret: bool | None = None):
+    """x: (..., N, d) grid tokens in (t, y, x) row-major order;
+    thetas: (3,) f32 in (θt, θx, θy) order.  Returns (snapped, mask:bool)
+    shaped like x — the fused equivalent of ``compute_reuse`` restricted
+    to its eligible shapes (see :func:`fused_reuse_eligible`).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    T, H, W = grid
+    *lead, N, d = x.shape
+    assert N == T * H * W, (N, grid)
+    R = math.prod(lead) if lead else 1
+    with_t = ("t" in axes) and T >= 2
+    TT = 2 if with_t else 1
+    S = H * W
+    blk = block or _pick_block(H, W)
+    x4 = x.reshape(R * (T // TT), TT, S, d)
+    th = thetas.astype(x.dtype)
+    snapped, mask = fused_reuse_kernel(
+        x4, th, axes=axes, granularity=granularity, width=W,
+        with_t=with_t, block=blk, interpret=interpret)
+    return (snapped.reshape(*lead, N, d),
+            mask.reshape(*lead, N, d).astype(jnp.bool_))
+
+
+def fused_compute_reuse(x: jax.Array, grid: Tuple[int, int, int],
+                        thetas: Dict[str, jax.Array], *,
+                        axes: Sequence[str] = ("t", "x", "y"),
+                        granularity: str = "channel",
+                        interpret: bool | None = None):
+    """Dict-theta convenience mirroring ``compute_reuse``'s signature.
+
+    Returns (snapped, mask).  Callers must have checked
+    :func:`fused_reuse_eligible` first.
+    """
+    th = jnp.stack([jnp.asarray(thetas.get(a, 0.0), jnp.float32)
+                    for a in ("t", "x", "y")])
+    return fused_reuse_snap(x, th, grid=grid, axes=tuple(axes),
+                            granularity=granularity, interpret=interpret)
+

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused reuse-snap kernel."""
+"""Pure-jnp oracles for the reuse-snap kernels."""
 
 from __future__ import annotations
 
@@ -10,3 +10,18 @@ def reuse_snap_ref(x_even, x_odd, theta):
     delta = jnp.abs(x_odd - x_even) * 0.5
     snap = delta < theta
     return jnp.where(snap, x_even, x_odd), snap.astype(jnp.int8)
+
+
+def fused_reuse_ref(x, grid, thetas, axes=("t", "x", "y"),
+                    granularity="channel"):
+    """Oracle for the fused multi-axis kernel: the host-side pipeline.
+
+    ``core.reuse.compute_reuse`` *is* the reference semantics the fused
+    kernel must reproduce bit-for-bit on its eligible shapes; the import
+    is deferred so kernel modules stay importable without the core.
+    """
+    from repro.core.reuse import compute_reuse
+
+    r = compute_reuse(x, grid, thetas, axes=axes, window=2,
+                      granularity=granularity)
+    return r.snapped, r.mask

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 _LANES = 128
 
 
@@ -180,7 +182,7 @@ def ripple_attention_kernel(
             jax.ShapeDtypeStruct((BH, nq_pairs, dv), q_even.dtype),
             jax.ShapeDtypeStruct((BH, nq_pairs, dv), q_even.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -19,7 +19,8 @@ from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.config.base import apply_overrides
 from repro.diffusion.sampler import cfg_wrap, ddim_sample, euler_flow_sample
 from repro.diffusion.schedule import DDPMSchedule
-from repro.launch.workloads import _denoise_call, model_fns  # shared path
+from repro.launch.workloads import (_denoise_call, attention_plan,
+                                    model_fns)  # shared path
 from repro.distributed.sharding import NULL_CTX
 from repro.models.params import init_params
 from repro.serving.engine import DiffusionEngine, GenRequest
@@ -81,12 +82,21 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--no-ripple", action="store_true")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=("auto", "dense", "reference", "collapse",
+                             "pallas"),
+                    help="override RippleConfig.backend for the dispatch "
+                         "layer (default: the arch config's setting)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     arch = apply_overrides(arch, args.overrides)
+    if args.attn_backend is not None:
+        arch = dataclasses.replace(
+            arch, ripple=dataclasses.replace(arch.ripple,
+                                             backend=args.attn_backend))
     shape = arch.shape(args.shape)
     m = arch.model
 
@@ -96,7 +106,8 @@ def main(argv=None):
                                          use_ripple=not args.no_ripple)
 
     engine = DiffusionEngine(sample_fn, lat_shape,
-                             max_batch=args.max_batch)
+                             max_batch=args.max_batch,
+                             attn_plan=attention_plan(arch, shape))
     engine.start()
     txt_dim = getattr(m, "txt_dim", getattr(m, "ctx_dim", 64))
     txt_tokens = getattr(m, "txt_tokens", getattr(m, "ctx_tokens", 8))

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ArchConfig, ShapeSpec, TrainConfig
+from repro.core import dispatch as dispatch_lib
 from repro.diffusion.schedule import DDPMSchedule, RectifiedFlowSchedule
 from repro.distributed import sharding as shlib
 from repro.distributed.sharding import ShardCtx
@@ -47,6 +48,10 @@ class Workload:
     # primary scan-over-layers loop, and how to probe the exact cost.
     loop_trips: int = 0
     probe: str = "two_point"  # 'two_point' | 'unroll' | 'none'
+    # resolved attention-dispatch plan for the cell's self-attention
+    # shape (diffusion generate cells; None elsewhere) — what the
+    # dry-run and the server report as the execution strategy.
+    attn_plan: Optional[dispatch_lib.DispatchPlan] = None
 
     def jitted(self):
         return jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -405,7 +410,33 @@ def _diffusion_generate(arch: ArchConfig, shape: ShapeSpec, mesh) -> Workload:
         out_shardings=bsh_lat,
         steps_multiplier=shape.steps,
         loop_trips=_diffusion_probe_info(arch)[0],
-        probe=_diffusion_probe_info(arch)[1])
+        probe=_diffusion_probe_info(arch)[1],
+        attn_plan=attention_plan(arch, shape))
+
+
+def attention_plan(arch: ArchConfig, shape: ShapeSpec):
+    """Resolved dispatch plan for the cell's joint self-attention shape.
+
+    Metadata only (the models resolve their own plans at trace time via
+    ``attention_dispatch``); UNet is skipped — its attention runs at
+    several resolutions with level-dependent head dims.
+    """
+    m = arch.model
+    fam = arch.family
+    res = shape.img_res
+    if fam == "dit":
+        n = m.num_tokens(res)
+    elif fam == "mmdit":
+        n = (res // 8 // m.patch) ** 2 + m.txt_tokens
+    elif fam == "vdit":
+        g = m.grid(img_res=res)
+        n = g[0] * g[1] * g[2] + m.txt_tokens
+    else:
+        return None
+    heads = m.num_heads
+    bh = max(shape.batch, 1) * _cfg_factor(arch) * heads
+    return dispatch_lib.plan_for_shape(n, m.d_model // heads, arch.ripple,
+                                       batch_heads=bh)
 
 
 def _cfg_factor(arch: ArchConfig) -> int:

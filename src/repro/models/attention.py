@@ -5,10 +5,12 @@ Two entry points:
 * :func:`gqa_attention` — decoder-side attention for the LM family:
   grouped-query heads, optional qk-norm, causal / sliding-window masks,
   KV-cache prefill and decode.
-* :func:`mha_ripple_attention` — bidirectional attention for the
-  diffusion / vision families with the TimeRipple hook: when a
-  :class:`RippleConfig` is active the post-RoPE Q/K go through the reuse
-  pipeline (snap → collapse/kernel) instead of plain SDPA.
+* :func:`mha_attention` — bidirectional attention for the diffusion /
+  vision families, routed through the unified dispatch layer
+  (``core.dispatch``, DESIGN.md §8): when a :class:`RippleConfig` is
+  active the post-RoPE Q/K go through the reuse pipeline (snap →
+  collapse/kernel) and the dispatcher picks the execution backend;
+  otherwise it runs the plain dense path.
 
 All activations flow through :class:`ShardCtx` constraints so the same
 code serves 1 CPU device and the 512-chip production mesh.
@@ -22,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import RippleConfig
-from repro.core.ripple_attention import ripple_attention
+from repro.core.dispatch import attention_dispatch
 from repro.distributed.sharding import NULL_CTX, ShardCtx
 from repro.models.common import rmsnorm, rmsnorm_defs
 from repro.models.params import ParamDef, fan_in
@@ -196,7 +198,7 @@ def gqa_attention(
     return ctx.c(out, ("batch", "seq", "embed")), new_cache
 
 
-def mha_ripple_attention(
+def mha_attention(
     params: Dict,
     x: jax.Array,
     *,
@@ -210,16 +212,17 @@ def mha_ripple_attention(
     rope_sin: Optional[jax.Array] = None,
     grid_slice: Optional[Tuple[int, int]] = None,
     encoder_out: Optional[jax.Array] = None,
-    backend: str = "jnp",
+    backend: Optional[str] = None,
     ctx: ShardCtx = NULL_CTX,
 ):
-    """Bidirectional MHA with the TimeRipple hook. x: (B, N, d).
+    """Bidirectional MHA through the dispatch layer. x: (B, N, d).
 
     ``encoder_out`` switches to cross-attention (K/V from the encoder;
-    ripple never applies — no grid on text tokens).
-    ``rope_cos/sin`` are precomputed factorized 3-D RoPE tables
-    (``common.rope_3d_angles``); None means no RoPE (e.g. DiT's absolute
-    sin-cos embeddings)."""
+    ripple never applies — no grid on text tokens — so the dispatcher is
+    forced onto its dense backend).  ``backend`` overrides
+    ``ripple.backend`` for this call.  ``rope_cos/sin`` are precomputed
+    factorized 3-D RoPE tables (``common.rope_3d_angles``); None means
+    no RoPE (e.g. DiT's absolute sin-cos embeddings)."""
     from repro.models.common import apply_rope_precomputed
 
     dt = x.dtype
@@ -243,16 +246,12 @@ def mha_ripple_attention(
     k = ctx.c(k.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
     v = ctx.c(v.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
 
-    use_ripple = ripple.active() and encoder_out is None
-    if use_ripple:
-        out = ripple_attention(
-            q, k, v, grid=grid, cfg=ripple, step=step,
-            total_steps=total_steps, grid_slice=grid_slice, backend=backend)
-    else:
-        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
-        logits = logits / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
-        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
-        out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    # Cross-attention has no grid to snap: force the dense backend so
+    # the dispatcher bypasses the reuse pipeline entirely.
+    eff_backend = "dense" if encoder_out is not None else backend
+    out = attention_dispatch(
+        q, k, v, grid=grid, cfg=ripple, step=step,
+        total_steps=total_steps, grid_slice=grid_slice, backend=eff_backend)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, N, n_heads * head_dim)
     out = jnp.einsum("bnh,hd->bnd", out, params["wo"].astype(dt))

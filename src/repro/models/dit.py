@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.config.base import DiTConfig, RippleConfig
 from repro.distributed.sharding import NULL_CTX, ShardCtx
 from repro.utils.loops import scan_layers
-from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.attention import attention_defs, mha_attention
 from repro.models.common import (layernorm, linear, linear_defs, mlp,
                                  mlp_defs, patch_embed, patch_embed_defs,
                                  sincos_pos_embed_2d, sincos_timestep_embed,
@@ -101,7 +101,7 @@ def dit_apply(
         ada = linear(bp["ada"], c)  # (B, 6d)
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
         h_ = _modulate(layernorm({}, x), sh1, sc1)
-        attn = mha_ripple_attention(
+        attn = mha_attention(
             bp["attn"], h_, n_heads=cfg.num_heads, head_dim=hd, grid=grid,
             ripple=ripple, step=step, total_steps=total_steps, ctx=ctx)
         x = x + g1[:, None, :] * attn

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import MMDiTConfig, RippleConfig
-from repro.core.ripple_attention import ripple_attention
+from repro.core.dispatch import attention_dispatch
 from repro.distributed.sharding import NULL_CTX, ShardCtx
 from repro.utils.loops import scan_layers
 from repro.models.common import (layernorm, linear, linear_defs,
@@ -107,8 +107,8 @@ def _joint_attention(q, k, v, rope_cos, rope_sin, grid, grid_slice, ripple,
     qT = ctx.c(q.transpose(0, 2, 1, 3), ("batch", "heads", "attn_seq", None))
     kT = ctx.c(k.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
     vT = ctx.c(v.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
-    out = ripple_attention(qT, kT, vT, grid=grid, cfg=ripple, step=step,
-                           total_steps=total_steps, grid_slice=grid_slice)
+    out = attention_dispatch(qT, kT, vT, grid=grid, cfg=ripple, step=step,
+                             total_steps=total_steps, grid_slice=grid_slice)
     B, H, N, hd = out.shape
     return out.transpose(0, 2, 1, 3).reshape(B, N, H * hd)
 

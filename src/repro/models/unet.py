@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.config.base import RippleConfig, UNetConfig
 from repro.distributed.sharding import NULL_CTX, ShardCtx
-from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.attention import attention_defs, mha_attention
 from repro.models.common import linear, linear_defs, sincos_timestep_embed
 from repro.models.conv import (conv2d, conv_defs, groupnorm, groupnorm_defs,
                                upsample_nearest)
@@ -84,7 +84,7 @@ def _xformer(params, x, ctx_tokens, n_heads, ripple, step, total_steps, ctx):
     h = conv2d(params["proj_in"], groupnorm(params["norm"], x))
     tok = h.reshape(B, H * W, C)
     # self-attention with the ripple hook on the (1, H, W) grid
-    a = mha_ripple_attention(
+    a = mha_attention(
         params["self_attn"], _layernorm_sb(params["ln1"], tok),
         n_heads=n_heads, head_dim=hd, grid=(1, H, W), ripple=ripple,
         step=step, total_steps=total_steps, ctx=ctx)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.config.base import RippleConfig, VDiTConfig
 from repro.distributed.sharding import NULL_CTX, ShardCtx
 from repro.utils.loops import scan_layers
-from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.attention import attention_defs, mha_attention
 from repro.models.common import (layernorm, linear, linear_defs, mlp,
                                  mlp_defs, rope_3d_angles,
                                  sincos_timestep_embed)
@@ -126,7 +126,7 @@ def vdit_apply(
         ada = linear(bp["ada"], c)
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
         h_ = layernorm({}, x) * (1 + sc1[:, None]) + sh1[:, None]
-        attn = mha_ripple_attention(
+        attn = mha_attention(
             bp["attn"], h_, n_heads=cfg.num_heads, head_dim=hd, grid=grid,
             ripple=ripple, step=step, total_steps=total_steps,
             rope_cos=rope_cos, rope_sin=rope_sin,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.config.base import RippleConfig, ViTConfig
 from repro.distributed.sharding import NULL_CTX, ShardCtx
 from repro.utils.loops import scan_layers
-from repro.models.attention import attention_defs, mha_ripple_attention
+from repro.models.attention import attention_defs, mha_attention
 from repro.models.common import (layernorm, layernorm_defs, linear,
                                  linear_defs, mlp, mlp_defs, patch_embed,
                                  patch_embed_defs, sincos_pos_embed_2d)
@@ -68,7 +68,7 @@ def vit_apply(
     hd = cfg.d_model // cfg.num_heads
 
     def body(x, bp):
-        a = mha_ripple_attention(
+        a = mha_attention(
             bp["attn"], layernorm(bp["ln1"], x), n_heads=cfg.num_heads,
             head_dim=hd, grid=(1, h, w), ripple=ripple,
             step=jnp.zeros(()), total_steps=2, grid_slice=(1, h * w), ctx=ctx)

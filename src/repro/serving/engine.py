@@ -5,7 +5,11 @@ up; the batcher groups compatible requests (same steps / resolution) into
 one jitted sampler invocation; the denoising loop threads the step index
 into TimeRipple's Eq. 4 schedule — acceleration happens *per step* with
 no per-request state, which is why the paper's method needs no KV-style
-cache and adds no serving memory (Tbl. 2 Mem column).
+cache and adds no serving memory (Tbl. 2 Mem column).  Attention inside
+the sampler routes through ``core.dispatch.attention_dispatch``
+(DESIGN.md §8); launchers hand the engine the resolved
+:class:`~repro.core.dispatch.DispatchPlan` so the serving log records
+which backend/block sizes the traffic actually runs on.
 
 LMEngine: KV-cache prefill + decode loop (used by the decode_32k /
 long_500k shape cells and the LM serving example).
@@ -49,11 +53,13 @@ class DiffusionEngine:
     the model, sampler, and RippleConfig baked in (steps static)."""
 
     def __init__(self, sample_fn: Callable, latent_shape: Tuple[int, ...],
-                 max_batch: int = 8, max_wait_s: float = 0.05):
+                 max_batch: int = 8, max_wait_s: float = 0.05,
+                 attn_plan: Optional[Any] = None):
         self.sample_fn = sample_fn
         self.latent_shape = latent_shape
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.attn_plan = attn_plan  # DispatchPlan metadata (or None)
         self._q: "queue.Queue[GenRequest]" = queue.Queue()
         self._results: Dict[int, GenResult] = {}
         self._lock = threading.Condition()
@@ -63,6 +69,8 @@ class DiffusionEngine:
     # -- public API -----------------------------------------------------------
 
     def start(self):
+        if self.attn_plan is not None:
+            log.info("engine attention plan: %s", self.attn_plan.summary())
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 

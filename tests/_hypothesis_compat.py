@@ -1,0 +1,57 @@
+"""Fallback when `hypothesis` is not installed: property tests degrade
+to fixed-example tests.
+
+``st.floats(lo, hi)`` / ``st.integers(lo, hi)`` become three fixed
+examples (lo, midpoint, hi) and ``@given`` runs the test body once per
+combination.  This keeps the suite collectible and the properties
+spot-checked on bare environments; install ``hypothesis`` for real
+randomized search.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = examples
+
+
+class st:  # mirrors `hypothesis.strategies`
+    @staticmethod
+    def floats(lo, hi):
+        return _Strategy([lo, (lo + hi) / 2.0, hi])
+
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy([lo, (lo + hi) // 2, hi])
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategies):
+    names = sorted(strategies)
+    combos = list(itertools.product(*(strategies[n].examples for n in names)))
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kw):
+            for combo in combos:
+                fn(*args, **dict(zip(names, combo)), **kw)
+
+        # Hide the strategy parameters from pytest's fixture resolution
+        # (functools.wraps exposes the original signature otherwise).
+        sig = inspect.signature(fn)
+        params = [p for n, p in sig.parameters.items() if n not in names]
+        run.__signature__ = sig.replace(parameters=params)
+        del run.__wrapped__
+        return run
+
+    return deco

@@ -1,0 +1,224 @@
+"""Tests for the unified attention-dispatch layer (DESIGN.md §8):
+backend equivalence, fused-mask parity, shape bucketing, and the
+autotune-cache round trip."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import RippleConfig
+from repro.core import dispatch
+from repro.core.dispatch import (attention_dispatch, autotune_attention,
+                                 dense_attention, resolve_plan, shape_bucket)
+from repro.core.reuse import compute_reuse
+from repro.core.ripple_attention import ripple_attention
+from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
+                                          fused_reuse_eligible)
+
+GRID = (4, 4, 6)
+N = GRID[0] * GRID[1] * GRID[2]
+D = 16
+
+CFG = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                   i_min=2, i_max=6)
+
+
+def _qkv(seed=0, shape=(2, 3, N, D)):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, shape) for k in ks)
+
+
+class TestBackendEquivalence:
+    """Dispatch output matches the direct ripple_attention paths."""
+
+    STEP = jnp.asarray(5)
+
+    def _dispatch(self, backend, cfg=CFG, **kw):
+        q, k, v = _qkv(1)
+        return attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                  step=self.STEP, total_steps=10,
+                                  backend=backend, **kw)
+
+    def test_reference_matches_direct(self):
+        q, k, v = _qkv(1)
+        direct = ripple_attention(q, k, v, grid=GRID, cfg=CFG,
+                                  step=self.STEP, total_steps=10)
+        np.testing.assert_allclose(np.asarray(self._dispatch("reference")),
+                                   np.asarray(direct), atol=1e-6)
+
+    def test_collapse_matches_direct(self):
+        q, k, v = _qkv(1)
+        cfg = dataclasses.replace(CFG, execution="collapse")
+        direct = ripple_attention(q, k, v, grid=GRID, cfg=cfg,
+                                  step=self.STEP, total_steps=10)
+        np.testing.assert_allclose(np.asarray(self._dispatch("collapse")),
+                                   np.asarray(direct), atol=3e-5)
+
+    def test_pallas_matches_direct(self):
+        q, k, v = _qkv(1)
+        direct = ripple_attention(q, k, v, grid=GRID, cfg=CFG,
+                                  step=self.STEP, total_steps=10,
+                                  backend="pallas")
+        np.testing.assert_allclose(np.asarray(self._dispatch("pallas")),
+                                   np.asarray(direct), atol=3e-5)
+
+    def test_backends_agree_with_each_other(self):
+        ref = self._dispatch("reference")
+        for b in ("collapse", "pallas"):
+            np.testing.assert_allclose(np.asarray(self._dispatch(b)),
+                                       np.asarray(ref), atol=3e-5)
+
+    def test_dense_backend_bypasses_pipeline(self):
+        q, k, v = _qkv(1)
+        out = self._dispatch("dense")
+        ref = dense_attention(q, k, v, 1.0 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+    def test_inactive_cfg_is_dense(self):
+        q, k, v = _qkv(2)
+        out = attention_dispatch(q, k, v, grid=GRID, cfg=RippleConfig())
+        ref = dense_attention(q, k, v, 1.0 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError):
+            self._dispatch("cudnn")
+
+    def test_grid_slice_and_stats(self):
+        L = 8
+        q, k, v = _qkv(3, (1, 2, L + N, D))
+        out, stats = attention_dispatch(
+            q, k, v, grid=GRID, cfg=CFG, step=self.STEP, total_steps=10,
+            grid_slice=(L, N), with_stats=True)
+        ref, ref_stats = ripple_attention(
+            q, k, v, grid=GRID, cfg=CFG, step=self.STEP, total_steps=10,
+            grid_slice=(L, N), with_stats=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+        assert float(stats.savings) == pytest.approx(float(ref_stats.savings))
+
+
+class TestFusedMask:
+    """The fused Pallas Δ-check/snap kernel is bit-exact vs the host."""
+
+    @pytest.mark.parametrize("grid,lead", [
+        ((4, 4, 6), (2, 3)),
+        ((1, 4, 8), (1, 2)),   # single frame: t check never fires
+        ((2, 2, 2), ()),
+    ])
+    @pytest.mark.parametrize("granularity", ["channel", "token"])
+    def test_matches_host_pipeline(self, grid, lead, granularity):
+        n = grid[0] * grid[1] * grid[2]
+        x = jax.random.normal(jax.random.PRNGKey(0), (*lead, n, D))
+        th = {a: jnp.asarray(0.6, jnp.float32) for a in ("t", "x", "y")}
+        assert fused_reuse_eligible(grid, granularity=granularity)
+        r = compute_reuse(x, grid, th, granularity=granularity)
+        s, m = fused_compute_reuse(x, grid, th, granularity=granularity)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(r.mask))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(r.snapped))
+
+    def test_axis_priority_matches_host(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, N, D))
+        th = {a: jnp.asarray(0.9, jnp.float32) for a in ("t", "x", "y")}
+        for axes in (("t", "x", "y"), ("y", "t", "x"), ("x",)):
+            r = compute_reuse(x, GRID, th, axes=axes)
+            s, m = fused_compute_reuse(x, GRID, th, axes=axes)
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(r.snapped))
+
+    def test_ineligible_shapes_fall_back(self):
+        # odd spatial dims / odd frame counts / group granularity
+        assert not fused_reuse_eligible((4, 3, 4))
+        assert not fused_reuse_eligible((3, 4, 4))      # odd T with t check
+        assert fused_reuse_eligible((3, 4, 4), axes=("x", "y"))
+        assert not fused_reuse_eligible((4, 4, 4), granularity="group")
+        assert not fused_reuse_eligible((4, 4, 4), window=4)
+
+    def test_dispatch_fused_on_equals_host_path(self):
+        q, k, v = _qkv(4)
+        kw = dict(grid=GRID, step=jnp.asarray(5), total_steps=10)
+        host = attention_dispatch(
+            q, k, v, cfg=dataclasses.replace(CFG, fused_mask="off"), **kw)
+        fused = attention_dispatch(
+            q, k, v, cfg=dataclasses.replace(CFG, fused_mask="on"), **kw)
+        np.testing.assert_array_equal(np.asarray(host), np.asarray(fused))
+
+
+class TestPlansAndBuckets:
+    def test_shape_bucket_powers_of_two(self):
+        assert shape_bucket(1) == 64
+        assert shape_bucket(96) == 128
+        assert shape_bucket(128) == 128
+        assert shape_bucket(129) == 256
+        assert shape_bucket(32768) == 32768
+
+    def test_nearby_shapes_share_plan(self):
+        p1 = resolve_plan((2, 3, 96, D), (2, 3, 96, D), CFG)
+        p2 = resolve_plan((2, 3, 100, D), (2, 3, 100, D), CFG)
+        assert p1 is p2  # same bucket -> same cached plan object
+
+    def test_auto_backend_on_cpu_follows_execution(self):
+        p = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG)
+        assert p.backend == "reference"
+        cfg = dataclasses.replace(CFG, execution="collapse")
+        p = resolve_plan((1, 1, N, D), (1, 1, N, D), cfg)
+        assert p.backend == "collapse"
+
+    def test_inactive_resolves_dense(self):
+        p = resolve_plan((1, 1, N, D), (1, 1, N, D), RippleConfig())
+        assert p.backend == "dense"
+
+    def test_plan_summary_prints(self):
+        s = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG).summary()
+        assert "reference" in s
+
+
+class TestAutotuneCache:
+    def test_round_trip(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "autotune.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+        dispatch.clear_plan_cache()
+        try:
+            n, d = 64, 8
+            q, k, v = _qkv(0, (1, 1, n, d))
+            entry = autotune_attention(
+                q, k, v, candidates=((16, 16), (32, 32)), repeats=1)
+            assert (entry["block_q"], entry["block_k"]) in ((16, 16), (32, 32))
+            assert len(entry["candidates"]) == 2
+
+            # persisted on disk, keyed by the shape bucket
+            disk = json.load(open(path))
+            key = dispatch.autotune_key("pallas", shape_bucket(n), d, d)
+            assert disk[key]["block_q"] == entry["block_q"]
+
+            # a fresh in-memory cache resolves the tuned plan from disk
+            dispatch.clear_plan_cache()
+            plan = resolve_plan((1, 1, n, d), (1, 1, n, d), CFG,
+                                backend="pallas")
+            assert plan.tuned
+            assert (plan.block_q, plan.block_k) == (entry["block_q"],
+                                                    entry["block_k"])
+
+            # second autotune call is a cache hit (no re-timing)
+            again = autotune_attention(q, k, v,
+                                       candidates=((16, 16), (32, 32)))
+            assert again == disk[key]
+        finally:
+            dispatch.clear_plan_cache()  # drop tmp-path state for other tests
+
+    def test_untuned_shapes_use_defaults(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "empty.json"))
+        dispatch.clear_plan_cache()
+        try:
+            plan = resolve_plan((1, 1, 512, 32), (1, 1, 512, 32), CFG,
+                                backend="pallas")
+            assert not plan.tuned
+            assert (plan.block_q, plan.block_k) == (128, 128)
+        finally:
+            dispatch.clear_plan_cache()
