@@ -16,9 +16,10 @@ def main() -> None:
     quick = "--quick" in sys.argv
     print("name,us_per_call,derived")
     from benchmarks import (fig7_mse, fig9_steps, fig11_window,
-                            kernel_bench, tbl3_ablation, tbl4_channelwise)
+                            kernel_bench, serve_mixed, tbl3_ablation,
+                            tbl4_channelwise)
     mods = [fig7_mse, fig9_steps, fig11_window, tbl3_ablation,
-            tbl4_channelwise, kernel_bench]
+            tbl4_channelwise, kernel_bench, serve_mixed]
     if not quick:
         from benchmarks import tbl2_savings
         mods.insert(0, tbl2_savings)

@@ -2,9 +2,11 @@
 serve a small video-DiT with batched requests, TimeRipple ON vs OFF.
 
 Trains a miniature vDiT briefly on correlated synthetic latents so its
-attention is meaningful, then runs the batched serving engine both ways
+attention is meaningful, then runs the bucketed serving engine both ways
 and reports per-request latency, realized reuse savings per denoising
-step, and dense-vs-ripple output PSNR.
+step, and dense-vs-ripple output PSNR.  ``--mesh DxM`` (with enough
+devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8) runs
+the attention dispatch sharded under shard_map (DESIGN.md §10).
 
     PYTHONPATH=src python examples/serve_video.py [--steps 20] [--requests 4]
 """
@@ -19,7 +21,9 @@ import numpy as np
 
 from repro.config.base import ShapeSpec
 from repro.configs import get_smoke_config
+from repro.core import dispatch as dispatch_lib
 from repro.data.synthetic import DataSpec, latent_video_batch
+from repro.launch.mesh import parse_mesh_spec
 from repro.launch.serve import build_sampler
 from repro.launch.workloads import build_workload, model_fns
 from repro.models.params import init_params
@@ -56,7 +60,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="(data, model) mesh for sharded attention "
+                         "dispatch, e.g. 2x1")
     args = ap.parse_args()
+
+    if args.mesh:
+        dispatch_lib.set_dispatch_mesh(parse_mesh_spec(args.mesh))
 
     arch = get_smoke_config("vdit-paper")
     shape = ShapeSpec(name="mini", kind="train", img_res=32, batch=4,

@@ -18,9 +18,12 @@ from repro.core.collapse import collapsed_attention, pair_flags
 from repro.core.dispatch import (
     attention_dispatch,
     autotune_attention,
+    active_dispatch_mesh,
+    dispatch_mesh,
     DispatchPlan,
     plan_for_shape,
     resolve_plan,
+    set_dispatch_mesh,
     shape_bucket,
 )
 from repro.core.ripple_attention import ripple_attention, RippleStats

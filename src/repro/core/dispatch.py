@@ -22,19 +22,33 @@ model targets (DESIGN.md §8).
 ``core.ripple_attention.ripple_attention`` is a thin compatibility
 wrapper over this module; model code calls :func:`attention_dispatch`
 via ``models.attention.mha_attention``.
+
+When a mesh is active (:func:`dispatch_mesh` / :func:`set_dispatch_mesh`
+— the serving launchers install one), plan resolution additionally
+records **batch/head sharding**: the leading batch dim shards over the
+(pod, data) axes and the heads dim over 'model' whenever they divide,
+and the whole pipeline — Δ-check mask computation included — runs under
+``shard_map`` with the mask computed *per shard*.  The reuse windows run
+along the t/x/y token axes, never along batch or heads, so the halo for
+the sharded axes is exactly zero and per-shard results are bitwise equal
+to the single-device path (DESIGN.md §10).  Indivisible shapes fall back
+to replicated execution with the same plan cache entry semantics.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import math
 import os
 import time
+from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config.base import RippleConfig
 from repro.core import reuse as reuse_lib
@@ -69,13 +83,26 @@ class DispatchPlan:
     fused_mask: bool = False
     bucket: Tuple[int, ...] = ()
     tuned: bool = False   # block sizes came from the autotune cache
+    # Mesh sharding (DESIGN.md §10): which mesh axes shard the leading
+    # batch dim / the heads dim; () / None means replicated execution.
+    batch_axes: Tuple[str, ...] = ()
+    head_axis: Optional[str] = None
+    batch_shards: int = 1
+    head_shards: int = 1
+
+    @property
+    def sharded(self) -> bool:
+        return self.batch_shards * self.head_shards > 1
 
     def summary(self) -> str:
         blk = (f" block={self.block_q}x{self.block_k}"
                f"{' (tuned)' if self.tuned else ''}"
                if self.backend == "pallas" else "")
         mask = " fused-mask" if self.fused_mask else ""
-        return f"attention[{self.backend}{blk}{mask} bucket={self.bucket}]"
+        shard = (f" shard=batch{self.batch_shards}x"
+                 f"heads{self.head_shards}" if self.sharded else "")
+        return (f"attention[{self.backend}{blk}{mask}{shard} "
+                f"bucket={self.bucket}]")
 
 
 def dense_attention(q, k, v, scale, bias=None):
@@ -104,12 +131,77 @@ def _bucket_key(q_shape, v_shape, backend: str) -> Tuple:
 
 
 # ---------------------------------------------------------------------------
+# Active mesh (installed by launchers/engines; consulted by plan resolution)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_dispatch_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
+    """Install ``mesh`` as the dispatch-layer mesh; returns the previous
+    one.  ``None`` restores single-device (replicated) execution."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    return prev
+
+
+def active_dispatch_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def dispatch_mesh(mesh: Optional[Mesh]):
+    """Scoped :func:`set_dispatch_mesh` (tests, benchmarks)."""
+    prev = set_dispatch_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_dispatch_mesh(prev)
+
+
+def _mesh_key(mesh: Optional[Mesh]) -> Optional[Tuple]:
+    if mesh is None:
+        return None
+    return tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def _resolve_sharding(mesh: Optional[Mesh], q_shape) -> Tuple:
+    """(batch_axes, head_axis, batch_shards, head_shards) for q_shape.
+
+    Greedy prefix of the (pod, data) axes that divides the leading batch
+    dim; heads (dim 1 of a 4-D operand) shard over 'model' when they
+    divide.  Anything indivisible stays replicated — never an error.
+    """
+    if mesh is None or len(q_shape) < 3:
+        return (), None, 1, 1
+    b_axes = []
+    b_shards = 1
+    B = q_shape[0]
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n = int(mesh.shape[a])
+            if n > 1 and B % (b_shards * n) == 0:
+                b_axes.append(a)
+                b_shards *= n
+    head_axis, h_shards = None, 1
+    if len(q_shape) >= 4 and "model" in mesh.axis_names:
+        n = int(mesh.shape["model"])
+        if n > 1 and q_shape[1] % n == 0:
+            head_axis, h_shards = "model", n
+    return tuple(b_axes), head_axis, b_shards, h_shards
+
+
+# ---------------------------------------------------------------------------
 # Persistent autotune cache
 # ---------------------------------------------------------------------------
 
 _DISK_CACHE: Optional[Dict[str, dict]] = None
 _DISK_CACHE_PATH: Optional[str] = None
-_PLAN_CACHE: Dict[Tuple, DispatchPlan] = {}
+# Bounded LRU: resolve_plan moves hits to the MRU end and evicts from the
+# LRU end past the cap, so the hottest plans always survive eviction.
+_PLAN_CACHE: "OrderedDict[Tuple, DispatchPlan]" = OrderedDict()
+_PLAN_CACHE_CAP = int(os.environ.get("REPRO_PLAN_CACHE_CAP", "256"))
 
 
 def autotune_cache_path() -> str:
@@ -251,32 +343,59 @@ def _fused_requested(cfg: RippleConfig) -> bool:
 
 def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
                  backend: Optional[str] = None,
-                 has_bias: bool = False) -> DispatchPlan:
-    """Shape-bucketed, cached plan resolution (trace-safe: shapes only)."""
+                 has_bias: bool = False,
+                 mesh: Optional[Mesh] = None) -> DispatchPlan:
+    """Shape-bucketed, cached plan resolution (trace-safe: shapes only).
+
+    ``mesh`` defaults to the active dispatch mesh; when one is present
+    the cache keys on the *exact* leading dims (sharding eligibility is
+    a divisibility property, not a bucket property) plus the mesh shape.
+    """
+    if mesh is None:
+        mesh = _ACTIVE_MESH
     n = q_shape[-2]
     resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n)
     key = _bucket_key(q_shape, v_shape, resolved) \
         + (cfg.fused_mask, cfg.window, cfg.granularity)
+    if mesh is not None:
+        key = key + (_mesh_key(mesh), tuple(q_shape[:-2]))
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
         return plan
     if resolved == "pallas":
         bq, bk, tuned = _tuned_blocks(resolved, n, q_shape[-1], v_shape[-1])
     else:
         (bq, bk), tuned = _DEFAULT_BLOCKS, False
+    b_axes, h_axis, b_shards, h_shards = (
+        _resolve_sharding(mesh, q_shape) if resolved != "dense"
+        else ((), None, 1, 1))
     plan = DispatchPlan(backend=resolved, block_q=bq, block_k=bk,
                         fused_mask=_fused_requested(cfg),
-                        bucket=key[1:3], tuned=tuned)
+                        bucket=key[1:3], tuned=tuned,
+                        batch_axes=b_axes, head_axis=h_axis,
+                        batch_shards=b_shards, head_shards=h_shards)
     _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+        _PLAN_CACHE.popitem(last=False)
     return plan
 
 
 def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
-                   batch_heads: int = 1,
-                   backend: Optional[str] = None) -> DispatchPlan:
-    """Plan metadata for launchers/engines that only know shapes."""
-    shape = (batch_heads, n_tokens, head_dim)
-    return resolve_plan(shape, shape, cfg, backend=backend)
+                   batch_heads: int = 1, heads: int = 0,
+                   backend: Optional[str] = None,
+                   mesh: Optional[Mesh] = None) -> DispatchPlan:
+    """Plan metadata for launchers/engines that only know shapes.
+
+    ``heads`` (when it divides ``batch_heads``) splits the flattened
+    leading dim into (batch, heads) so mesh head-sharding is visible in
+    the returned plan.
+    """
+    if heads and batch_heads % heads == 0:
+        shape = (batch_heads // heads, heads, n_tokens, head_dim)
+    else:
+        shape = (batch_heads, n_tokens, head_dim)
+    return resolve_plan(shape, shape, cfg, backend=backend, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -346,46 +465,13 @@ def _svg_bias(q_s, k_s, grid, grid_slice, bias):
     return svg if bias is None else bias + svg
 
 
-def attention_dispatch(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    *,
-    grid: Tuple[int, int, int],
-    cfg: RippleConfig,
-    step: Optional[jax.Array] = None,
-    total_steps: Optional[int] = None,
-    thetas: Optional[Dict[str, jax.Array]] = None,
-    bias: Optional[jax.Array] = None,
-    grid_slice: Optional[Tuple[int, int]] = None,
-    backend: Optional[str] = None,
-    with_stats: bool = False,
-):
-    """TimeRipple attention behind one dispatch seam.
-
-    q, k, v: (..., N, head_dim), post-RoPE.  ``backend`` overrides
-    ``cfg.backend`` for this call ('dense' bypasses the reuse pipeline
-    entirely — e.g. cross-attention).  ``thetas`` overrides the Eq. 4
-    schedule (otherwise derived from ``step``/``total_steps``).  Returns
-    ``out`` or ``(out, RippleStats)``.
+def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
+                  grid, cfg: RippleConfig, grid_slice, active_axes):
+    """Fig. 6 steps ①-④ for one resolved plan: snap Q/K, optional SVG
+    bias, then the planned backend.  Returns (out, q_mask, k_mask).
+    Shard-oblivious: runs identically on the full operands or on one
+    shard_map shard (the Δ-checks only look along t/x/y, DESIGN.md §10).
     """
-    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
-    plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
-                        has_bias=bias is not None)
-    if plan.backend == "dense" or not cfg.active():
-        out = dense_attention(q, k, v, scale, bias)
-        if with_stats:
-            zero = jnp.zeros(())
-            return out, RippleStats(zero, zero, zero, zero)
-        return out
-
-    if thetas is None:
-        assert step is not None and total_steps is not None, (
-            "attention_dispatch needs explicit thetas or (step, total_steps)")
-        thetas = axis_thresholds(cfg, step, total_steps)
-    active_axes = tuple(cfg.axes)
-    thetas = _zeroed_inactive(thetas, active_axes)
-
     q_s, q_mask = _snap_operand(q, cfg.snap_q, grid, thetas, cfg,
                                 active_axes, grid_slice, plan.fused_mask)
     k_s, k_mask = _snap_operand(k, cfg.snap_k, grid, thetas, cfg,
@@ -407,6 +493,103 @@ def attention_dispatch(
                                   scale=scale)
     else:  # 'reference': dense attention on the snapped operands
         out = dense_attention(q_s, k_s, v, scale, bias)
+    return out, q_mask, k_mask
+
+
+def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
+    """PartitionSpec for a (..., N, d) attention operand under ``plan``."""
+    entries: list = [None] * ndim
+    if plan.batch_axes:
+        entries[0] = (plan.batch_axes if len(plan.batch_axes) > 1
+                      else plan.batch_axes[0])
+    if plan.head_axis is not None and ndim >= 4:
+        entries[1] = plan.head_axis
+    return P(*entries)
+
+
+def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
+                      mesh: Mesh, grid, cfg: RippleConfig, grid_slice,
+                      active_axes):
+    """Run :func:`_run_pipeline` under shard_map over the plan's batch /
+    head axes.  No collectives: the sharded axes never carry a reuse
+    window, so each shard's Δ-check mask is self-contained (zero halo)
+    and the result is bitwise-identical to the replicated path."""
+    from jax.experimental.shard_map import shard_map
+
+    spec = _operand_spec(plan, q.ndim)
+    th_vec = jnp.stack([jnp.asarray(thetas[a], jnp.float32)
+                        for a in ("t", "x", "y")])
+    scale = jnp.asarray(scale, jnp.float32)
+
+    def body(qs, ks, vs, th, sc):
+        th_d = {"t": th[0], "x": th[1], "y": th[2]}
+        out, _, _ = _run_pipeline(qs, ks, vs, th_d, sc, None, plan=plan,
+                                  grid=grid, cfg=cfg, grid_slice=grid_slice,
+                                  active_axes=active_axes)
+        return out
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec, P(), P()),
+                   out_specs=spec, check_rep=False)
+    return fn(q, k, v, th_vec, scale)
+
+
+def attention_dispatch(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    grid: Tuple[int, int, int],
+    cfg: RippleConfig,
+    step: Optional[jax.Array] = None,
+    total_steps: Optional[int] = None,
+    thetas: Optional[Dict[str, jax.Array]] = None,
+    bias: Optional[jax.Array] = None,
+    grid_slice: Optional[Tuple[int, int]] = None,
+    backend: Optional[str] = None,
+    mesh: Optional[Mesh] = None,
+    with_stats: bool = False,
+):
+    """TimeRipple attention behind one dispatch seam.
+
+    q, k, v: (..., N, head_dim), post-RoPE.  ``backend`` overrides
+    ``cfg.backend`` for this call ('dense' bypasses the reuse pipeline
+    entirely — e.g. cross-attention).  ``thetas`` overrides the Eq. 4
+    schedule (otherwise derived from ``step``/``total_steps``).  ``mesh``
+    overrides the active dispatch mesh; when the resolved plan carries
+    sharding, the pipeline runs under shard_map (DESIGN.md §10).
+    Returns ``out`` or ``(out, RippleStats)``.
+    """
+    if mesh is None:
+        mesh = _ACTIVE_MESH
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
+                        has_bias=bias is not None, mesh=mesh)
+    if plan.backend == "dense" or not cfg.active():
+        out = dense_attention(q, k, v, scale, bias)
+        if with_stats:
+            zero = jnp.zeros(())
+            return out, RippleStats(zero, zero, zero, zero)
+        return out
+
+    if thetas is None:
+        assert step is not None and total_steps is not None, (
+            "attention_dispatch needs explicit thetas or (step, total_steps)")
+        thetas = axis_thresholds(cfg, step, total_steps)
+    active_axes = tuple(cfg.axes)
+    thetas = _zeroed_inactive(thetas, active_axes)
+
+    # Sharded fast path: stats need global reductions and an external
+    # bias would need its own spec — both stay on the replicated path.
+    if (mesh is not None and plan.sharded and bias is None
+            and not with_stats):
+        return _sharded_pipeline(q, k, v, thetas, scale, plan=plan,
+                                 mesh=mesh, grid=grid, cfg=cfg,
+                                 grid_slice=grid_slice,
+                                 active_axes=active_axes)
+
+    out, q_mask, k_mask = _run_pipeline(
+        q, k, v, thetas, scale, bias, plan=plan, grid=grid, cfg=cfg,
+        grid_slice=grid_slice, active_axes=active_axes)
 
     if with_stats:
         stats = RippleStats(

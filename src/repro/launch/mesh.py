@@ -26,3 +26,24 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     model_axis = min(model_axis, n)
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """``--mesh DxM`` CLI flags -> a (data, model) mesh.
+
+    '8' means (data=8, model=1); '4x2' means (data=4, model=2).  Raises
+    with an actionable message when the host has too few devices (on CPU
+    set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    parts = spec.lower().replace("×", "x").split("x")
+    if not 1 <= len(parts) <= 2:
+        raise ValueError(f"mesh spec {spec!r}: expected 'D' or 'DxM'")
+    d, m = int(parts[0]), int(parts[1]) if len(parts) == 2 else 1
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh spec {spec!r}: axes must be >= 1")
+    avail = len(jax.devices())
+    if d * m > avail:
+        raise ValueError(
+            f"mesh {d}x{m} needs {d * m} devices but only {avail} are "
+            f"visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d * m}")
+    return jax.make_mesh((d, m), ("data", "model"))

@@ -1,8 +1,13 @@
-"""Serving launcher: batched diffusion generation with TimeRipple on.
+"""Serving launcher: bucketed continuous-batching diffusion generation
+with TimeRipple on, optionally sharded over a device mesh.
 
-``python -m repro.launch.serve --arch dit-b2 --shape gen_fast --smoke
---requests 8`` spins up the DiffusionEngine, submits synthetic requests,
-and reports latency + the reuse savings actually achieved per step.
+``python -m repro.launch.serve --smoke`` spins up the DiffusionEngine on
+a mixed-shape request stream (several (resolution, steps) buckets),
+logs the resolved attention-dispatch plan per bucket, and reports
+latency.  ``--shape NAME`` pins single-shape traffic instead;
+``--mesh DxM`` (e.g. ``--mesh 4x2``) installs a (data, model) mesh so
+the ripple/reuse-mask pipeline runs under shard_map (DESIGN.md §10) —
+on CPU prefix with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -13,54 +18,50 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.config.base import apply_overrides
-from repro.diffusion.sampler import cfg_wrap, ddim_sample, euler_flow_sample
+from repro.core import dispatch as dispatch_lib
+from repro.diffusion.sampler import ddim_sample, euler_flow_sample
 from repro.diffusion.schedule import DDPMSchedule
+from repro.launch.mesh import parse_mesh_spec
 from repro.launch.workloads import (_denoise_call, attention_plan,
-                                    model_fns)  # shared path
+                                    latent_shape_for, mixed_gen_shapes,
+                                    mixed_request_stream, model_fns)
 from repro.distributed.sharding import NULL_CTX
 from repro.models.params import init_params
-from repro.serving.engine import DiffusionEngine, GenRequest
+from repro.serving.engine import DiffusionEngine
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
 
 
 def build_sampler(arch, shape, params, *, use_ripple=True):
-    """Returns sample_fn(noise, txt, rng) -> latents and the latent shape."""
+    """Returns sample_fn(noise, txt, rngs) -> latents and the latent
+    shape.  ``rngs`` is the engine's (B, 2) per-request key batch: the
+    initial noise is built outside from the same keys, and conditioning
+    randomness (DiT labels) is drawn per request via vmap — no request
+    in a batch ever shares sampler randomness."""
     m = arch.model
     fam = arch.family
     steps = shape.steps or 50
-    res = shape.img_res
-
-    if fam == "dit":
-        lat_shape = (m.latent_res(res), m.latent_res(res), m.in_channels)
-    elif fam in ("mmdit", "unet"):
-        lr = res // 8
-        lat_shape = (lr, lr, m.in_channels)
-    else:  # vdit
-        g = m.grid(img_res=res)
-        lat_shape = (g[0] * m.t_patch, g[1] * m.patch, g[2] * m.patch,
-                     m.in_channels)
-
+    lat_shape = latent_shape_for(arch, shape)
     ddpm = DDPMSchedule()
 
-    def make_cond(txt, B, rng):
+    def make_cond(txt, rngs):
         if fam == "dit":
-            return {"labels": jax.random.randint(rng, (B,), 0, m.num_classes)}
+            labels = jax.vmap(
+                lambda k: jax.random.randint(k, (), 0, m.num_classes))(rngs)
+            return {"labels": labels}
         if fam == "mmdit":
-            return {"txt": txt, "vec": jnp.zeros((B, 768))}
+            return {"txt": txt, "vec": jnp.zeros((txt.shape[0], 768))}
         if fam == "unet":
             return {"ctx": txt}
         return {"txt": txt}
 
     @jax.jit
-    def sample_fn(noise, txt, rng):
-        B = noise.shape[0]
-        cond = make_cond(txt, B, rng)
+    def sample_fn(noise, txt, rngs):
+        cond = make_cond(txt, rngs)
 
         def denoise(x, t, step):
             return _denoise_call(
@@ -74,13 +75,40 @@ def build_sampler(arch, shape, params, *, use_ripple=True):
     return sample_fn, lat_shape
 
 
+def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
+                         mesh=None):
+    """(engine sampler_factory, plan_fn) over a set of generate cells,
+    keyed by the engine's (latent_shape, steps) bucket identity."""
+    by_bucket = {}
+    for sp in shapes:
+        by_bucket[(tuple(latent_shape_for(arch, sp)), sp.steps)] = sp
+
+    def factory(latent_shape, steps):
+        sp = by_bucket[(tuple(latent_shape), steps)]
+        fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple)
+        return fn
+
+    def plan_fn(latent_shape, steps):
+        sp = by_bucket[(tuple(latent_shape), steps)]
+        return attention_plan(arch, sp, mesh=mesh)
+
+    return factory, plan_fn
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch", default="vdit-paper", choices=ALL_ARCHS)
+    ap.add_argument("--shape", default=None,
+                    help="single-shape traffic from this named shape; "
+                         "default: a mixed-shape request stream")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="(data, model) mesh, e.g. 8 or 4x2; shards the "
+                         "attention dispatch under shard_map")
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-compiled", type=int, default=8,
+                    help="bounded LRU of per-bucket compiled samplers")
     ap.add_argument("--no-ripple", action="store_true")
     ap.add_argument("--attn-backend", default=None,
                     choices=("auto", "dense", "reference", "collapse",
@@ -91,39 +119,48 @@ def main(argv=None):
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
 
+    mesh = parse_mesh_spec(args.mesh) if args.mesh else None
+    if mesh is not None:
+        dispatch_lib.set_dispatch_mesh(mesh)
+        log.info("dispatch mesh: %s", dict(mesh.shape))
+
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     arch = apply_overrides(arch, args.overrides)
     if args.attn_backend is not None:
         arch = dataclasses.replace(
             arch, ripple=dataclasses.replace(arch.ripple,
                                              backend=args.attn_backend))
-    shape = arch.shape(args.shape)
-    m = arch.model
+
+    if args.shape is not None:
+        shapes = (arch.shape(args.shape),)
+    else:
+        shapes = mixed_gen_shapes(arch, smoke=args.smoke)
+    log.info("traffic buckets: %s",
+             [(s.name, s.img_res, s.steps) for s in shapes])
 
     defs = model_fns(arch)
     params = init_params(defs, jax.random.PRNGKey(args.seed))
-    sample_fn, lat_shape = build_sampler(arch, shape, params,
-                                         use_ripple=not args.no_ripple)
+    factory, plan_fn = make_sampler_factory(
+        arch, shapes, params, use_ripple=not args.no_ripple, mesh=mesh)
 
-    engine = DiffusionEngine(sample_fn, lat_shape,
+    engine = DiffusionEngine(sampler_factory=factory,
                              max_batch=args.max_batch,
-                             attn_plan=attention_plan(arch, shape))
+                             max_compiled=args.max_compiled,
+                             plan_fn=plan_fn)
     engine.start()
-    txt_dim = getattr(m, "txt_dim", getattr(m, "ctx_dim", 64))
-    txt_tokens = getattr(m, "txt_tokens", getattr(m, "ctx_tokens", 8))
+    traffic = mixed_request_stream(arch, shapes, args.requests,
+                                   seed=args.seed)
     t0 = time.time()
-    for i in range(args.requests):
-        txt = 0.05 * np.random.default_rng(i).standard_normal(
-            (txt_tokens, txt_dim)).astype(np.float32)
-        engine.submit(GenRequest(request_id=i, txt=txt,
-                                 steps=shape.steps, seed=i))
-    for i in range(args.requests):
-        r = engine.result(i)
-        log.info("request %d done in %.2fs; latents %s",
-                 i, r.walltime_s, r.latents.shape)
+    for _, req in traffic:
+        engine.submit(req)
+    for sp, req in traffic:
+        r = engine.result(req.request_id)
+        log.info("request %d (%s, %d steps) done in %.2fs; latents %s",
+                 req.request_id, sp.name, sp.steps, r.walltime_s,
+                 r.latents.shape)
     engine.stop()
-    log.info("served %d requests in %.2fs total", args.requests,
-             time.time() - t0)
+    log.info("served %d requests over %d bucket(s) in %.2fs total",
+             args.requests, len(shapes), time.time() - t0)
 
 
 if __name__ == "__main__":

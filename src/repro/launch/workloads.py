@@ -411,15 +411,18 @@ def _diffusion_generate(arch: ArchConfig, shape: ShapeSpec, mesh) -> Workload:
         steps_multiplier=shape.steps,
         loop_trips=_diffusion_probe_info(arch)[0],
         probe=_diffusion_probe_info(arch)[1],
-        attn_plan=attention_plan(arch, shape))
+        attn_plan=attention_plan(arch, shape, mesh=mesh))
 
 
-def attention_plan(arch: ArchConfig, shape: ShapeSpec):
+def attention_plan(arch: ArchConfig, shape: ShapeSpec,
+                   mesh: Optional[Mesh] = None):
     """Resolved dispatch plan for the cell's joint self-attention shape.
 
     Metadata only (the models resolve their own plans at trace time via
     ``attention_dispatch``); UNet is skipped — its attention runs at
-    several resolutions with level-dependent head dims.
+    several resolutions with level-dependent head dims.  ``mesh`` makes
+    the recorded batch/head sharding match what the sharded serving path
+    will execute (DESIGN.md §10).
     """
     m = arch.model
     fam = arch.family
@@ -436,7 +439,79 @@ def attention_plan(arch: ArchConfig, shape: ShapeSpec):
     heads = m.num_heads
     bh = max(shape.batch, 1) * _cfg_factor(arch) * heads
     return dispatch_lib.plan_for_shape(n, m.d_model // heads, arch.ripple,
-                                       batch_heads=bh)
+                                       batch_heads=bh, heads=heads,
+                                       mesh=mesh)
+
+
+# --- serving traffic helpers ----------------------------------------------------
+
+
+def latent_shape_for(arch: ArchConfig, shape: ShapeSpec) -> Tuple[int, ...]:
+    """Per-request latent shape (no batch dim) for one generate cell —
+    the serving engine's bucket identity."""
+    m = arch.model
+    fam = arch.family
+    res = shape.img_res
+    if fam == "dit":
+        lr = m.latent_res(res)
+        return (lr, lr, m.in_channels)
+    if fam in ("mmdit", "unet"):
+        lr = res // 8
+        return (lr, lr, m.in_channels)
+    if fam == "vdit":
+        g = m.grid(img_res=res)
+        return (g[0] * m.t_patch, g[1] * m.patch, g[2] * m.patch,
+                m.in_channels)
+    raise ValueError(f"no latent shape for family {fam!r}")
+
+
+def mixed_gen_shapes(arch: ArchConfig, *, smoke: bool = False,
+                     base: Optional[ShapeSpec] = None):
+    """Heterogeneous 'generate' cells for mixed-traffic serving: the base
+    resolution/step count plus a half-resolution and a short-schedule
+    variant (each its own engine bucket)."""
+    if base is None:
+        gens = [s for s in arch.shapes if s.kind == "generate"]
+        base = gens[0] if gens else ShapeSpec(
+            name="gen", kind="generate", img_res=64, batch=1, steps=4)
+    if smoke:
+        base = dataclasses.replace(base, img_res=64, steps=3)
+    res_lo = max(base.img_res // 2, 32)
+    steps_lo = max(base.steps // 2, 2)
+    variants = [
+        base,
+        dataclasses.replace(base, name=f"{base.name}_r{res_lo}",
+                            img_res=res_lo),
+        dataclasses.replace(base, name=f"{base.name}_s{steps_lo}",
+                            steps=steps_lo),
+    ]
+    seen, out = set(), []
+    for s in variants:
+        k = (s.img_res, s.steps)
+        if k not in seen:
+            seen.add(k)
+            out.append(s)
+    return tuple(out)
+
+
+def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
+                         seed: int = 0):
+    """Round-robin (ShapeSpec, GenRequest) traffic over ``shapes`` with
+    deterministic per-request text embeddings and seeds."""
+    from repro.serving.engine import GenRequest
+
+    m = arch.model
+    txt_dim = getattr(m, "txt_dim", getattr(m, "ctx_dim", 64))
+    txt_tokens = getattr(m, "txt_tokens", getattr(m, "ctx_tokens", 8))
+    out = []
+    for i in range(num_requests):
+        sp = shapes[i % len(shapes)]
+        txt = 0.05 * np.random.default_rng(seed + i).standard_normal(
+            (txt_tokens, txt_dim)).astype(np.float32)
+        out.append((sp, GenRequest(
+            request_id=i, txt=txt, steps=sp.steps, seed=seed + i,
+            latent_shape=latent_shape_for(arch, sp))))
+    return out
 
 
 def _cfg_factor(arch: ArchConfig) -> int:

@@ -175,7 +175,7 @@ def _ep_moe(params, x_flat, cfg: MoEConfig, ctx: ShardCtx):
     C = max(int(N_loc * cfg.top_k * cfg.capacity_factor / E), 8)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
 
     router_w = params["router"]
     expert_params = {k: params[k] for k in ("wi_gate", "wi_up", "wo")}

@@ -1,15 +1,21 @@
 """Serving engines.
 
-DiffusionEngine: batched text-to-image/video generation.  Requests queue
-up; the batcher groups compatible requests (same steps / resolution) into
-one jitted sampler invocation; the denoising loop threads the step index
-into TimeRipple's Eq. 4 schedule — acceleration happens *per step* with
-no per-request state, which is why the paper's method needs no KV-style
-cache and adds no serving memory (Tbl. 2 Mem column).  Attention inside
-the sampler routes through ``core.dispatch.attention_dispatch``
-(DESIGN.md §8); launchers hand the engine the resolved
-:class:`~repro.core.dispatch.DispatchPlan` so the serving log records
-which backend/block sizes the traffic actually runs on.
+DiffusionEngine: shape-bucketed continuous batching for text-to-image /
+video generation.  Requests are keyed into a **bucket** by
+``(latent_shape, steps)``; the batcher drains whichever bucket is
+hottest (deepest queue) so heterogeneous traffic never pads or mixes
+shapes inside one sampler invocation.  Each bucket owns a jitted
+(optionally mesh-sharded) sampler obtained from ``sampler_factory`` and
+held in a bounded LRU of compiled entries — the hottest bucket's sampler
+always survives eviction.  Per-request PRNG keys are threaded through
+``sample_fn`` as a full ``(B, 2)`` key batch (vmap inside the sampler),
+so requests in one batch never share sampler randomness.  TimeRipple's
+reuse schedule is stateless per denoising step (no KV-style cache,
+paper Tbl. 2), which is what makes this continuous batching safe: a
+bucket switch carries zero eviction cost.  Attention inside the sampler
+routes through ``core.dispatch.attention_dispatch`` (DESIGN.md §8, §10);
+``plan_fn`` lets the launcher log the resolved
+:class:`~repro.core.dispatch.DispatchPlan` per bucket at first compile.
 
 LMEngine: KV-cache prefill + decode loop (used by the decode_32k /
 long_500k shape cells and the LM serving example).
@@ -18,9 +24,9 @@ long_500k shape cells and the LM serving example).
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
+from collections import OrderedDict, deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -31,6 +37,10 @@ from repro.utils.logging import get_logger
 
 log = get_logger("serve")
 
+# (latent_shape, steps); legacy single-sampler engines use steps=-1 so
+# requests with differing ``steps`` still share the one compiled entry.
+BucketKey = Tuple[Tuple[int, ...], int]
+
 
 @dataclasses.dataclass
 class GenRequest:
@@ -39,29 +49,54 @@ class GenRequest:
     steps: int = 50
     seed: int = 0
     guidance: float = 4.0
+    # None -> the engine's default latent shape (single-shape traffic).
+    latent_shape: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass
 class GenResult:
     request_id: int
-    latents: np.ndarray
+    latents: Optional[np.ndarray]
     walltime_s: float
+    error: Optional[str] = None
+    batch_index: int = -1  # which sampler invocation served this request
 
 
 class DiffusionEngine:
-    """sample_fn(latents0, txt, rng) -> latents; built by the launcher with
-    the model, sampler, and RippleConfig baked in (steps static)."""
+    """Continuous-batching engine over bucketed samplers.
 
-    def __init__(self, sample_fn: Callable, latent_shape: Tuple[int, ...],
+    ``sampler_factory(latent_shape, steps) -> sample_fn`` builds (and
+    jits) the sampler for one bucket; ``sample_fn(latents0, txt, rngs)``
+    takes a ``(B, 2)`` uint32 batch of per-request PRNG keys.  The legacy
+    single-sampler form ``DiffusionEngine(sample_fn, latent_shape)`` is
+    still accepted: every request then lands in one default bucket.
+    """
+
+    def __init__(self, sample_fn: Optional[Callable] = None,
+                 latent_shape: Optional[Tuple[int, ...]] = None,
+                 *, sampler_factory: Optional[Callable] = None,
                  max_batch: int = 8, max_wait_s: float = 0.05,
-                 attn_plan: Optional[Any] = None):
-        self.sample_fn = sample_fn
+                 max_compiled: int = 8, starve_after_s: float = 2.0,
+                 attn_plan: Optional[Any] = None,
+                 plan_fn: Optional[Callable] = None):
+        if sampler_factory is None:
+            if sample_fn is None:
+                raise ValueError("need sample_fn or sampler_factory")
+            sampler_factory = lambda shape, steps: sample_fn  # noqa: E731
+        self._factory = sampler_factory
+        self._legacy = sample_fn is not None
         self.latent_shape = latent_shape
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.max_compiled = max_compiled
+        self.starve_after_s = starve_after_s
         self.attn_plan = attn_plan  # DispatchPlan metadata (or None)
-        self._q: "queue.Queue[GenRequest]" = queue.Queue()
+        self.plan_fn = plan_fn      # (latent_shape, steps) -> DispatchPlan
+        # bucket deques hold (enqueue_time, request) for starvation aging
+        self._buckets: Dict[BucketKey, deque] = {}
+        self._compiled: "OrderedDict[BucketKey, Callable]" = OrderedDict()
         self._results: Dict[int, GenResult] = {}
+        self._batches_served = 0
         self._lock = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -71,16 +106,36 @@ class DiffusionEngine:
     def start(self):
         if self.attn_plan is not None:
             log.info("engine attention plan: %s", self.attn_plan.summary())
+        with self._lock:
+            self._stop = False  # allow stop() -> start() restart cycles
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
-    def stop(self):
-        self._stop = True
+    def stop(self, drain: bool = True):
+        """Stop the batcher.  With ``drain`` (default) every already-
+        submitted request is served before the thread exits, so no result
+        is orphaned; ``drain=False`` discards queued requests with an
+        error result instead."""
+        with self._lock:
+            self._stop = True
+            if not drain:
+                for dq in self._buckets.values():
+                    for _, r in dq:
+                        self._results[r.request_id] = GenResult(
+                            r.request_id, None, 0.0, error="engine stopped")
+                self._buckets.clear()
+            self._lock.notify_all()
         if self._thread:
             self._thread.join()
+            self._thread = None
 
     def submit(self, req: GenRequest):
-        self._q.put(req)
+        key = self._bucket_key(req)
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine is stopped")
+            self._buckets.setdefault(key, deque()).append((time.time(), req))
+            self._lock.notify_all()
 
     def result(self, request_id: int, timeout: float = 300.0) -> GenResult:
         deadline = time.time() + timeout
@@ -88,46 +143,122 @@ class DiffusionEngine:
             while request_id not in self._results:
                 if not self._lock.wait(timeout=deadline - time.time()):
                     raise TimeoutError(f"request {request_id}")
-            return self._results.pop(request_id)
+            res = self._results.pop(request_id)
+        if res.error is not None:
+            raise RuntimeError(
+                f"request {request_id} failed: {res.error}")
+        return res
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(dq) for dq in self._buckets.values())
 
     # -- batching loop ----------------------------------------------------------
 
-    def _take_batch(self) -> List[GenRequest]:
-        batch: List[GenRequest] = []
-        try:
-            batch.append(self._q.get(timeout=0.2))
-        except queue.Empty:
-            return batch
+    def _bucket_key(self, req: GenRequest) -> BucketKey:
+        shape = tuple(req.latent_shape) if req.latent_shape is not None \
+            else tuple(self.latent_shape or ())
+        if not shape:
+            raise ValueError(f"request {req.request_id}: no latent shape "
+                             "(set GenRequest.latent_shape or the engine "
+                             "default)")
+        return (shape, -1 if self._legacy else req.steps)
+
+    def _next_bucket(self) -> Optional[BucketKey]:
+        """Hottest (deepest) bucket first — unless some bucket's head
+        request has waited past ``starve_after_s``, in which case the
+        oldest head wins (aging prevents cold-bucket starvation under
+        sustained hot-bucket traffic)."""
+        live = {k: dq for k, dq in self._buckets.items() if dq}
+        if not live:
+            return None
+        oldest = min(live, key=lambda k: live[k][0][0])
+        if time.time() - live[oldest][0][0] > self.starve_after_s:
+            return oldest
+        return max(live, key=lambda k: len(live[k]))
+
+    def _take_batch(self):
+        """Block for traffic, pick a bucket (see :meth:`_next_bucket`),
+        linger briefly for batch-mates from the *same* bucket.  Returns
+        (key, batch) or (None, None) once stopped and fully drained."""
+        with self._lock:
+            while True:
+                key = self._next_bucket()
+                if key is not None:
+                    break
+                if self._stop:
+                    return None, None
+                self._lock.wait(timeout=0.2)
+            batch = [self._buckets[key].popleft()[1]]
+        deadline = time.time() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            with self._lock:
+                dq = self._buckets.get(key)
+                while dq and len(batch) < self.max_batch:
+                    batch.append(dq.popleft()[1])
+            if len(batch) >= self.max_batch or self._stop \
+                    or time.time() >= deadline:
+                break
+            time.sleep(0.005)
+        return key, batch
+
+    def _sampler(self, key: BucketKey) -> Callable:
+        """Bounded LRU over compiled samplers; MRU (the hottest bucket)
+        survives eviction."""
+        fn = self._compiled.get(key)
+        if fn is None:
+            shape, steps = key
+            fn = self._factory(shape, steps)
+            self._compiled[key] = fn
+            if self.plan_fn is not None:
+                try:
+                    plan = self.plan_fn(shape, steps)
+                    # None = no plan to report (e.g. UNet's multi-
+                    # resolution attention has no single dispatch plan)
+                    if plan is not None:
+                        log.info("bucket %s plan: %s", key, plan.summary())
+                except Exception:  # noqa: BLE001 — logging must not kill serving
+                    log.exception("plan_fn failed for bucket %s", key)
+        self._compiled.move_to_end(key)
+        while len(self._compiled) > self.max_compiled:
+            evicted, _ = self._compiled.popitem(last=False)
+            log.info("evicted compiled sampler for bucket %s", evicted)
+        return fn
+
+    def _serve(self, key: BucketKey, batch: List[GenRequest]):
         t0 = time.time()
-        while len(batch) < self.max_batch and \
-                time.time() - t0 < self.max_wait_s:
-            try:
-                batch.append(self._q.get_nowait())
-            except queue.Empty:
-                time.sleep(0.005)
-        return batch
+        shape, _ = key
+        try:
+            fn = self._sampler(key)
+            txt = jnp.stack([jnp.asarray(r.txt) for r in batch])
+            rngs = jnp.stack([jax.random.PRNGKey(r.seed) for r in batch])
+            noise = jax.vmap(lambda k: jax.random.normal(k, shape))(rngs)
+            # The full (B, 2) key batch goes to the sampler — every
+            # request keeps its own randomness inside one batch.
+            lat = fn(noise, txt, rngs)
+            lat = np.asarray(jax.device_get(lat))
+            err = None
+        except Exception as e:  # noqa: BLE001 — fail the batch, not the engine
+            log.exception("bucket %s batch failed", key)
+            lat, err = None, repr(e)
+        dt = time.time() - t0
+        with self._lock:
+            bi = self._batches_served
+            self._batches_served += 1
+            for i, r in enumerate(batch):
+                self._results[r.request_id] = GenResult(
+                    r.request_id, None if err else lat[i], dt, error=err,
+                    batch_index=bi)
+            self._lock.notify_all()
+        log.info("served bucket %s batch of %d in %.2fs", key, len(batch),
+                 dt)
 
     def _loop(self):
-        while not self._stop:
-            batch = self._take_batch()
-            if not batch:
-                continue
-            t0 = time.time()
-            B = len(batch)
-            txt = jnp.stack([jnp.asarray(r.txt) for r in batch])
-            rngs = jnp.stack(
-                [jax.random.PRNGKey(r.seed) for r in batch])
-            noise = jax.vmap(
-                lambda k: jax.random.normal(k, self.latent_shape))(rngs)
-            lat = self.sample_fn(noise, txt, rngs[0])
-            lat = np.asarray(jax.device_get(lat))
-            dt = time.time() - t0
-            with self._lock:
-                for i, r in enumerate(batch):
-                    self._results[r.request_id] = GenResult(
-                        r.request_id, lat[i], dt)
-                self._lock.notify_all()
-            log.info("served batch of %d in %.2fs", B, dt)
+        while True:
+            key, batch = self._take_batch()
+            if key is None:
+                return  # stopped and drained
+            self._serve(key, batch)
 
 
 class LMEngine:

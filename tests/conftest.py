@@ -1,9 +1,43 @@
 import os
 
-# Tests run single-device (the dry-run sets its own 512-device override
-# in a separate process; never here).
+# Multi-device test tier (DESIGN.md §10): when REPRO_MULTIDEVICE is set
+# (CI's second job exports it), force 8 virtual CPU devices.  This must
+# happen before jax initializes its backend, hence the early env guard
+# here rather than a late fixture; tests that need a *guaranteed*
+# multi-device backend regardless of the parent process use subprocesses
+# (tests/test_sharded_dispatch.py, tests/test_distributed.py).
+if os.environ.get("REPRO_MULTIDEVICE", "") not in ("", "0"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+# Tests otherwise run single-device (the dry-run sets its own 512-device
+# override in a separate process; never here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def multidevice_env():
+    """Environment for subprocess tests that need the forced 8-virtual-
+    device CPU backend (jax locks the device count at init, so a fresh
+    process is the only reliable way from a single-device parent)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = "src"
+    return env
+
+
+def require_devices(n: int):
+    """Skip unless the current backend exposes >= n devices (run the
+    suite with REPRO_MULTIDEVICE=1 to force 8 virtual CPU devices)."""
+    have = len(jax.devices())
+    if have < n:
+        pytest.skip(f"needs {n} devices, have {have} "
+                    f"(set REPRO_MULTIDEVICE=1)")

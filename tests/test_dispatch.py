@@ -1,6 +1,6 @@
 """Tests for the unified attention-dispatch layer (DESIGN.md §8):
-backend equivalence, fused-mask parity, shape bucketing, and the
-autotune-cache round trip."""
+backend equivalence, fused-mask parity, shape bucketing, plan-cache LRU
+bounds, and the autotune-cache round trip."""
 
 import dataclasses
 import json
@@ -9,6 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-example property checks
+    from _hypothesis_compat import given, settings, st
 
 from repro.config.base import RippleConfig
 from repro.core import dispatch
@@ -176,6 +181,81 @@ class TestPlansAndBuckets:
     def test_plan_summary_prints(self):
         s = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG).summary()
         assert "reference" in s
+
+
+class TestBucketProperties:
+    """Property coverage for the shape-bucket map (fixed examples when
+    hypothesis is absent, randomized search otherwise)."""
+
+    @settings(deadline=None, max_examples=60)
+    @given(n=st.integers(1, 1 << 16))
+    def test_bucket_covers_and_is_power_of_two(self, n):
+        b = shape_bucket(n)
+        assert b >= n and b >= 64
+        assert b & (b - 1) == 0          # power of two
+        assert b < 2 * max(n, 64)        # tight: never over-doubles
+
+    @settings(deadline=None, max_examples=60)
+    @given(n1=st.integers(1, 1 << 16), n2=st.integers(1, 1 << 16))
+    def test_bucket_monotonic(self, n1, n2):
+        if n1 > n2:
+            n1, n2 = n2, n1
+        assert shape_bucket(n1) <= shape_bucket(n2)
+
+    @settings(deadline=None, max_examples=25)
+    @given(n=st.integers(65, 128), m=st.integers(65, 128))
+    def test_shapes_in_one_bucket_share_one_plan(self, n, m):
+        dispatch.clear_plan_cache()
+        try:
+            p1 = resolve_plan((1, 1, n, D), (1, 1, n, D), CFG)
+            p2 = resolve_plan((1, 1, m, D), (1, 1, m, D), CFG)
+            assert p1 is p2  # same (64, 128] bucket -> same cached plan
+        finally:
+            dispatch.clear_plan_cache()
+
+
+class TestPlanCacheLRU:
+    """The plan cache is a bounded LRU: it never exceeds its cap and
+    eviction discards the coldest entry, keeping the hottest."""
+
+    def _with_cap(self, cap):
+        old = dispatch._PLAN_CACHE_CAP
+        dispatch._PLAN_CACHE_CAP = cap
+        dispatch.clear_plan_cache()
+        return old
+
+    @settings(deadline=None, max_examples=10)
+    @given(cap=st.integers(2, 8), extra=st.integers(1, 24))
+    def test_bounded_and_keeps_hottest(self, cap, extra):
+        old = self._with_cap(cap)
+        try:
+            hot_shape = (1, 1, 64, D)
+            hot = resolve_plan(hot_shape, hot_shape, CFG)
+            for i in range(extra):
+                # distinct buckets: distinct n buckets per iteration
+                n = 64 * (i + 2)
+                resolve_plan((1, 1, n, D), (1, 1, n, D), CFG)
+                # re-touch the hot entry so it stays MRU
+                assert resolve_plan(hot_shape, hot_shape, CFG) is hot
+                assert len(dispatch._PLAN_CACHE) <= cap
+            # the hottest entry survived every eviction
+            assert resolve_plan(hot_shape, hot_shape, CFG) is hot
+        finally:
+            dispatch._PLAN_CACHE_CAP = old
+            dispatch.clear_plan_cache()
+
+    def test_cold_entries_are_evicted(self):
+        old = self._with_cap(2)
+        try:
+            cold = resolve_plan((1, 1, 64, D), (1, 1, 64, D), CFG)
+            resolve_plan((1, 1, 256, D), (1, 1, 256, D), CFG)
+            resolve_plan((1, 1, 1024, D), (1, 1, 1024, D), CFG)
+            assert len(dispatch._PLAN_CACHE) == 2
+            # the first (coldest) entry was evicted -> fresh object now
+            assert resolve_plan((1, 1, 64, D), (1, 1, 64, D), CFG) is not cold
+        finally:
+            dispatch._PLAN_CACHE_CAP = old
+            dispatch.clear_plan_cache()
 
 
 class TestAutotuneCache:

@@ -1,0 +1,253 @@
+"""Continuous-batching engine tests: per-request RNG threading, mixed
+(resolution, steps) traffic from concurrent submitters, bucket purity,
+the compiled-sampler LRU, and clean drain on stop()."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import DiffusionEngine, GenRequest
+
+
+def _txt(val, tokens=1, dim=1):
+    return np.full((tokens, dim), float(val), np.float32)
+
+
+class TestPerRequestRNG:
+    def test_seeds_differ_within_one_batch(self):
+        """Regression for the seed bug: sample_fn used to receive
+        rngs[0], collapsing every request's sampler randomness onto the
+        first request's key.  A sampler that depends ONLY on the rng
+        argument must now produce different latents for different seeds
+        served in the same batch."""
+        batches = []
+
+        def sample_fn(noise, txt, rngs):
+            batches.append(noise.shape[0])
+            assert rngs.shape == (noise.shape[0], 2)  # full key batch
+            return jax.vmap(
+                lambda k: jax.random.normal(k, noise.shape[1:]))(rngs)
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(4,), max_batch=4,
+                              max_wait_s=0.5)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), seed=0))
+        eng.submit(GenRequest(request_id=1, txt=_txt(0), seed=1))
+        r0 = eng.result(0, timeout=30)
+        r1 = eng.result(1, timeout=30)
+        eng.stop()
+        assert 2 in batches  # both requests really shared one batch
+        assert not np.allclose(r0.latents, r1.latents)
+
+    def test_seed_determinism_across_batches(self):
+        def sample_fn(noise, txt, rngs):
+            return jax.vmap(
+                lambda k: jax.random.normal(k, noise.shape[1:]))(rngs)
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(4,), max_batch=1,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), seed=7))
+        a = eng.result(0, timeout=30).latents
+        eng.submit(GenRequest(request_id=1, txt=_txt(0), seed=7))
+        b = eng.result(1, timeout=30).latents
+        eng.stop()
+        np.testing.assert_array_equal(a, b)
+
+
+class TestMixedTrafficConcurrency:
+    BUCKETS = (((2, 2, 1), 2), ((4, 4, 1), 3), ((2, 2, 1), 3))
+
+    def test_threads_mixed_shapes_all_complete(self):
+        """Multiple submitter threads, heterogeneous (resolution, steps)
+        traffic: every request completes, results map back to the right
+        request_id, and no sampler invocation ever mixes shapes."""
+        served = []
+
+        def factory(latent_shape, steps):
+            def fn(noise, txt, rngs):
+                # bucket purity: the whole batch matches this bucket
+                assert noise.shape[1:] == latent_shape
+                assert txt.shape[0] == noise.shape[0] == rngs.shape[0]
+                served.append((latent_shape, steps, noise.shape[0]))
+                # encode (request marker, steps) into the output
+                return (jnp.zeros_like(noise)
+                        + txt[:, 0, 0].reshape((-1,) + (1,) * (noise.ndim - 1))
+                        + 1000.0 * steps)
+            return fn
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=4,
+                              max_wait_s=0.02)
+        eng.start()
+        n_threads, per_thread = 4, 8
+        expected = {}
+
+        def submit(tid):
+            rng = np.random.default_rng(tid)
+            for j in range(per_thread):
+                rid = tid * 100 + j
+                shape, steps = self.BUCKETS[rng.integers(len(self.BUCKETS))]
+                expected[rid] = (shape, steps)
+                eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
+                                      steps=steps, seed=rid,
+                                      latent_shape=shape))
+                time.sleep(0.001 * int(rng.integers(3)))
+
+        threads = [threading.Thread(target=submit, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        for rid, (shape, steps) in expected.items():
+            r = eng.result(rid, timeout=60)
+            assert r.latents.shape == shape
+            np.testing.assert_allclose(r.latents,
+                                       float(rid) + 1000.0 * steps)
+        eng.stop()
+        assert sum(b for _, _, b in served) == n_threads * per_thread
+        # every served batch drew from exactly one bucket (asserted in
+        # fn); batching actually happened under concurrent submission
+        assert len(served) <= n_threads * per_thread
+
+    def test_hottest_bucket_drains_first(self):
+        order = []
+
+        def factory(latent_shape, steps):
+            def fn(noise, txt, rngs):
+                order.append((latent_shape, noise.shape[0]))
+                return noise
+            return fn
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=8,
+                              max_wait_s=0.05)
+        # queue before starting: 1 request cold bucket, 3 hot bucket
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), steps=2,
+                              latent_shape=(2, 2)))
+        for i in range(1, 4):
+            eng.submit(GenRequest(request_id=i, txt=_txt(i), steps=2,
+                                  latent_shape=(4, 4)))
+        eng.start()
+        for i in range(4):
+            eng.result(i, timeout=30)
+        eng.stop()
+        assert order[0] == ((4, 4), 3)  # deepest queue served first
+
+    def test_cold_bucket_not_starved_by_hot_traffic(self):
+        """Aging guard: a lone request in a cold bucket is served within
+        ~starve_after_s even while fresh hot-bucket traffic keeps that
+        bucket deeper the whole time (pure hottest-first would starve the
+        cold request until the hot stream dries up)."""
+        def factory(latent_shape, steps):
+            def fn(noise, txt, rngs):
+                time.sleep(0.02)
+                return noise
+            return fn
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=4,
+                              max_wait_s=0.01, starve_after_s=0.2)
+        eng.start()
+        # warm both shapes so first-call tracing doesn't skew timing
+        eng.submit(GenRequest(request_id=9000, txt=_txt(0), steps=2,
+                              latent_shape=(4, 4)))
+        eng.submit(GenRequest(request_id=9001, txt=_txt(0), steps=2,
+                              latent_shape=(2, 2)))
+        eng.result(9000, timeout=30)
+        eng.result(9001, timeout=30)
+
+        stop_feed = threading.Event()
+
+        def feeder():  # keep the hot bucket continuously refilled
+            rid = 1
+            while not stop_feed.is_set():
+                if eng.pending() < 8:
+                    for _ in range(4):
+                        eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
+                                              steps=2, latent_shape=(4, 4)))
+                        rid += 1
+                time.sleep(0.005)
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        try:
+            time.sleep(0.1)  # hot traffic flowing
+            eng.submit(GenRequest(request_id=0, txt=_txt(0), steps=2,
+                                  latent_shape=(2, 2)))
+            r = eng.result(0, timeout=3.0)  # << the feeder's lifetime
+            assert r.latents.shape == (2, 2)
+        finally:
+            stop_feed.set()
+            t.join()
+            eng.stop(drain=False)
+
+    def test_compiled_sampler_lru_bounded_keeps_hottest(self):
+        builds = []
+
+        def factory(latent_shape, steps):
+            builds.append((latent_shape, steps))
+            return lambda noise, txt, rngs: noise
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=2,
+                              max_wait_s=0.01, max_compiled=2)
+        eng.start()
+        rid = 0
+        hot = ((2, 2), 2)
+        for round_ in range(3):
+            for shape, steps in (hot, ((4, 4), 2), ((8, 8), 2)):
+                eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
+                                      steps=steps, latent_shape=shape))
+                eng.result(rid, timeout=30)
+                rid += 1
+            # the hot bucket is touched again right away each round
+            eng.submit(GenRequest(request_id=rid, txt=_txt(rid), steps=2,
+                                  latent_shape=(2, 2)))
+            eng.result(rid, timeout=30)
+            rid += 1
+            assert len(eng._compiled) <= 2
+            assert hot in eng._compiled  # hottest entry survives eviction
+        eng.stop()
+        assert len(builds) > 3  # eviction forced rebuilds of cold buckets
+
+
+class TestStopSemantics:
+    def test_stop_drains_cleanly(self):
+        """stop() serves everything already queued before joining — no
+        result is orphaned under the lock."""
+        def sample_fn(noise, txt, rngs):
+            time.sleep(0.02)
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=2,
+                              max_wait_s=0.01)
+        eng.start()
+        for i in range(6):
+            eng.submit(GenRequest(request_id=i, txt=_txt(i), seed=i))
+        eng.stop()  # backlog still queued at this point
+        assert eng.pending() == 0
+        for i in range(6):
+            r = eng.result(i, timeout=1.0)  # already resolved, no wait
+            assert r.latents.shape == (2,)
+
+    def test_submit_after_stop_raises(self):
+        eng = DiffusionEngine(lambda n, t, r: n, latent_shape=(2,))
+        eng.start()
+        eng.stop()
+        with pytest.raises(RuntimeError):
+            eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+
+    def test_failed_batch_reports_error_not_hang(self):
+        def sample_fn(noise, txt, rngs):
+            raise ValueError("boom")
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=2,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        with pytest.raises(RuntimeError, match="boom"):
+            eng.result(0, timeout=30)
+        eng.stop()

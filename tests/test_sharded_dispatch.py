@@ -1,0 +1,166 @@
+"""Multi-device dispatch tier (DESIGN.md §10): the shard_map ripple /
+reuse-mask path must be **bitwise-equal** to the single-device path for
+the vdit_paper smoke grid across 1/2/8-way meshes, and indivisible
+shapes must fall back to replicated execution rather than erroring.
+
+Mesh-parametrized tests skip when the backend has too few devices (the
+CI multi-device job runs them under the forced 8-virtual-device CPU
+backend); the subprocess test at the bottom guarantees the 8-way parity
+check executes on every run of the suite regardless of the parent
+process's device count.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro.config.base import RippleConfig
+from repro.configs import get_smoke_config
+from repro.core import dispatch
+from repro.core.dispatch import (attention_dispatch, dispatch_mesh,
+                                 resolve_plan)
+
+# The vdit_paper smoke grid: frames=16 / t_vae=4 -> t=4; 64px / 8 / 2 -> 4.
+ARCH = get_smoke_config("vdit-paper")
+GRID = ARCH.model.grid(img_res=64)
+N = GRID[0] * GRID[1] * GRID[2]
+D = ARCH.model.d_model // ARCH.model.num_heads
+
+CFG = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                   i_min=2, i_max=6)
+
+
+def _qkv(seed=0, shape=(8, 2, N, D)):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, shape) for k in ks)
+
+
+def _dispatch(q, k, v, backend=None, cfg=CFG):
+    return attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                              step=jnp.asarray(5), total_steps=10,
+                              backend=backend)
+
+
+class TestShardedParity:
+    @pytest.mark.parametrize("ways", [1, 2, 8])
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_bitwise_equal_to_single_device(self, ways, backend):
+        require_devices(ways)
+        q, k, v = _qkv()
+        dispatch.clear_plan_cache()
+        ref = np.asarray(_dispatch(q, k, v, backend))
+        mesh = jax.make_mesh((ways, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, CFG, backend=backend)
+            assert plan.batch_shards == ways
+            out = np.asarray(_dispatch(q, k, v, backend))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_head_sharding_bitwise_equal(self):
+        require_devices(2)
+        q, k, v = _qkv(1)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(_dispatch(q, k, v))
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, CFG)
+            assert (plan.head_axis, plan.head_shards) == ("model", 2)
+            out = np.asarray(_dispatch(q, k, v))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_sharded_under_jit(self):
+        require_devices(2)
+        q, k, v = _qkv(2)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(_dispatch(q, k, v))
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            out = np.asarray(jax.jit(_dispatch)(q, k, v))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_fused_mask_computed_per_shard(self):
+        """fused_mask='on' (the reuse-mask kernel) under shard_map
+        matches the host-mask single-device output bit for bit."""
+        require_devices(2)
+        import dataclasses
+        cfg = dataclasses.replace(CFG, fused_mask="on")
+        q, k, v = _qkv(3)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(_dispatch(q, k, v, cfg=CFG))
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            out = np.asarray(_dispatch(q, k, v, cfg=cfg))
+        np.testing.assert_array_equal(out, ref)
+
+
+class TestFallbacks:
+    def test_indivisible_batch_replicates(self):
+        require_devices(2)
+        q, k, v = _qkv(4, shape=(3, 2, N, D))  # B=3 on a 2-way mesh
+        dispatch.clear_plan_cache()
+        ref = np.asarray(_dispatch(q, k, v))
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, CFG)
+            assert not plan.sharded
+            out = np.asarray(_dispatch(q, k, v))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_dense_backend_never_shards(self):
+        require_devices(2)
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan((8, 2, N, D), (8, 2, N, D), RippleConfig())
+            assert plan.backend == "dense" and not plan.sharded
+
+    def test_no_mesh_plan_is_unsharded(self):
+        dispatch.clear_plan_cache()
+        plan = resolve_plan((8, 2, N, D), (8, 2, N, D), CFG)
+        assert not plan.sharded and plan.batch_axes == ()
+
+
+def test_forced_8_device_parity_subprocess(multidevice_env):
+    """Always-on guarantee (even when the parent runs single-device):
+    under a forced 8-virtual-device CPU backend, shard_map output for the
+    vdit_paper smoke grid is bitwise-equal to the single-device path on
+    1/2/8-way batch meshes and a 4x2 batch-and-heads mesh."""
+    code = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config.base import RippleConfig
+        from repro.core import dispatch
+        from repro.core.dispatch import attention_dispatch, dispatch_mesh
+
+        GRID, N, D = {tuple(GRID)!r}, {N}, 16
+        cfg = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                           i_min=2, i_max=6)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (jax.random.normal(kk, (8, 2, N, D)) for kk in ks)
+        run = lambda: np.asarray(attention_dispatch(
+            q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
+            total_steps=10))
+        ref = run()
+        for shape in ((1, 1), (2, 1), (8, 1), (4, 2)):
+            mesh = jax.make_mesh(shape, ("data", "model"))
+            with dispatch_mesh(mesh):
+                dispatch.clear_plan_cache()
+                np.testing.assert_array_equal(run(), ref)
+        print("sharded parity OK on", len(jax.devices()), "devices")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=multidevice_env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "sharded parity OK on 8 devices" in r.stdout
