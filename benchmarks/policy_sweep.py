@@ -1,0 +1,83 @@
+"""Per-policy savings / quality sweep through the dispatch seam.
+
+For every registered reuse policy (DESIGN.md §11) this runs one
+attention call on correlated video latents at the paper-style grid and
+reports, per policy, the expected-savings estimate from the policy's
+own accounting and the output PSNR against the dense baseline — the
+apples-to-apples comparison the pluggable-policy API exists for.
+
+Reported rows (CSV: name,us_per_call,derived):
+  policy_sweep[<policy>]       — wall time per dispatch call (us);
+                                 derived = savings estimate (0..1)
+  policy_sweep[<policy>_psnr]  — same wall time; derived = PSNR (dB)
+                                 of the policy's output vs dense
+
+Thresholds are evaluated mid-schedule (the Eq. 4 ramp's active range);
+``--steps`` below the active range degenerates every schedule policy to
+dense — which is exactly what the CI smoke run
+(``benchmarks/run.py --policy dense --steps 2``) wants: a fast path
+that still exercises registry → dispatch → stats end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import GRID, correlated_qk, timed
+from repro.config.base import RippleConfig
+from repro.core import dispatch
+from repro.core.dispatch import attention_dispatch
+from repro.core.policy import list_policies
+
+D = 32
+
+
+def _psnr(a, b) -> float:
+    mse = float(np.mean((np.asarray(a) - np.asarray(b)) ** 2))
+    rng = float(np.asarray(a).max() - np.asarray(a).min())
+    return 10 * np.log10(rng ** 2 / max(mse, 1e-12))
+
+
+def main(policies: Optional[Sequence[str]] = None,
+         steps: Optional[int] = None,
+         grid: Optional[Tuple[int, int, int]] = None) -> None:
+    grid = grid or GRID
+    total_steps = steps or 10
+    q, k = correlated_qk(grid=grid, d=D)
+    v = jax.random.normal(jax.random.PRNGKey(7), q.shape)
+    # mid-schedule step: inside [i_min, i_max] when the schedule fits,
+    # otherwise whatever the tiny smoke step count allows
+    cfg = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                       i_min=min(2, max(total_steps - 2, 0)),
+                       i_max=max(total_steps - 2, 1))
+    step = jnp.asarray(max(total_steps // 2, cfg.i_min))
+
+    dense = np.asarray(attention_dispatch(
+        q, k, v, grid=grid, cfg=cfg, step=step, total_steps=total_steps,
+        backend="dense"))
+
+    for name in policies or list_policies():
+        cfg_p = dataclasses.replace(cfg, policy=name)
+        dispatch.clear_plan_cache()
+
+        def run(cfg_p=cfg_p):
+            return attention_dispatch(q, k, v, grid=grid, cfg=cfg_p,
+                                      step=step, total_steps=total_steps)
+
+        out, stats = attention_dispatch(
+            q, k, v, grid=grid, cfg=cfg_p, step=step,
+            total_steps=total_steps, with_stats=True)
+        us = timed(jax.jit(run))
+        sav = float(stats.savings)
+        print(f"policy_sweep[{name}],{us:.0f},{sav:.3f}")
+        print(f"policy_sweep[{name}_psnr],{us:.0f},"
+              f"{_psnr(dense, out):.1f}")
+
+
+if __name__ == "__main__":
+    main()

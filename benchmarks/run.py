@@ -4,23 +4,44 @@ Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
 wall time of the whole benchmark computation on this CPU container
 (relative only); ``derived`` is the headline metric reproduced from the
 paper.  Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+
+``--policy NAME [--steps N]`` runs only the reuse-policy sweep
+(benchmarks/policy_sweep.py) for that registered policy at a tiny grid —
+the CI smoke invocation is ``--policy dense --steps 2``.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow Tbl. 2 savings benchmark")
+    ap.add_argument("--policy", default=None,
+                    help="run only the policy sweep, for this registered "
+                         "reuse policy, at a tiny smoke grid")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="denoising-step count for the policy sweep")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+
+    if args.policy is not None:
+        from benchmarks import policy_sweep
+
+        policy_sweep.main(policies=[args.policy],
+                          steps=args.steps or 2, grid=(2, 4, 4))
+        return
+
     from benchmarks import (fig7_mse, fig9_steps, fig11_window,
-                            kernel_bench, serve_mixed, tbl3_ablation,
-                            tbl4_channelwise)
+                            kernel_bench, policy_sweep, serve_mixed,
+                            tbl3_ablation, tbl4_channelwise)
     mods = [fig7_mse, fig9_steps, fig11_window, tbl3_ablation,
-            tbl4_channelwise, kernel_bench, serve_mixed]
-    if not quick:
+            tbl4_channelwise, policy_sweep, kernel_bench, serve_mixed]
+    if not args.quick:
         from benchmarks import tbl2_savings
         mods.insert(0, tbl2_savings)
     failures = []

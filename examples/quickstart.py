@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import RippleConfig
-from repro.core.ripple_attention import _dense_attention, ripple_attention
+from repro.core.dispatch import attention_dispatch, dense_attention
 from repro.data.synthetic import correlated_video_latents
 
 # 1. A video-shaped token grid: 8 frames of 16x16 latent tokens.
@@ -32,13 +32,13 @@ v = jnp.einsum("bhnd,df->bhnf", x, wv)
 #    threshold for denoising step 25 of 50, partial-score reuse.
 cfg = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
                    i_min=10, i_max=20)
-out, stats = ripple_attention(q, k, v, grid=GRID, cfg=cfg,
-                              step=jnp.asarray(25), total_steps=50,
-                              with_stats=True)
+out, stats = attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                step=jnp.asarray(25), total_steps=50,
+                                with_stats=True)
 
 # 4. Compare against dense attention — and against masking at the SAME
 #    savings ratio (paper Fig. 7: that comparison is the whole point).
-dense = _dense_attention(q, k, v, 1.0 / jnp.sqrt(D))
+dense = dense_attention(q, k, v, 1.0 / jnp.sqrt(D))
 rel_err = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
 
 from repro.core.reuse import compute_reuse           # noqa: E402
@@ -48,7 +48,7 @@ rq = compute_reuse(q, GRID, th)
 rk = compute_reuse(k, GRID, th)
 q_skip = jnp.where(rq.mask, 0.0, q)   # skip-instead-of-reuse baseline
 k_skip = jnp.where(rk.mask, 0.0, k)
-skip_out = _dense_attention(q_skip, k_skip, v, 1.0 / jnp.sqrt(D))
+skip_out = dense_attention(q_skip, k_skip, v, 1.0 / jnp.sqrt(D))
 rel_err_skip = float(jnp.linalg.norm(skip_out - dense)
                      / jnp.linalg.norm(dense))
 

@@ -63,6 +63,10 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="(data, model) mesh for sharded attention "
                          "dispatch, e.g. 2x1")
+    ap.add_argument("--policy", default="ripple",
+                    help="reuse policy for the accelerated pass "
+                         "(core.policy registry: ripple, svg, equal_mse, "
+                         "dense, or anything registered out-of-tree)")
     args = ap.parse_args()
 
     if args.mesh:
@@ -81,9 +85,12 @@ def main():
     arch = dataclasses.replace(arch, shapes=(gen_shape,))
 
     results = {}
-    for label, ripple in (("dense", False), ("timeripple", True)):
+    # --policy dense must not overwrite the baseline's results slot
+    accel = args.policy if args.policy != "dense" else "dense_policy"
+    for label, ripple in (("dense", False), (accel, True)):
         sample_fn, lat_shape = build_sampler(arch, gen_shape, params,
-                                             use_ripple=ripple)
+                                             use_ripple=ripple,
+                                             policy=args.policy)
         engine = DiffusionEngine(sample_fn, lat_shape, max_batch=2)
         engine.start()
         m = arch.model
@@ -100,8 +107,8 @@ def main():
               f"(mean/request {np.mean([o.walltime_s for o in outs]):.2f}s)")
 
     for i in range(args.requests):
-        p = psnr(results["dense"][i].latents, results["timeripple"][i].latents)
-        print(f"request {i}: ripple-vs-dense PSNR {p:.1f} dB")
+        p = psnr(results["dense"][i].latents, results[accel][i].latents)
+        print(f"request {i}: {accel}-vs-dense PSNR {p:.1f} dB")
     print("NOTE: CPU wall time does not reflect TPU speedup; the realized "
           "MXU skip is reported by benchmarks/kernel_bench.py and the "
           "roofline deltas in EXPERIMENTS.md §Perf.")

@@ -65,6 +65,12 @@ class RippleConfig:
     # skip fully-reused Q rows (DESIGN.md §4). 'reference' computes the
     # snapped attention densely (paper-faithful accounting only).
     execution: str = "reference"  # 'reference' | 'collapse'
+    # Reuse-policy *strategy* (DESIGN.md §11): which registered
+    # ``core.policy.ReusePolicy`` decides the masks/snaps.  Built-ins:
+    # 'ripple' (the paper), 'svg' (head-classified block masks),
+    # 'equal_mse' (Fig. 9 equal-impact schedule), 'dense' (no-op
+    # baseline); out-of-tree strategies register under their own name.
+    policy: str = "ripple"
     # Attention backend consumed by ``core.dispatch.attention_dispatch``
     # (DESIGN.md §8).  'auto' picks the Pallas kernel on TPU when the
     # shape is eligible and otherwise falls back to ``execution``; the

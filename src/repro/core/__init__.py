@@ -26,6 +26,17 @@ from repro.core.dispatch import (
     set_dispatch_mesh,
     shape_bucket,
 )
-from repro.core.ripple_attention import ripple_attention, RippleStats
-from repro.core.calibrate import calibrate_threshold, fit_step_sensitivity
-from repro.core.svg_mask import svg_block_mask
+# The pluggable reuse-policy seam (DESIGN.md §11): register a strategy
+# once and it is servable end-to-end via cfg.policy / --policy.
+from repro.core.policy import (
+    ReuseDecision,
+    ReusePolicy,
+    RippleStats,
+    get_policy,
+    list_policies,
+    register_policy,
+)
+from repro.core.ripple_attention import ripple_attention
+from repro.core.calibrate import (calibrate_threshold, equal_mse_schedule,
+                                  fit_step_sensitivity)
+from repro.core.svg_mask import svg_block_mask, svg_logit_bias

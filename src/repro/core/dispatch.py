@@ -3,17 +3,23 @@ model targets (DESIGN.md §8).
 
 ``attention_dispatch(q, k, v, grid=..., cfg=..., ...)`` owns, in order:
 
-  1. **Backend selection** — dense SDPA, the dense snapped reference,
+  1. **Policy resolution** — which sparsity *strategy* decides the
+     masks/snaps: a registered :class:`~repro.core.policy.ReusePolicy`
+     ('ripple', 'svg', 'equal_mse', 'dense', or anything registered
+     out-of-tree), resolved from ``cfg.policy`` / the explicit
+     ``policy`` argument (DESIGN.md §11).  The policy produces one
+     :class:`~repro.core.policy.ReuseDecision`; dispatch executes it.
+  2. **Backend selection** — dense SDPA, the dense snapped reference,
      the exact pair-collapse math, or the block-skipping Pallas ripple
      kernel; resolved from ``cfg.backend`` / the explicit ``backend``
-     argument, the platform, and shape eligibility.
-  2. **Mask pipeline placement** — the Fig. 6 step ①-② Δ-checks run
+     argument, the platform, the policy's needs, and shape eligibility.
+  3. **Mask pipeline placement** — the Fig. 6 step ①-② Δ-checks run
      either fused on-device (``kernels/reuse_mask``) or on the host
      (``core.reuse``), per ``cfg.fused_mask`` and grid eligibility.
-  3. **Shape bucketing** — plan lookups key on power-of-two shape
+  4. **Shape bucketing** — plan lookups key on power-of-two shape
      buckets, so nearby workload shapes share one resolved plan and the
      jit cache does not fragment per exact token count.
-  4. **Block-size autotuning** — per (shape-bucket, backend) block sizes
+  5. **Block-size autotuning** — per (shape-bucket, backend) block sizes
      for the Pallas kernel come from a persistent on-disk cache
      (``REPRO_AUTOTUNE_CACHE``), populated offline by
      :func:`autotune_attention` (benchmarks/kernel_bench.py sweeps it);
@@ -51,11 +57,17 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config.base import RippleConfig
-from repro.core import reuse as reuse_lib
-from repro.core import savings as savings_lib
 from repro.core.collapse import collapsed_attention
-from repro.core.schedule import axis_thresholds
-from repro.core.svg_mask import svg_block_mask
+from repro.core.policy import (ReuseDecision, ReusePolicy, RippleStats,
+                               get_policy, list_policies, register_policy)
+
+__all__ = [
+    "attention_dispatch", "autotune_attention", "DispatchPlan",
+    "RippleStats", "ReuseDecision", "ReusePolicy", "dense_attention",
+    "dispatch_mesh", "get_policy", "list_policies", "plan_for_shape",
+    "register_policy", "resolve_backend", "resolve_plan",
+    "set_dispatch_mesh", "shape_bucket",
+]
 
 BACKENDS = ("auto", "dense", "reference", "collapse", "pallas")
 _DEFAULT_BLOCKS = (128, 128)
@@ -65,19 +77,15 @@ BLOCK_CANDIDATES = ((64, 64), (128, 128), (128, 256), (256, 128),
                     (256, 256))
 
 
-@dataclasses.dataclass
-class RippleStats:
-    savings: jax.Array             # paper accounting (partial-score reuse)
-    structural_savings: jax.Array  # realized by the collapse path
-    q_snap_frac: jax.Array
-    k_snap_frac: jax.Array
-
-
 @dataclasses.dataclass(frozen=True)
 class DispatchPlan:
-    """Resolved execution plan for one (shape-bucket, backend) cell."""
+    """Resolved execution plan for one (policy, shape-bucket, backend)
+    cell.  ``policy`` is the resolved reuse-policy *name* (the object is
+    looked up at execution time so re-registration takes effect); the
+    plan/LRU caches and the shard_map path key on it."""
 
     backend: str          # 'dense' | 'reference' | 'collapse' | 'pallas'
+    policy: str = "ripple"
     block_q: int = 128
     block_k: int = 128
     fused_mask: bool = False
@@ -101,7 +109,7 @@ class DispatchPlan:
         mask = " fused-mask" if self.fused_mask else ""
         shard = (f" shard=batch{self.batch_shards}x"
                  f"heads{self.head_shards}" if self.sharded else "")
-        return (f"attention[{self.backend}{blk}{mask}{shard} "
+        return (f"attention[{self.policy}/{self.backend}{blk}{mask}{shard} "
                 f"bucket={self.bucket}]")
 
 
@@ -314,19 +322,36 @@ def _platform() -> str:
 
 
 def resolve_backend(cfg: RippleConfig, backend: Optional[str], *,
-                    has_bias: bool, n_tokens: int) -> str:
-    """Collapse 'auto' onto a concrete backend for this call."""
+                    has_bias: bool, n_tokens: int,
+                    policy: Optional[ReusePolicy] = None) -> str:
+    """Collapse 'auto' onto a concrete backend for this call.
+
+    The policy's declared needs gate the choice without the dispatcher
+    knowing the strategy: bias-emitting policies avoid the biasless
+    auto-Pallas path, non-snapping policies gain nothing from collapse.
+    """
+    pol = policy if policy is not None else get_policy(cfg.policy)
     b = backend or cfg.backend or "auto"
     if b not in BACKENDS:
         raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")
-    if not cfg.active():
+    if not cfg.active() or pol.is_dense:
         return "dense"
+    emits_bias = pol.will_emit_bias(cfg)
     if b != "auto":
+        # A policy-emitted bias rules out backends that can't carry it:
+        # the Pallas kernel asserts bias is None, and collapse assumes a
+        # window-constant bias (an SVG block mask isn't).  Downgrade the
+        # explicit choice to the reference path rather than crash inside
+        # a jitted sampler — same fall-back-not-error stance as sharding.
+        if emits_bias and b in ("pallas", "collapse"):
+            return "reference"
         return b
-    pallas_ok = (_platform() == "tpu" and not has_bias and not cfg.svg_mask
+    pallas_ok = (_platform() == "tpu" and not has_bias and not emits_bias
                  and cfg.window == 2 and n_tokens % 2 == 0)
     if pallas_ok:
         return "pallas"
+    if not pol.snaps_operands or emits_bias:
+        return "reference"
     return "collapse" if cfg.execution == "collapse" else "reference"
 
 
@@ -344,19 +369,24 @@ def _fused_requested(cfg: RippleConfig) -> bool:
 def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
                  backend: Optional[str] = None,
                  has_bias: bool = False,
-                 mesh: Optional[Mesh] = None) -> DispatchPlan:
+                 mesh: Optional[Mesh] = None,
+                 policy=None) -> DispatchPlan:
     """Shape-bucketed, cached plan resolution (trace-safe: shapes only).
 
     ``mesh`` defaults to the active dispatch mesh; when one is present
     the cache keys on the *exact* leading dims (sharding eligibility is
     a divisibility property, not a bucket property) plus the mesh shape.
+    ``policy`` (a registered name or ReusePolicy) defaults to
+    ``cfg.policy``; the cache keys on the policy name.
     """
     if mesh is None:
         mesh = _ACTIVE_MESH
+    pol = get_policy(policy if policy is not None else cfg.policy)
     n = q_shape[-2]
-    resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n)
+    resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n,
+                               policy=pol)
     key = _bucket_key(q_shape, v_shape, resolved) \
-        + (cfg.fused_mask, cfg.window, cfg.granularity)
+        + (pol.name, cfg.fused_mask, cfg.window, cfg.granularity)
     if mesh is not None:
         key = key + (_mesh_key(mesh), tuple(q_shape[:-2]))
     plan = _PLAN_CACHE.get(key)
@@ -370,8 +400,8 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
     b_axes, h_axis, b_shards, h_shards = (
         _resolve_sharding(mesh, q_shape) if resolved != "dense"
         else ((), None, 1, 1))
-    plan = DispatchPlan(backend=resolved, block_q=bq, block_k=bk,
-                        fused_mask=_fused_requested(cfg),
+    plan = DispatchPlan(backend=resolved, policy=pol.name, block_q=bq,
+                        block_k=bk, fused_mask=_fused_requested(cfg),
                         bucket=key[1:3], tuned=tuned,
                         batch_axes=b_axes, head_axis=h_axis,
                         batch_shards=b_shards, head_shards=h_shards)
@@ -384,7 +414,8 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
 def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
                    batch_heads: int = 1, heads: int = 0,
                    backend: Optional[str] = None,
-                   mesh: Optional[Mesh] = None) -> DispatchPlan:
+                   mesh: Optional[Mesh] = None,
+                   policy=None) -> DispatchPlan:
     """Plan metadata for launchers/engines that only know shapes.
 
     ``heads`` (when it divides ``batch_heads``) splits the flattened
@@ -395,7 +426,8 @@ def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
         shape = (batch_heads // heads, heads, n_tokens, head_dim)
     else:
         shape = (batch_heads, n_tokens, head_dim)
-    return resolve_plan(shape, shape, cfg, backend=backend, mesh=mesh)
+    return resolve_plan(shape, shape, cfg, backend=backend, mesh=mesh,
+                        policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -403,97 +435,32 @@ def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
 # ---------------------------------------------------------------------------
 
 
-def _zeroed_inactive(thetas: Dict[str, jax.Array],
-                     active_axes: Sequence[str]) -> Dict[str, jax.Array]:
-    out = dict(thetas)
-    for a in ("t", "x", "y"):
-        if a not in active_axes:
-            out[a] = jnp.zeros(())  # Δ ≥ 0 ⇒ never below 0 ⇒ disabled
-    return out
-
-
-def _snap_segment(seg, grid, thetas, cfg: RippleConfig, active_axes,
-                  use_fused: bool):
-    """Step ①-② on one contiguous grid segment: fused kernel when the
-    plan asks for it and the shape qualifies, host pipeline otherwise."""
-    if use_fused:
-        from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
-                                                  fused_reuse_eligible)
-        if fused_reuse_eligible(grid, window=cfg.window,
-                                granularity=cfg.granularity,
-                                axes=active_axes):
-            return fused_compute_reuse(seg, grid, thetas, axes=active_axes,
-                                       granularity=cfg.granularity)
-    r = reuse_lib.compute_reuse(
-        seg, grid, thetas, axes=active_axes, window=cfg.window,
-        granularity=cfg.granularity, channel_groups=cfg.channel_groups)
-    return r.snapped, r.mask
-
-
-def _snap_operand(x, do: bool, grid, thetas, cfg, active_axes, grid_slice,
-                  use_fused: bool):
-    if not do:
-        return x, jnp.zeros(x.shape, jnp.bool_)
-    if grid_slice is None:
-        return _snap_segment(x, grid, thetas, cfg, active_axes, use_fused)
-    s, n = grid_slice
-    seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
-    snapped_seg, mask_seg = _snap_segment(seg, grid, thetas, cfg,
-                                          active_axes, use_fused)
-    snapped = jax.lax.dynamic_update_slice_in_dim(x, snapped_seg, s, axis=-2)
-    mask = jnp.zeros(x.shape, jnp.bool_)
-    mask = jax.lax.dynamic_update_slice_in_dim(mask, mask_seg, s, axis=-2)
-    return snapped, mask
-
-
-def _svg_bias(q_s, k_s, grid, grid_slice, bias):
-    if grid_slice is None:
-        keep = svg_block_mask(q_s, k_s, grid)
-    else:
-        # classify/mask only the grid tokens; text rows/cols stay dense
-        s, n = grid_slice
-        q_seg = jax.lax.slice_in_dim(q_s, s, s + n, axis=-2)
-        k_seg = jax.lax.slice_in_dim(k_s, s, s + n, axis=-2)
-        keep_seg = svg_block_mask(q_seg, k_seg, grid)
-        N = q_s.shape[-2]
-        keep = jnp.broadcast_to(jnp.ones((N, N), jnp.bool_),
-                                q_s.shape[:-2] + (N, N))
-        keep = jax.lax.dynamic_update_slice(
-            keep, keep_seg.astype(jnp.bool_),
-            (0,) * (q_s.ndim - 2) + (s, s))
-    svg = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
-    return svg if bias is None else bias + svg
-
-
 def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
-                  grid, cfg: RippleConfig, grid_slice, active_axes):
-    """Fig. 6 steps ①-④ for one resolved plan: snap Q/K, optional SVG
-    bias, then the planned backend.  Returns (out, q_mask, k_mask).
-    Shard-oblivious: runs identically on the full operands or on one
-    shard_map shard (the Δ-checks only look along t/x/y, DESIGN.md §10).
+                  grid, cfg: RippleConfig, grid_slice,
+                  policy: ReusePolicy):
+    """Fig. 6 steps ①-④ for one resolved plan: the policy's decision
+    (snap / mask), then the planned backend on it.  Returns
+    (out, ReuseDecision).  Shard-oblivious: runs identically on the full
+    operands or on one shard_map shard (decisions only look along t/x/y,
+    DESIGN.md §10).
     """
-    q_s, q_mask = _snap_operand(q, cfg.snap_q, grid, thetas, cfg,
-                                active_axes, grid_slice, plan.fused_mask)
-    k_s, k_mask = _snap_operand(k, cfg.snap_k, grid, thetas, cfg,
-                                active_axes, grid_slice, plan.fused_mask)
-
-    if cfg.svg_mask:
-        bias = _svg_bias(q_s, k_s, grid, grid_slice, bias)
+    d = policy.decide(q, k, grid=grid, cfg=cfg, thetas=thetas, bias=bias,
+                      grid_slice=grid_slice, fused=plan.fused_mask)
 
     if plan.backend == "pallas":
         # Deferred import: kernels are optional at module-import time.
         from repro.kernels.ripple.ops import ripple_attention_pallas
 
-        out = ripple_attention_pallas(q_s, k_s, v, bias=bias,
+        out = ripple_attention_pallas(d.q, d.k, v, bias=d.bias,
                                       window=cfg.window,
                                       block_q=plan.block_q,
                                       block_k=plan.block_k)
     elif plan.backend == "collapse":
-        out = collapsed_attention(q_s, k_s, v, bias=bias, window=cfg.window,
-                                  scale=scale)
-    else:  # 'reference': dense attention on the snapped operands
-        out = dense_attention(q_s, k_s, v, scale, bias)
-    return out, q_mask, k_mask
+        out = collapsed_attention(d.q, d.k, v, bias=d.bias,
+                                  window=cfg.window, scale=scale)
+    else:  # 'reference': dense attention on the decided operands
+        out = dense_attention(d.q, d.k, v, scale, d.bias)
+    return out, d
 
 
 def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
@@ -509,11 +476,12 @@ def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
 
 def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
                       mesh: Mesh, grid, cfg: RippleConfig, grid_slice,
-                      active_axes):
+                      policy: ReusePolicy):
     """Run :func:`_run_pipeline` under shard_map over the plan's batch /
     head axes.  No collectives: the sharded axes never carry a reuse
-    window, so each shard's Δ-check mask is self-contained (zero halo)
-    and the result is bitwise-identical to the replicated path."""
+    window (the policy contract — decisions look only along t/x/y), so
+    each shard's decision is self-contained (zero halo) and the result
+    is bitwise-identical to the replicated path."""
     from jax.experimental.shard_map import shard_map
 
     spec = _operand_spec(plan, q.ndim)
@@ -523,9 +491,9 @@ def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
 
     def body(qs, ks, vs, th, sc):
         th_d = {"t": th[0], "x": th[1], "y": th[2]}
-        out, _, _ = _run_pipeline(qs, ks, vs, th_d, sc, None, plan=plan,
-                                  grid=grid, cfg=cfg, grid_slice=grid_slice,
-                                  active_axes=active_axes)
+        out, _ = _run_pipeline(qs, ks, vs, th_d, sc, None, plan=plan,
+                               grid=grid, cfg=cfg, grid_slice=grid_slice,
+                               policy=policy)
         return out
 
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec, P(), P()),
@@ -547,23 +515,27 @@ def attention_dispatch(
     grid_slice: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
     mesh: Optional[Mesh] = None,
+    policy=None,
     with_stats: bool = False,
 ):
-    """TimeRipple attention behind one dispatch seam.
+    """Sparse attention behind one dispatch seam.
 
-    q, k, v: (..., N, head_dim), post-RoPE.  ``backend`` overrides
+    q, k, v: (..., N, head_dim), post-RoPE.  ``policy`` (a registered
+    name or ReusePolicy) overrides ``cfg.policy`` — it chooses the
+    sparsity *strategy* (DESIGN.md §11); ``backend`` overrides
     ``cfg.backend`` for this call ('dense' bypasses the reuse pipeline
-    entirely — e.g. cross-attention).  ``thetas`` overrides the Eq. 4
-    schedule (otherwise derived from ``step``/``total_steps``).  ``mesh``
-    overrides the active dispatch mesh; when the resolved plan carries
-    sharding, the pipeline runs under shard_map (DESIGN.md §10).
+    entirely — e.g. cross-attention).  ``thetas`` overrides the policy's
+    per-step schedule (otherwise derived from ``step``/``total_steps``).
+    ``mesh`` overrides the active dispatch mesh; when the resolved plan
+    carries sharding, the pipeline runs under shard_map (DESIGN.md §10).
     Returns ``out`` or ``(out, RippleStats)``.
     """
     if mesh is None:
         mesh = _ACTIVE_MESH
+    pol = get_policy(policy if policy is not None else cfg.policy)
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
-                        has_bias=bias is not None, mesh=mesh)
+                        has_bias=bias is not None, mesh=mesh, policy=pol)
     if plan.backend == "dense" or not cfg.active():
         out = dense_attention(q, k, v, scale, bias)
         if with_stats:
@@ -571,12 +543,7 @@ def attention_dispatch(
             return out, RippleStats(zero, zero, zero, zero)
         return out
 
-    if thetas is None:
-        assert step is not None and total_steps is not None, (
-            "attention_dispatch needs explicit thetas or (step, total_steps)")
-        thetas = axis_thresholds(cfg, step, total_steps)
-    active_axes = tuple(cfg.axes)
-    thetas = _zeroed_inactive(thetas, active_axes)
+    thetas = pol.thetas_for(cfg, step, total_steps, thetas)
 
     # Sharded fast path: stats need global reductions and an external
     # bias would need its own spec — both stay on the replicated path.
@@ -584,20 +551,12 @@ def attention_dispatch(
             and not with_stats):
         return _sharded_pipeline(q, k, v, thetas, scale, plan=plan,
                                  mesh=mesh, grid=grid, cfg=cfg,
-                                 grid_slice=grid_slice,
-                                 active_axes=active_axes)
+                                 grid_slice=grid_slice, policy=pol)
 
-    out, q_mask, k_mask = _run_pipeline(
+    out, decision = _run_pipeline(
         q, k, v, thetas, scale, bias, plan=plan, grid=grid, cfg=cfg,
-        grid_slice=grid_slice, active_axes=active_axes)
+        grid_slice=grid_slice, policy=pol)
 
     if with_stats:
-        stats = RippleStats(
-            savings=savings_lib.partial_score_savings(q_mask, k_mask),
-            structural_savings=savings_lib.collapse_savings(
-                q_mask, k_mask, cfg.window),
-            q_snap_frac=jnp.mean(q_mask.astype(jnp.float32)),
-            k_snap_frac=jnp.mean(k_mask.astype(jnp.float32)),
-        )
-        return out, stats
+        return out, pol.stats(decision)
     return out

@@ -1,0 +1,432 @@
+"""Pluggable reuse-policy registry — the *strategy* seam of the
+attention-dispatch layer (DESIGN.md §11).
+
+TimeRipple's channel-wise spatio-temporal reuse is one way to exploit
+latent-space correlation; Sparse VideoGen's spatial/temporal head
+classification (arXiv 2502.01776) and Sparse-vDiT's pattern-per-head
+sparsity (arXiv 2506.03065) are others.  A :class:`ReusePolicy` owns
+every strategy-specific choice:
+
+  * the per-step threshold schedule (:meth:`ReusePolicy.thetas_for`),
+  * offline calibration against sample activations
+    (:meth:`ReusePolicy.calibrate`),
+  * the mask / snap decision itself (:meth:`ReusePolicy.decide`,
+    returning one :class:`ReuseDecision`),
+  * the expected-savings estimate and stats
+    (:meth:`ReusePolicy.stats`).
+
+``core.dispatch.attention_dispatch`` consumes the decision uniformly —
+it executes the planned backend on ``decision.q`` / ``decision.k`` with
+``decision.bias`` and never inspects which strategy produced them.
+Adding a new sparsity idea is therefore a :func:`register_policy` call
+(~50 lines), not a fork of the dispatch pipeline; ``--policy NAME`` on
+the launchers selects it end-to-end, and the serving engine buckets
+per-request on the policy name.
+
+Built-in policies:
+
+  ``ripple``     the paper: windowed Δ-checks snap Q/K entries to their
+                 window representative (Eq. 3/4 schedule, ``core.reuse``)
+  ``svg``        Sparse VideoGen-style head-classified spatial/temporal
+                 block masks (``core.svg_mask``) as a logit bias
+  ``equal_mse``  ripple's decision with the Fig. 9 equal-impact
+                 per-step schedule (``core.calibrate``) instead of the
+                 linear ramp
+  ``dense``      no-op baseline; plans resolve straight to the dense
+                 backend
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import RippleConfig
+from repro.core import reuse as reuse_lib
+from repro.core import savings as savings_lib
+from repro.core.reuse import AXES
+from repro.core.schedule import axis_thresholds
+from repro.core.svg_mask import svg_logit_bias
+
+
+@dataclasses.dataclass
+class RippleStats:
+    savings: jax.Array             # paper accounting (partial-score reuse)
+    structural_savings: jax.Array  # realized by the collapse path
+    q_snap_frac: jax.Array
+    k_snap_frac: jax.Array
+
+
+@dataclasses.dataclass
+class ReuseDecision:
+    """What one policy decided for one attention call.
+
+    ``q`` / ``k`` are the operands the backend must execute on (snapped
+    by operand-rewriting policies, untouched otherwise); ``bias`` is the
+    combined additive logit bias (the caller's bias plus any mask the
+    policy emits).  ``q_mask`` / ``k_mask`` are boolean snap masks for
+    the savings accounting (None for policies that never snap), and
+    ``savings`` is the policy's expected-savings estimate for this call.
+    """
+
+    q: jax.Array
+    k: jax.Array
+    thetas: Dict[str, jax.Array]
+    active_axes: Tuple[str, ...]
+    bias: Optional[jax.Array] = None
+    q_mask: Optional[jax.Array] = None
+    k_mask: Optional[jax.Array] = None
+    savings: Optional[jax.Array] = None
+    window: int = 2  # collapse-window size the masks were computed with
+
+
+def zero_inactive_axes(thetas: Dict[str, jax.Array],
+                       active_axes: Sequence[str]) -> Dict[str, jax.Array]:
+    """Disable the Δ-check on axes outside ``active_axes`` (Δ ≥ 0, so a
+    zero threshold can never fire)."""
+    out = dict(thetas)
+    for a in AXES:
+        if a not in active_axes:
+            out[a] = jnp.zeros(())
+    return out
+
+
+def _zero_thetas() -> Dict[str, jax.Array]:
+    return {a: jnp.zeros(()) for a in AXES}
+
+
+class ReusePolicy:
+    """Base class / protocol for reuse policies.
+
+    Out-of-tree strategies subclass this (or duck-type it), override
+    :meth:`decide` (and usually :meth:`thetas_for`), and call
+    :func:`register_policy`.  The three class attributes tell plan
+    resolution what the policy needs — they gate backend selection
+    without the dispatch layer knowing the strategy itself:
+
+      ``emits_bias``       decide() may attach a logit bias (mask
+                           policies) → backends that can't take a bias
+                           (auto-Pallas, collapse) are avoided
+      ``snaps_operands``   decide() may rewrite Q/K entries → the
+                           collapse backend is worth choosing
+      ``is_dense``         no-op baseline → plans resolve to 'dense'
+    """
+
+    name: str = ""
+    emits_bias: bool = False
+    snaps_operands: bool = True
+    is_dense: bool = False
+
+    def will_emit_bias(self, cfg: RippleConfig) -> bool:
+        """Will :meth:`decide` attach a logit bias under this config?
+        Backend resolution uses this (not ``emits_bias`` directly) so
+        config-conditional masks — e.g. ripple's ``cfg.svg_mask`` combo
+        — are also kept off the biasless backends."""
+        return self.emits_bias
+
+    # -- per-step threshold schedule ------------------------------------
+
+    def thetas_for(self, cfg: RippleConfig, step, total_steps,
+                   thetas: Optional[Dict[str, jax.Array]] = None
+                   ) -> Dict[str, jax.Array]:
+        """Per-axis thresholds for one denoising step.  ``thetas`` is a
+        caller override (already-derived values); implementations must
+        still apply their axis gating to it.  Must be jittable in
+        ``step`` (samplers scan over steps)."""
+        return _zero_thetas()
+
+    # -- offline calibration --------------------------------------------
+
+    def calibrate(self, q: jax.Array, k: jax.Array,
+                  grid: Tuple[int, int, int], cfg: RippleConfig,
+                  target_savings: float) -> Dict[str, object]:
+        """Fit strategy parameters on sample Q/K activations.  Returns a
+        dict of ``RippleConfig`` field overrides (possibly empty) to
+        apply via ``dataclasses.replace`` — how the Tbl. 1
+        hyper-parameters were found for the paper's policy."""
+        return {}
+
+    # -- the mask / snap decision ---------------------------------------
+
+    def decide(self, q: jax.Array, k: jax.Array, *,
+               grid: Tuple[int, int, int], cfg: RippleConfig,
+               thetas: Dict[str, jax.Array],
+               bias: Optional[jax.Array] = None,
+               grid_slice: Optional[Tuple[int, int]] = None,
+               fused: bool = False) -> ReuseDecision:
+        """The strategy itself.  Shard-oblivious by contract: it must
+        produce identical values on the full operands and on one
+        shard_map shard (decisions may only look along the t/x/y token
+        axes, never across batch or heads — DESIGN.md §10)."""
+        raise NotImplementedError
+
+    # -- savings accounting ---------------------------------------------
+
+    def stats(self, decision: ReuseDecision) -> RippleStats:
+        """RippleStats for ``with_stats=True`` callers."""
+        zero = jnp.zeros(())
+        if decision.q_mask is None or decision.k_mask is None:
+            s = decision.savings if decision.savings is not None else zero
+            return RippleStats(savings=s, structural_savings=s,
+                               q_snap_frac=zero, k_snap_frac=zero)
+        return RippleStats(
+            savings=savings_lib.partial_score_savings(
+                decision.q_mask, decision.k_mask),
+            structural_savings=savings_lib.collapse_savings(
+                decision.q_mask, decision.k_mask, decision.window),
+            q_snap_frac=jnp.mean(decision.q_mask.astype(jnp.float32)),
+            k_snap_frac=jnp.mean(decision.k_mask.astype(jnp.float32)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Snap helpers shared by the operand-rewriting policies (the Fig. 6
+# step ①-② pipeline, fused on-device or host-side per the plan)
+# ---------------------------------------------------------------------------
+
+
+def _snap_segment(seg, grid, thetas, cfg: RippleConfig, active_axes,
+                  use_fused: bool):
+    """Step ①-② on one contiguous grid segment: fused kernel when the
+    plan asks for it and the shape qualifies, host pipeline otherwise."""
+    if use_fused:
+        from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
+                                                  fused_reuse_eligible)
+        if fused_reuse_eligible(grid, window=cfg.window,
+                                granularity=cfg.granularity,
+                                axes=active_axes):
+            return fused_compute_reuse(seg, grid, thetas, axes=active_axes,
+                                       granularity=cfg.granularity)
+    r = reuse_lib.compute_reuse(
+        seg, grid, thetas, axes=active_axes, window=cfg.window,
+        granularity=cfg.granularity, channel_groups=cfg.channel_groups)
+    return r.snapped, r.mask
+
+
+def snap_operand(x, do: bool, grid, thetas, cfg: RippleConfig, active_axes,
+                 grid_slice, use_fused: bool):
+    """Snap one operand (or pass it through with an all-False mask when
+    ``do`` is off).  ``grid_slice`` restricts snapping to the grid
+    tokens of a mixed text+grid sequence."""
+    if not do:
+        return x, jnp.zeros(x.shape, jnp.bool_)
+    if grid_slice is None:
+        return _snap_segment(x, grid, thetas, cfg, active_axes, use_fused)
+    s, n = grid_slice
+    seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
+    snapped_seg, mask_seg = _snap_segment(seg, grid, thetas, cfg,
+                                          active_axes, use_fused)
+    snapped = jax.lax.dynamic_update_slice_in_dim(x, snapped_seg, s, axis=-2)
+    mask = jnp.zeros(x.shape, jnp.bool_)
+    mask = jax.lax.dynamic_update_slice_in_dim(mask, mask_seg, s, axis=-2)
+    return snapped, mask
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies
+# ---------------------------------------------------------------------------
+
+
+class RipplePolicy(ReusePolicy):
+    """The paper's policy: Eq. 4 linear-ramp schedule + windowed Δ-check
+    snapping on Q/K (``cfg.svg_mask`` additionally composes the SVG
+    block mask on top, the TIMERIPPLE+SVG row of Tbl. 2)."""
+
+    name = "ripple"
+
+    def will_emit_bias(self, cfg):
+        return self.emits_bias or cfg.svg_mask
+
+    def thetas_for(self, cfg, step, total_steps, thetas=None):
+        if thetas is None:
+            assert step is not None and total_steps is not None, (
+                "attention_dispatch needs explicit thetas or "
+                "(step, total_steps)")
+            thetas = axis_thresholds(cfg, step, total_steps)
+        return zero_inactive_axes(thetas, tuple(cfg.axes))
+
+    def calibrate(self, q, k, grid, cfg, target_savings):
+        from repro.core.calibrate import calibrate_threshold
+
+        theta = calibrate_threshold(q, k, grid, cfg, target_savings)
+        return {"fixed_threshold": theta}
+
+    def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
+               fused=False):
+        active_axes = tuple(cfg.axes)
+        q_s, q_mask = snap_operand(q, cfg.snap_q, grid, thetas, cfg,
+                                   active_axes, grid_slice, fused)
+        k_s, k_mask = snap_operand(k, cfg.snap_k, grid, thetas, cfg,
+                                   active_axes, grid_slice, fused)
+        if cfg.svg_mask:
+            _, bias = svg_logit_bias(q_s, k_s, grid, grid_slice, bias)
+        return ReuseDecision(
+            q=q_s, k=k_s, thetas=thetas, active_axes=active_axes, bias=bias,
+            q_mask=q_mask, k_mask=k_mask,
+            savings=savings_lib.partial_score_savings(q_mask, k_mask),
+            window=cfg.window)
+
+
+class EqualMSEPolicy(RipplePolicy):
+    """Ripple's decision under the Fig. 9 equal-impact schedule.
+
+    The analytical step-sensitivity model (``core.calibrate``): the MSE
+    a fixed θ induces decays log-linearly in the denoising step
+    (``fit_step_sensitivity``), and at a fixed step MSE grows ~θ², so
+    holding the induced MSE constant at its i_min level gives
+
+        θ_i = θ_min · exp(−slope · (i − i_min) / 2)
+
+    clipped to [θ_min, θ_max].  A table calibrated offline by
+    ``equal_mse_schedule`` against *measured* MSEs overrides the
+    analytic form (:meth:`from_schedule`).
+    """
+
+    name = "equal_mse"
+
+    def __init__(self, mse_slope: float = -0.15,
+                 theta_table: Optional[np.ndarray] = None,
+                 table_i_min: Optional[int] = None):
+        self.mse_slope = float(mse_slope)
+        self.theta_table = (None if theta_table is None
+                            else np.asarray(theta_table, np.float32))
+        self.table_i_min = table_i_min
+
+    @classmethod
+    def from_schedule(cls, thetas: np.ndarray, i_min: int,
+                      name: Optional[str] = None) -> "EqualMSEPolicy":
+        """Wrap a per-step θ table from ``calibrate.equal_mse_schedule``."""
+        pol = cls(theta_table=thetas, table_i_min=i_min)
+        if name is not None:
+            pol.name = name
+        return pol
+
+    def _shared_theta(self, cfg: RippleConfig, step, total_steps):
+        i_min = (self.table_i_min if self.table_i_min is not None
+                 else cfg.i_min)
+        if self.theta_table is not None:
+            tbl = jnp.asarray(self.theta_table, jnp.float32)
+            idx = jnp.clip(jnp.asarray(step, jnp.int32) - i_min, 0,
+                           tbl.shape[0] - 1)
+            theta = tbl[idx]
+        else:
+            i = jnp.asarray(step, jnp.float32)
+            lo = min(cfg.theta_min, cfg.theta_max)
+            hi = max(cfg.theta_min, cfg.theta_max)
+            ramp = cfg.theta_min * jnp.exp(
+                -0.5 * self.mse_slope * (i - i_min))
+            theta = jnp.clip(ramp, lo, hi)
+        active = jnp.logical_and(
+            jnp.asarray(step) >= i_min,
+            jnp.asarray(step) < jnp.asarray(total_steps) - 1)
+        return jnp.where(active, theta, 0.0)
+
+    def thetas_for(self, cfg, step, total_steps, thetas=None):
+        if thetas is None:
+            assert step is not None and total_steps is not None, (
+                "equal_mse needs explicit thetas or (step, total_steps)")
+            shared = self._shared_theta(cfg, step, total_steps)
+            thetas = {a: shared for a in AXES}
+        return zero_inactive_axes(thetas, tuple(cfg.axes))
+
+
+class SVGPolicy(ReusePolicy):
+    """Sparse VideoGen-style structured masking, promoted from the
+    TIMERIPPLE+SVG combination to a standalone strategy: each head is
+    classified online as spatial (frame-block-diagonal) or temporal
+    (strided-diagonal) and the losing mask's blocks are dropped via a
+    −inf logit bias.  Q/K are never rewritten."""
+
+    name = "svg"
+    emits_bias = True
+    snaps_operands = False
+
+    def thetas_for(self, cfg, step, total_steps, thetas=None):
+        return _zero_thetas()  # no Δ-thresholds; masks are classified
+
+    def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
+               fused=False):
+        keep, bias = svg_logit_bias(q, k, grid, grid_slice, bias)
+        return ReuseDecision(
+            q=q, k=k, thetas=thetas, active_axes=(), bias=bias,
+            savings=1.0 - jnp.mean(keep.astype(jnp.float32)))
+
+    def stats(self, decision):
+        zero = jnp.zeros(())
+        # savings = skippable score fraction (mask density); structural
+        # stays 0 — the reference backend computes the full dense score
+        # matrix and only zeroes weights, so until a block-skipping
+        # backend honours the mask nothing is *realized*.
+        return RippleStats(savings=decision.savings,
+                           structural_savings=zero,
+                           q_snap_frac=zero, k_snap_frac=zero)
+
+
+class DensePolicy(ReusePolicy):
+    """No-op baseline: every plan resolves to the dense backend, so
+    ``--policy dense`` measures the exact cost of turning reuse off
+    without touching the config."""
+
+    name = "dense"
+    snaps_operands = False
+    is_dense = True
+
+    def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
+               fused=False):
+        return ReuseDecision(q=q, k=k, thetas=thetas, active_axes=(),
+                             bias=bias, savings=jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: "OrderedDict[str, ReusePolicy]" = OrderedDict()
+
+
+def register_policy(policy: ReusePolicy, *, name: Optional[str] = None,
+                    override: bool = False) -> ReusePolicy:
+    """Register ``policy`` under ``name`` (default ``policy.name``).
+
+    Registration is the whole integration surface: a registered name is
+    immediately valid as ``RippleConfig.policy``, as
+    ``attention_dispatch(..., policy=...)``, as a per-request
+    ``GenRequest.policy``, and as ``--policy`` on the launchers.  Plan
+    caches key on the policy *name*, so re-registering (``override``)
+    takes effect for new plans without a cache flush.
+    """
+    n = name or getattr(policy, "name", "")
+    if not n or not isinstance(n, str):
+        raise ValueError(f"policy {policy!r} needs a non-empty string name")
+    if n in _REGISTRY and not override:
+        raise ValueError(
+            f"policy {n!r} already registered (pass override=True to "
+            f"replace it)")
+    _REGISTRY[n] = policy
+    return policy
+
+
+def get_policy(name) -> ReusePolicy:
+    """Look up a registered policy; ReusePolicy instances pass through."""
+    if isinstance(name, ReusePolicy):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown reuse policy {name!r}; registered: "
+                       f"{list_policies()}") from None
+
+
+def list_policies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register_policy(RipplePolicy())
+register_policy(SVGPolicy())
+register_policy(EqualMSEPolicy())
+register_policy(DensePolicy())

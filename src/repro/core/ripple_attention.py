@@ -12,9 +12,9 @@
 
 Since the dispatch refactor (DESIGN.md §8) the pipeline itself lives in
 ``core.dispatch``; this module keeps the historical entry point and its
-``backend='jnp'|'pallas'`` convention for benchmarks, examples, and
-tests.  Model code routes through
-:func:`repro.core.dispatch.attention_dispatch` instead.
+``backend='jnp'|'pallas'`` convention for out-of-tree callers only.
+**Deprecated**: call :func:`repro.core.dispatch.attention_dispatch`
+instead (a one-time DeprecationWarning says so at first use).
 
 Inputs are post-RoPE Q/K — the RoPE channel groups are what carry the
 spatio-temporal structure the checks exploit (paper §3.1-3.2).  When the
@@ -24,6 +24,7 @@ restricts reuse to the grid tokens; text tokens are never snapped.
 
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -33,6 +34,8 @@ from repro.core.dispatch import (RippleStats, attention_dispatch,
                                  dense_attention)
 
 __all__ = ["ripple_attention", "RippleStats"]
+
+_deprecation_warned = False
 
 
 def _dense_attention(q, k, v, scale, bias=None):
@@ -61,7 +64,16 @@ def ripple_attention(
     the ripple kernel.  thetas overrides the Eq. 4 schedule (otherwise
     derived from ``step``/``total_steps``).  Returns ``out`` or
     ``(out, RippleStats)``.
+
+    .. deprecated:: use :func:`repro.core.dispatch.attention_dispatch`.
     """
+    global _deprecation_warned
+    if not _deprecation_warned:
+        _deprecation_warned = True
+        warnings.warn(
+            "repro.core.ripple_attention.ripple_attention is deprecated; "
+            "call repro.core.dispatch.attention_dispatch instead",
+            DeprecationWarning, stacklevel=2)
     if backend == "jnp":
         resolved = "collapse" if cfg.execution == "collapse" else "reference"
     else:

@@ -66,3 +66,29 @@ def svg_block_mask(q: jax.Array, k: jax.Array, grid) -> jax.Array:
     sp = jnp.asarray(spatial_mask(grid))
     tm = jnp.asarray(temporal_mask(grid))
     return jnp.where(is_spatial[..., None, None], sp, tm)
+
+
+def svg_logit_bias(q: jax.Array, k: jax.Array, grid,
+                   grid_slice=None, bias=None):
+    """Keep-mask + additive −inf logit bias for the classified block mask.
+
+    ``grid_slice=(start, n)`` restricts classification and masking to the
+    grid tokens of a mixed text+grid sequence — text rows/columns stay
+    dense.  Returns ``(keep, bias)`` where ``bias`` folds any caller-
+    provided bias in.
+    """
+    if grid_slice is None:
+        keep = svg_block_mask(q, k, grid)
+    else:
+        s, n = grid_slice
+        q_seg = jax.lax.slice_in_dim(q, s, s + n, axis=-2)
+        k_seg = jax.lax.slice_in_dim(k, s, s + n, axis=-2)
+        keep_seg = svg_block_mask(q_seg, k_seg, grid)
+        N = q.shape[-2]
+        keep = jnp.broadcast_to(jnp.ones((N, N), jnp.bool_),
+                                q.shape[:-2] + (N, N))
+        keep = jax.lax.dynamic_update_slice(
+            keep, keep_seg.astype(jnp.bool_),
+            (0,) * (q.ndim - 2) + (s, s))
+    svg = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+    return keep, (svg if bias is None else bias + svg)

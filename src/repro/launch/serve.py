@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import importlib
 import time
 
 import jax
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.config.base import apply_overrides
 from repro.core import dispatch as dispatch_lib
+from repro.core.policy import list_policies
 from repro.diffusion.sampler import ddim_sample, euler_flow_sample
 from repro.diffusion.schedule import DDPMSchedule
 from repro.launch.mesh import parse_mesh_spec
@@ -36,12 +38,16 @@ from repro.utils.logging import get_logger
 log = get_logger("launch.serve")
 
 
-def build_sampler(arch, shape, params, *, use_ripple=True):
+def build_sampler(arch, shape, params, *, use_ripple=True, policy=None):
     """Returns sample_fn(noise, txt, rngs) -> latents and the latent
     shape.  ``rngs`` is the engine's (B, 2) per-request key batch: the
     initial noise is built outside from the same keys, and conditioning
     randomness (DiT labels) is drawn per request via vmap — no request
-    in a batch ever shares sampler randomness."""
+    in a batch ever shares sampler randomness.  ``policy`` overrides the
+    arch config's reuse policy for this sampler (DESIGN.md §11)."""
+    if policy:
+        arch = dataclasses.replace(
+            arch, ripple=dataclasses.replace(arch.ripple, policy=policy))
     m = arch.model
     fam = arch.family
     steps = shape.steps or 50
@@ -78,19 +84,22 @@ def build_sampler(arch, shape, params, *, use_ripple=True):
 def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
                          mesh=None):
     """(engine sampler_factory, plan_fn) over a set of generate cells,
-    keyed by the engine's (latent_shape, steps) bucket identity."""
+    keyed by the engine's (latent_shape, steps, policy) bucket identity.
+    The engine hands both callables the bucket's reuse-policy name
+    (None = the arch config's ``ripple.policy``)."""
     by_bucket = {}
     for sp in shapes:
         by_bucket[(tuple(latent_shape_for(arch, sp)), sp.steps)] = sp
 
-    def factory(latent_shape, steps):
+    def factory(latent_shape, steps, policy=None):
         sp = by_bucket[(tuple(latent_shape), steps)]
-        fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple)
+        fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple,
+                              policy=policy)
         return fn
 
-    def plan_fn(latent_shape, steps):
+    def plan_fn(latent_shape, steps, policy=None):
         sp = by_bucket[(tuple(latent_shape), steps)]
-        return attention_plan(arch, sp, mesh=mesh)
+        return attention_plan(arch, sp, mesh=mesh, policy=policy)
 
     return factory, plan_fn
 
@@ -110,6 +119,14 @@ def main(argv=None):
     ap.add_argument("--max-compiled", type=int, default=8,
                     help="bounded LRU of per-bucket compiled samplers")
     ap.add_argument("--no-ripple", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help="reuse-policy name for every request (built-ins: "
+                         "ripple, svg, equal_mse, dense; out-of-tree "
+                         "policies register via --policy-module). "
+                         "Default: the arch config's ripple.policy")
+    ap.add_argument("--policy-module", default=None, metavar="MODULE",
+                    help="import this python module before serving so it "
+                         "can register_policy() an out-of-tree strategy")
     ap.add_argument("--attn-backend", default=None,
                     choices=("auto", "dense", "reference", "collapse",
                              "pallas"),
@@ -118,6 +135,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
+
+    if args.policy_module:
+        importlib.import_module(args.policy_module)
+    if args.policy is not None and args.policy not in list_policies():
+        ap.error(f"unknown policy {args.policy!r}; registered: "
+                 f"{list_policies()} (use --policy-module to register "
+                 f"an out-of-tree policy first)")
 
     mesh = parse_mesh_spec(args.mesh) if args.mesh else None
     if mesh is not None:
@@ -146,10 +170,11 @@ def main(argv=None):
     engine = DiffusionEngine(sampler_factory=factory,
                              max_batch=args.max_batch,
                              max_compiled=args.max_compiled,
-                             plan_fn=plan_fn)
+                             plan_fn=plan_fn,
+                             default_policy=args.policy)
     engine.start()
     traffic = mixed_request_stream(arch, shapes, args.requests,
-                                   seed=args.seed)
+                                   seed=args.seed, policy=args.policy)
     t0 = time.time()
     for _, req in traffic:
         engine.submit(req)

@@ -415,14 +415,16 @@ def _diffusion_generate(arch: ArchConfig, shape: ShapeSpec, mesh) -> Workload:
 
 
 def attention_plan(arch: ArchConfig, shape: ShapeSpec,
-                   mesh: Optional[Mesh] = None):
+                   mesh: Optional[Mesh] = None,
+                   policy: Optional[str] = None):
     """Resolved dispatch plan for the cell's joint self-attention shape.
 
     Metadata only (the models resolve their own plans at trace time via
     ``attention_dispatch``); UNet is skipped — its attention runs at
     several resolutions with level-dependent head dims.  ``mesh`` makes
     the recorded batch/head sharding match what the sharded serving path
-    will execute (DESIGN.md §10).
+    will execute (DESIGN.md §10); ``policy`` overrides the arch config's
+    reuse policy (DESIGN.md §11).
     """
     m = arch.model
     fam = arch.family
@@ -440,7 +442,7 @@ def attention_plan(arch: ArchConfig, shape: ShapeSpec,
     bh = max(shape.batch, 1) * _cfg_factor(arch) * heads
     return dispatch_lib.plan_for_shape(n, m.d_model // heads, arch.ripple,
                                        batch_heads=bh, heads=heads,
-                                       mesh=mesh)
+                                       mesh=mesh, policy=policy)
 
 
 # --- serving traffic helpers ----------------------------------------------------
@@ -495,9 +497,11 @@ def mixed_gen_shapes(arch: ArchConfig, *, smoke: bool = False,
 
 
 def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
-                         seed: int = 0):
+                         seed: int = 0, policy: Optional[str] = None):
     """Round-robin (ShapeSpec, GenRequest) traffic over ``shapes`` with
-    deterministic per-request text embeddings and seeds."""
+    deterministic per-request text embeddings and seeds.  ``policy``
+    stamps every request with that reuse-policy name (its own engine
+    bucket dimension)."""
     from repro.serving.engine import GenRequest
 
     m = arch.model
@@ -510,7 +514,7 @@ def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
             (txt_tokens, txt_dim)).astype(np.float32)
         out.append((sp, GenRequest(
             request_id=i, txt=txt, steps=sp.steps, seed=seed + i,
-            latent_shape=latent_shape_for(arch, sp))))
+            latent_shape=latent_shape_for(arch, sp), policy=policy)))
     return out
 
 

@@ -24,6 +24,7 @@ long_500k shape cells and the LM serving example).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 import time
 from collections import OrderedDict, deque
@@ -37,9 +38,28 @@ from repro.utils.logging import get_logger
 
 log = get_logger("serve")
 
-# (latent_shape, steps); legacy single-sampler engines use steps=-1 so
-# requests with differing ``steps`` still share the one compiled entry.
-BucketKey = Tuple[Tuple[int, ...], int]
+# (latent_shape, steps, policy); legacy single-sampler engines use
+# steps=-1 so requests with differing ``steps`` still share the one
+# compiled entry; policy is the reuse-policy name (None = the engine /
+# sampler default), so requests under different sparsity strategies
+# never share a compiled sampler.
+BucketKey = Tuple[Tuple[int, ...], int, Optional[str]]
+
+
+def _takes_policy(fn: Optional[Callable]) -> bool:
+    """Does ``fn`` accept a third positional (policy) argument?  Legacy
+    two-argument factories / plan_fns keep working unchanged."""
+    if fn is None:
+        return False
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        return False
+    if any(p.kind == p.VAR_POSITIONAL for p in params):
+        return True
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return len(positional) >= 3
 
 
 @dataclasses.dataclass
@@ -51,6 +71,9 @@ class GenRequest:
     guidance: float = 4.0
     # None -> the engine's default latent shape (single-shape traffic).
     latent_shape: Optional[Tuple[int, ...]] = None
+    # Reuse-policy name for this request (core.policy registry); None ->
+    # the engine's default policy.  Part of the bucket identity.
+    policy: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -65,11 +88,15 @@ class GenResult:
 class DiffusionEngine:
     """Continuous-batching engine over bucketed samplers.
 
-    ``sampler_factory(latent_shape, steps) -> sample_fn`` builds (and
-    jits) the sampler for one bucket; ``sample_fn(latents0, txt, rngs)``
-    takes a ``(B, 2)`` uint32 batch of per-request PRNG keys.  The legacy
-    single-sampler form ``DiffusionEngine(sample_fn, latent_shape)`` is
-    still accepted: every request then lands in one default bucket.
+    ``sampler_factory(latent_shape, steps[, policy]) -> sample_fn``
+    builds (and jits) the sampler for one bucket; ``sample_fn(latents0,
+    txt, rngs)`` takes a ``(B, 2)`` uint32 batch of per-request PRNG
+    keys.  Factories (and ``plan_fn``) that accept a third argument
+    receive the bucket's reuse-policy name (``GenRequest.policy`` /
+    ``default_policy``); two-argument factories keep working.  The
+    legacy single-sampler form ``DiffusionEngine(sample_fn,
+    latent_shape)`` is still accepted: every request then lands in one
+    default bucket.
     """
 
     def __init__(self, sample_fn: Optional[Callable] = None,
@@ -78,13 +105,21 @@ class DiffusionEngine:
                  max_batch: int = 8, max_wait_s: float = 0.05,
                  max_compiled: int = 8, starve_after_s: float = 2.0,
                  attn_plan: Optional[Any] = None,
-                 plan_fn: Optional[Callable] = None):
+                 plan_fn: Optional[Callable] = None,
+                 default_policy: Optional[str] = None):
         if sampler_factory is None:
             if sample_fn is None:
                 raise ValueError("need sample_fn or sampler_factory")
             sampler_factory = lambda shape, steps: sample_fn  # noqa: E731
         self._factory = sampler_factory
+        self._factory_takes_policy = _takes_policy(sampler_factory)
+        self._plan_fn_takes_policy = _takes_policy(plan_fn)
         self._legacy = sample_fn is not None
+        if default_policy is not None and not self._factory_takes_policy:
+            raise ValueError(
+                "default_policy is set but the sampler factory does not "
+                "take a policy argument — it could not honour it")
+        self.default_policy = default_policy
         self.latent_shape = latent_shape
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -130,6 +165,13 @@ class DiffusionEngine:
             self._thread = None
 
     def submit(self, req: GenRequest):
+        if req.policy is not None and not self._factory_takes_policy:
+            # Silently serving the default strategy while the bucket key
+            # pretends otherwise would be worse than refusing.
+            raise ValueError(
+                f"request {req.request_id} sets policy={req.policy!r} but "
+                "this engine's sampler factory does not take a policy "
+                "argument")
         key = self._bucket_key(req)
         with self._lock:
             if self._stop:
@@ -162,7 +204,8 @@ class DiffusionEngine:
             raise ValueError(f"request {req.request_id}: no latent shape "
                              "(set GenRequest.latent_shape or the engine "
                              "default)")
-        return (shape, -1 if self._legacy else req.steps)
+        return (shape, -1 if self._legacy else req.steps,
+                req.policy or self.default_policy)
 
     def _next_bucket(self) -> Optional[BucketKey]:
         """Hottest (deepest) bucket first — unless some bucket's head
@@ -207,12 +250,16 @@ class DiffusionEngine:
         survives eviction."""
         fn = self._compiled.get(key)
         if fn is None:
-            shape, steps = key
-            fn = self._factory(shape, steps)
+            shape, steps, pol = key
+            fn = (self._factory(shape, steps, pol)
+                  if self._factory_takes_policy
+                  else self._factory(shape, steps))
             self._compiled[key] = fn
             if self.plan_fn is not None:
                 try:
-                    plan = self.plan_fn(shape, steps)
+                    plan = (self.plan_fn(shape, steps, pol)
+                            if self._plan_fn_takes_policy
+                            else self.plan_fn(shape, steps))
                     # None = no plan to report (e.g. UNet's multi-
                     # resolution attention has no single dispatch plan)
                     if plan is not None:
@@ -227,7 +274,7 @@ class DiffusionEngine:
 
     def _serve(self, key: BucketKey, batch: List[GenRequest]):
         t0 = time.time()
-        shape, _ = key
+        shape = key[0]
         try:
             fn = self._sampler(key)
             txt = jnp.stack([jnp.asarray(r.txt) for r in batch])

@@ -1,0 +1,118 @@
+"""Tests for core/calibrate.py — threshold bisection, the Fig. 9
+step-sensitivity fit, the equal-MSE schedule — and the calibration hooks
+the reuse policies expose over them (DESIGN.md §11)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config.base import RippleConfig
+from repro.core.calibrate import (calibrate_threshold, equal_mse_schedule,
+                                  fit_step_sensitivity, savings_at_threshold)
+from repro.core.policy import EqualMSEPolicy, get_policy
+from repro.data.synthetic import correlated_video_latents
+
+GRID = (8, 8, 8)
+D = 32
+CFG = RippleConfig(enabled=True)
+
+
+def _correlated_qk(seed=0):
+    lat = correlated_video_latents(jax.random.PRNGKey(seed), 1, GRID, D,
+                                   temporal_rho=0.95, spatial_smooth=2)
+    x = lat.reshape(1, 1, -1, D)
+    wq = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 1), (D, D))
+    wk = 0.5 * jax.random.normal(jax.random.PRNGKey(seed + 2), (D, D))
+    return x @ wq, x @ wk
+
+
+class TestCalibrateThreshold:
+    def test_hits_target_savings(self):
+        q, k = _correlated_qk()
+        theta = calibrate_threshold(q, k, GRID, CFG, target_savings=0.5)
+        s = savings_at_threshold(q, k, GRID, CFG, theta)
+        assert s == pytest.approx(0.5, abs=0.05)
+
+    def test_monotone_in_target(self):
+        q, k = _correlated_qk(1)
+        t_lo = calibrate_threshold(q, k, GRID, CFG, target_savings=0.3)
+        t_hi = calibrate_threshold(q, k, GRID, CFG, target_savings=0.7)
+        assert t_lo < t_hi
+
+    def test_savings_monotone_in_theta(self):
+        q, k = _correlated_qk(2)
+        s = [savings_at_threshold(q, k, GRID, CFG, t)
+             for t in (0.0, 0.3, 1.0, 4.0)]
+        assert s[0] == 0.0
+        assert all(b >= a for a, b in zip(s, s[1:]))
+
+    def test_ripple_policy_calibrate_returns_override(self):
+        q, k = _correlated_qk(3)
+        out = get_policy("ripple").calibrate(q, k, GRID, CFG, 0.5)
+        assert set(out) == {"fixed_threshold"}
+        cfg = dataclasses.replace(CFG, **out)
+        s = savings_at_threshold(q, k, GRID, CFG, cfg.fixed_threshold)
+        assert s == pytest.approx(0.5, abs=0.05)
+
+
+class TestFitStepSensitivity:
+    def test_recovers_known_line(self):
+        steps = np.arange(10, 31)
+        slope, intercept = -0.2, 1.5
+        mses = np.exp(slope * steps + intercept)
+        fit = fit_step_sensitivity(steps, mses)
+        assert fit["slope"] == pytest.approx(slope, abs=1e-6)
+        assert fit["intercept"] == pytest.approx(intercept, abs=1e-6)
+
+    def test_robust_to_zero_mse(self):
+        steps = np.asarray([1.0, 2.0, 3.0])
+        fit = fit_step_sensitivity(steps, np.asarray([1e-3, 0.0, 1e-5]))
+        assert np.isfinite(fit["slope"]) and np.isfinite(fit["intercept"])
+
+
+class TestEqualMSESchedule:
+    # Synthetic sensitivity model: MSE(θ, i) = θ² · exp(slope·i) — MSE
+    # quadratic in the threshold, log-linearly decaying in the step
+    # (exactly the Fig. 9 structure the schedule inverts).
+    SLOPE = -0.2
+
+    def _mse(self, theta, i):
+        return theta ** 2 * np.exp(self.SLOPE * i)
+
+    def test_constant_induced_mse(self):
+        fit = {"slope": self.SLOPE, "intercept": 0.0}
+        thetas = equal_mse_schedule(fit, self._mse, i_min=10, i_max=20,
+                                    theta_at_imin=0.2)
+        target = self._mse(0.2, 10)
+        induced = [self._mse(t, i) for t, i in zip(thetas, range(10, 21))]
+        np.testing.assert_allclose(induced, target, rtol=1e-3)
+
+    def test_schedule_is_increasing(self):
+        fit = {"slope": self.SLOPE, "intercept": 0.0}
+        thetas = equal_mse_schedule(fit, self._mse, i_min=5, i_max=15,
+                                    theta_at_imin=0.3)
+        assert len(thetas) == 11
+        assert thetas[0] == pytest.approx(0.3, abs=1e-3)
+        assert all(b > a for a, b in zip(thetas, thetas[1:]))
+
+    def test_feeds_equal_mse_policy(self):
+        """The full caller path calibrate.py was missing: fit → schedule
+        → a servable policy instance."""
+        fit = fit_step_sensitivity(
+            np.arange(4, 12),
+            np.asarray([self._mse(0.25, i) for i in range(4, 12)]))
+        thetas = equal_mse_schedule(fit, self._mse, i_min=4, i_max=11,
+                                    theta_at_imin=0.25)
+        pol = EqualMSEPolicy.from_schedule(thetas, i_min=4)
+        got = [float(pol.thetas_for(CFG, np.int32(i), 20)["t"])
+               for i in range(4, 12)]
+        np.testing.assert_allclose(got, thetas, rtol=1e-5)
+        # analytic fallback tracks the fitted slope's growth rate
+        analytic = EqualMSEPolicy(mse_slope=fit["slope"])
+        a = [float(analytic.thetas_for(
+            dataclasses.replace(CFG, theta_min=0.25, theta_max=10.0,
+                                i_min=4),
+            np.int32(i), 20)["t"]) for i in range(4, 12)]
+        np.testing.assert_allclose(a, thetas, rtol=0.05)

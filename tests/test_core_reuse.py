@@ -14,7 +14,7 @@ from repro.config.base import RippleConfig
 from repro.core import reuse, savings
 from repro.core.collapse import (collapsed_attention, pair_flags,
                                  pair_major_order)
-from repro.core.ripple_attention import _dense_attention, ripple_attention
+from repro.core.dispatch import attention_dispatch, dense_attention
 from repro.core.schedule import axis_thresholds, threshold_for_step
 
 GRID = (4, 4, 6)
@@ -170,7 +170,7 @@ class TestCollapse:
         snapped = jnp.stack([e, o], axis=3).reshape(1, 2, 32, 8)
         v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 32, 8))
         scale = 1 / np.sqrt(8)
-        dense = _dense_attention(snapped, snapped, v, scale)
+        dense = dense_attention(snapped, snapped, v, scale)
         col = collapsed_attention(snapped, snapped, v, scale=scale)
         np.testing.assert_allclose(np.asarray(col), np.asarray(dense),
                                    atol=2e-5)
@@ -199,16 +199,16 @@ class TestRippleAttention:
 
     def test_dense_when_disabled(self):
         q, k, v = _qk(1), _qk(2), _qk(3)
-        out = ripple_attention(q, k, v, grid=GRID, cfg=RippleConfig())
-        ref = _dense_attention(q, k, v, 1 / np.sqrt(D))
+        out = attention_dispatch(q, k, v, grid=GRID, cfg=RippleConfig())
+        ref = dense_attention(q, k, v, 1 / np.sqrt(D))
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-6)
 
     def test_dense_at_early_steps(self):
         q, k, v = _qk(1), _qk(2), _qk(3)
-        out = ripple_attention(q, k, v, grid=GRID, cfg=self.CFG,
+        out = attention_dispatch(q, k, v, grid=GRID, cfg=self.CFG,
                                step=jnp.asarray(0), total_steps=10)
-        ref = _dense_attention(q, k, v, 1 / np.sqrt(D))
+        ref = dense_attention(q, k, v, 1 / np.sqrt(D))
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-6)
 
@@ -217,9 +217,9 @@ class TestRippleAttention:
         q, k, v = _qk(1), _qk(2), _qk(3)
         cfg_ref = dataclasses.replace(self.CFG, execution="reference")
         cfg_col = dataclasses.replace(self.CFG, execution="collapse")
-        o1 = ripple_attention(q, k, v, grid=GRID, cfg=cfg_ref,
+        o1 = attention_dispatch(q, k, v, grid=GRID, cfg=cfg_ref,
                               step=jnp.asarray(5), total_steps=10)
-        o2 = ripple_attention(q, k, v, grid=GRID, cfg=cfg_col,
+        o2 = attention_dispatch(q, k, v, grid=GRID, cfg=cfg_col,
                               step=jnp.asarray(5), total_steps=10)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
 
@@ -228,7 +228,7 @@ class TestRippleAttention:
         q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, L + N, D))
         k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, L + N, D))
         v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, L + N, D))
-        out, stats = ripple_attention(
+        out, stats = attention_dispatch(
             q, k, v, grid=GRID, cfg=self.CFG, step=jnp.asarray(5),
             total_steps=10, grid_slice=(L, N), with_stats=True)
         assert out.shape == q.shape
@@ -236,7 +236,7 @@ class TestRippleAttention:
 
     def test_stats_savings_match_calibration(self):
         q, k, v = _qk(1), _qk(2), _qk(3)
-        _, stats = ripple_attention(q, k, v, grid=GRID, cfg=self.CFG,
+        _, stats = attention_dispatch(q, k, v, grid=GRID, cfg=self.CFG,
                                     step=jnp.asarray(6), total_steps=10,
                                     with_stats=True)
         assert 0.0 < float(stats.savings) < 1.0

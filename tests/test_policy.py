@@ -1,0 +1,378 @@
+"""Reuse-policy registry tests (DESIGN.md §11): registry contract,
+per-policy ReuseDecision semantics, dispatch equivalence for every
+built-in, plan-cache keying on the policy name, and the out-of-tree
+registration path end-to-end through the serving engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import RippleConfig
+from repro.core import dispatch, policy as policy_lib
+from repro.core.dispatch import attention_dispatch, dense_attention, \
+    resolve_plan
+from repro.core.policy import (DensePolicy, EqualMSEPolicy, ReuseDecision,
+                               ReusePolicy, RipplePolicy, SVGPolicy,
+                               get_policy, list_policies, register_policy)
+from repro.core.reuse import compute_reuse
+from repro.core.svg_mask import svg_block_mask
+
+GRID = (4, 4, 6)
+N = GRID[0] * GRID[1] * GRID[2]
+D = 16
+
+CFG = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                   i_min=2, i_max=6)
+STEP = jnp.asarray(5)
+
+
+def _qkv(seed=0, shape=(2, 3, N, D)):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, shape) for k in ks)
+
+
+def _dispatch(policy, cfg=CFG, seed=1, **kw):
+    q, k, v = _qkv(seed)
+    return attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
+                              total_steps=10, policy=policy, **kw)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"ripple", "svg", "equal_mse", "dense"} <= set(list_policies())
+
+    def test_get_policy_by_name_and_instance(self):
+        pol = get_policy("ripple")
+        assert isinstance(pol, RipplePolicy)
+        assert get_policy(pol) is pol  # instances pass through
+
+    def test_unknown_policy_raises_with_listing(self):
+        with pytest.raises(KeyError, match="ripple"):
+            get_policy("nope")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(RipplePolicy())
+
+    def test_override_and_custom_name(self):
+        pol = RipplePolicy()
+        try:
+            register_policy(pol, name="ripple_test_tmp")
+            assert get_policy("ripple_test_tmp") is pol
+            pol2 = register_policy(RipplePolicy(), name="ripple_test_tmp",
+                                   override=True)
+            assert get_policy("ripple_test_tmp") is pol2
+        finally:
+            policy_lib._REGISTRY.pop("ripple_test_tmp", None)
+
+    def test_nameless_policy_rejected(self):
+        with pytest.raises(ValueError, match="name"):
+            register_policy(ReusePolicy())
+
+
+class TestBuiltinDecisions:
+    """Each built-in's ReuseDecision honours the dataclass contract."""
+
+    def test_ripple_decision_snaps_and_masks(self):
+        q, k, _ = _qkv(2)
+        pol = get_policy("ripple")
+        thetas = pol.thetas_for(CFG, STEP, 10)
+        d = pol.decide(q, k, grid=GRID, cfg=CFG, thetas=thetas)
+        assert d.q.shape == q.shape and d.k.shape == k.shape
+        assert d.q_mask.dtype == jnp.bool_ and d.q_mask.shape == q.shape
+        assert 0.0 < float(d.savings) < 1.0
+        assert d.active_axes == ("t", "x", "y")
+        # snapped exactly where the host pipeline says
+        r = compute_reuse(q, GRID, thetas)
+        np.testing.assert_array_equal(np.asarray(d.q), np.asarray(r.snapped))
+
+    def test_svg_decision_emits_bias_not_snaps(self):
+        q, k, _ = _qkv(3)
+        pol = get_policy("svg")
+        assert pol.emits_bias and not pol.snaps_operands
+        d = pol.decide(q, k, grid=GRID, cfg=CFG,
+                       thetas=pol.thetas_for(CFG, STEP, 10))
+        assert d.q is q and d.k is k  # operands untouched
+        assert d.bias is not None and d.bias.shape[-2:] == (N, N)
+        assert 0.0 < float(d.savings) < 1.0
+
+    def test_equal_mse_schedule_grows_with_step(self):
+        pol = get_policy("equal_mse")
+        th = [float(pol.thetas_for(CFG, jnp.asarray(i), 20)["t"])
+              for i in range(20)]
+        assert th[0] == 0.0 and th[19] == 0.0      # dense outside range
+        active = th[CFG.i_min:19]
+        assert all(b >= a for a, b in zip(active, active[1:]))
+        assert active[0] >= CFG.theta_min - 1e-6
+        assert max(active) <= CFG.theta_max + 1e-6
+
+    def test_equal_mse_table_override(self):
+        tbl = np.asarray([0.1, 0.2, 0.3], np.float32)
+        pol = EqualMSEPolicy.from_schedule(tbl, i_min=2)
+        assert float(pol.thetas_for(CFG, jnp.asarray(3), 10)["t"]) \
+            == pytest.approx(0.2)
+        # clamped to the table's last entry past its end
+        assert float(pol.thetas_for(CFG, jnp.asarray(8), 10)["t"]) \
+            == pytest.approx(0.3)
+
+    def test_dense_policy_is_noop(self):
+        pol = get_policy("dense")
+        assert pol.is_dense
+        q, k, _ = _qkv(4)
+        d = pol.decide(q, k, grid=GRID, cfg=CFG, thetas={})
+        assert d.q is q and d.k is k and d.bias is None
+        assert float(d.savings) == 0.0
+
+    def test_stats_contract(self):
+        for name in list_policies():
+            pol = get_policy(name)
+            q, k, _ = _qkv(5)
+            d = pol.decide(q, k, grid=GRID, cfg=CFG,
+                           thetas=pol.thetas_for(CFG, STEP, 10))
+            st = pol.stats(d)
+            assert 0.0 <= float(st.savings) <= 1.0
+            assert 0.0 <= float(st.q_snap_frac) <= 1.0
+
+
+class TestDispatchWithPolicies:
+    def test_ripple_is_the_default(self):
+        out_default = _dispatch(policy=None)
+        out_ripple = _dispatch(policy="ripple")
+        np.testing.assert_array_equal(np.asarray(out_default),
+                                      np.asarray(out_ripple))
+
+    def test_dense_policy_equals_dense_attention(self):
+        q, k, v = _qkv(1)
+        out = _dispatch("dense")
+        ref = dense_attention(q, k, v, 1.0 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+    def test_svg_policy_equals_masked_dense(self):
+        q, k, v = _qkv(1)
+        out = _dispatch("svg")
+        keep = svg_block_mask(q, k, GRID)
+        bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        ref = dense_attention(q, k, v, 1.0 / np.sqrt(D), bias)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+    def test_cfg_policy_field_selects(self):
+        cfg = dataclasses.replace(CFG, policy="dense")
+        q, k, v = _qkv(1)
+        out = attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
+                                 total_steps=10)
+        ref = dense_attention(q, k, v, 1.0 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+    def test_equal_mse_differs_from_ripple_midschedule(self):
+        out_r = _dispatch("ripple")
+        out_e = _dispatch("equal_mse")
+        assert not np.array_equal(np.asarray(out_r), np.asarray(out_e))
+
+    def test_policies_work_under_jit(self):
+        q, k, v = _qkv(6)
+        for name in list_policies():
+            cfg = dataclasses.replace(CFG, policy=name)
+            fn = jax.jit(lambda q, k, v, cfg=cfg: attention_dispatch(
+                q, k, v, grid=GRID, cfg=cfg, step=STEP, total_steps=10))
+            eager = attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                       step=STEP, total_steps=10)
+            np.testing.assert_allclose(np.asarray(fn(q, k, v)),
+                                       np.asarray(eager), atol=1e-5)
+
+    def test_with_stats_per_policy(self):
+        for name in ("ripple", "svg", "equal_mse"):
+            _, st = _dispatch(name, with_stats=True)
+            assert 0.0 < float(st.savings) < 1.0
+        _, st = _dispatch("dense", with_stats=True)
+        assert float(st.savings) == 0.0
+
+    def test_svg_structural_savings_not_fabricated(self):
+        """SVG runs on the dense reference backend (the bias only zeroes
+        weights), so nothing is *structurally* skipped yet — the
+        realized-savings metric must stay 0, not echo the mask density."""
+        _, st = _dispatch("svg", with_stats=True)
+        assert float(st.savings) > 0.0
+        assert float(st.structural_savings) == 0.0
+
+
+class TestPlanKeying:
+    def test_plans_key_on_policy_name(self):
+        dispatch.clear_plan_cache()
+        try:
+            shape = (1, 1, N, D)
+            p_rip = resolve_plan(shape, shape, CFG, policy="ripple")
+            p_svg = resolve_plan(shape, shape, CFG, policy="svg")
+            p_dense = resolve_plan(shape, shape, CFG, policy="dense")
+            assert p_rip is not p_svg
+            assert (p_rip.policy, p_svg.policy, p_dense.policy) == \
+                ("ripple", "svg", "dense")
+            assert p_dense.backend == "dense"
+            # same policy resolves to the same cached plan
+            assert resolve_plan(shape, shape, CFG, policy="svg") is p_svg
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_bias_policy_avoids_collapse_on_auto(self):
+        dispatch.clear_plan_cache()
+        try:
+            cfg = dataclasses.replace(CFG, execution="collapse")
+            shape = (1, 1, N, D)
+            assert resolve_plan(shape, shape, cfg).backend == "collapse"
+            assert resolve_plan(shape, shape, cfg,
+                                policy="svg").backend == "reference"
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_explicit_biasless_backend_downgrades_for_bias_policy(self):
+        """Forcing pallas/collapse with a bias-emitting policy must not
+        crash inside a jitted sampler; the plan downgrades to the
+        reference path instead."""
+        dispatch.clear_plan_cache()
+        try:
+            shape = (1, 1, N, D)
+            for forced in ("pallas", "collapse"):
+                p = resolve_plan(shape, shape, CFG, backend=forced,
+                                 policy="svg")
+                assert p.backend == "reference"
+                # the downgrade really executes: dispatch works end-to-end
+                out = _dispatch("svg", backend=forced)
+                assert np.isfinite(np.asarray(out)).all()
+            # non-bias policies keep the explicit choice
+            assert resolve_plan(shape, shape, CFG, backend="collapse",
+                                policy="ripple").backend == "collapse"
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_ripple_svg_combo_bias_kept_off_collapse(self):
+        """cfg.svg_mask makes the ripple policy emit a (non-window-
+        constant) bias too: auto must not resolve to collapse, and an
+        explicit pallas/collapse downgrades — collapse on that bias is
+        silently wrong math, pallas a trace-time crash."""
+        dispatch.clear_plan_cache()
+        try:
+            cfg = dataclasses.replace(CFG, svg_mask=True,
+                                      execution="collapse")
+            shape = (1, 1, N, D)
+            assert resolve_plan(shape, shape, cfg).backend == "reference"
+            for forced in ("pallas", "collapse"):
+                assert resolve_plan(shape, shape, cfg,
+                                    backend=forced).backend == "reference"
+            # dispatch agrees with dense-with-bias on the snapped operands
+            q, k, v = _qkv(8)
+            out = attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
+                                     total_steps=10, backend="collapse")
+            ref = attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
+                                     total_steps=10)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_plan_summary_names_policy(self):
+        dispatch.clear_plan_cache()
+        try:
+            s = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG,
+                             policy="svg").summary()
+            assert "svg" in s
+        finally:
+            dispatch.clear_plan_cache()
+
+
+class _HalfKPolicy(ReusePolicy):
+    """Out-of-tree example: snap every odd K token to its predecessor
+    (a fixed stride-2 temporal collapse, no thresholds at all)."""
+
+    name = "half_k_test"
+
+    def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
+               fused=False):
+        idx = jnp.arange(k.shape[-2])
+        src = (idx // 2) * 2
+        k_s = jnp.take(k, src, axis=-2)
+        k_mask = jnp.broadcast_to((idx % 2 == 1)[:, None], k.shape)
+        return ReuseDecision(q=q, k=k_s, thetas=thetas, active_axes=("t",),
+                             bias=bias, q_mask=jnp.zeros(q.shape, jnp.bool_),
+                             k_mask=k_mask,
+                             savings=jnp.mean(k_mask.astype(jnp.float32)),
+                             window=cfg.window)
+
+
+class TestOutOfTreeRegistration:
+    """The acceptance path: a new policy registers and serves end-to-end
+    without any edit to core/dispatch.py."""
+
+    @pytest.fixture
+    def half_k(self):
+        pol = register_policy(_HalfKPolicy(), override=True)
+        yield pol
+        policy_lib._REGISTRY.pop("half_k_test", None)
+        dispatch.clear_plan_cache()
+
+    def test_dispatch_accepts_custom_policy(self, half_k):
+        q, k, v = _qkv(7)
+        out = _dispatch("half_k_test", seed=7)
+        idx = np.arange(N)
+        k_s = np.asarray(k)[..., (idx // 2) * 2, :]
+        ref = dense_attention(q, jnp.asarray(k_s), v, 1.0 / np.sqrt(D))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+        _, st = _dispatch("half_k_test", seed=7, with_stats=True)
+        assert float(st.savings) > 0.2
+
+    def test_served_end_to_end_by_policy_bucket(self, half_k):
+        """DiffusionEngine routes per-request policies to per-policy
+        buckets; the factory receives the policy name and serves it."""
+        from repro.serving.engine import DiffusionEngine, GenRequest
+
+        built = []
+
+        def factory(latent_shape, steps, policy):
+            built.append(policy)
+            cfg = dataclasses.replace(CFG, policy=policy or "ripple")
+
+            def fn(noise, txt, rngs):
+                B = noise.shape[0]
+                q = jnp.broadcast_to(noise[:, None], (B, 1) + noise.shape[1:])
+                out = attention_dispatch(q, q, q, grid=GRID, cfg=cfg,
+                                         step=STEP, total_steps=10)
+                return out[:, 0]
+            return fn
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=2,
+                              max_wait_s=0.01)
+        eng.start()
+        lat = (N, D)
+        for rid, pol in enumerate(("half_k_test", "ripple",
+                                   "half_k_test", None)):
+            eng.submit(GenRequest(request_id=rid, txt=np.zeros((1, 1),
+                                                              np.float32),
+                                  steps=2, seed=rid, latent_shape=lat,
+                                  policy=pol))
+        outs = [eng.result(i, timeout=60) for i in range(4)]
+        eng.stop()
+        assert sorted(built, key=str) == [None, "half_k_test", "ripple"]
+        assert all(o.latents.shape == lat for o in outs)
+        # both half_k_test requests share one bucket -> same output for
+        # the same seed-independent sampler input shape
+        assert len(eng._compiled) == 3
+
+    def test_policy_refused_when_factory_cannot_honour_it(self):
+        """A legacy 2-arg factory can't build per-policy samplers;
+        serving the default strategy under a policy-tagged bucket would
+        be silent misrouting, so the engine refuses up front."""
+        from repro.serving.engine import DiffusionEngine, GenRequest
+
+        eng = DiffusionEngine(sampler_factory=lambda shape, steps:
+                              (lambda n, t, r: n))
+        with pytest.raises(ValueError, match="policy"):
+            eng.submit(GenRequest(request_id=0,
+                                  txt=np.zeros((1, 1), np.float32),
+                                  latent_shape=(2,), policy="svg"))
+        with pytest.raises(ValueError, match="default_policy"):
+            DiffusionEngine(sampler_factory=lambda shape, steps:
+                            (lambda n, t, r: n), default_policy="svg")

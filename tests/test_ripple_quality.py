@@ -17,7 +17,7 @@ import numpy as np
 from repro.config.base import RippleConfig
 from repro.core import reuse, savings
 from repro.core.calibrate import calibrate_threshold
-from repro.core.ripple_attention import _dense_attention, ripple_attention
+from repro.core.dispatch import attention_dispatch, dense_attention
 from repro.data.synthetic import correlated_video_latents
 
 GRID = (8, 8, 8)
@@ -37,8 +37,8 @@ def _correlated_qk(seed=0):
 
 def _attn_mse(q1, k1, q2, k2, v):
     scale = 1 / np.sqrt(D)
-    a = _dense_attention(q1, k1, v, scale)
-    b = _dense_attention(q2, k2, v, scale)
+    a = dense_attention(q1, k1, v, scale)
+    b = dense_attention(q2, k2, v, scale)
     return float(jnp.mean(jnp.square(a - b)))
 
 
@@ -127,7 +127,7 @@ def test_structural_savings_materialize_on_redundant_data():
     q, k = _correlated_qk(11)
     cfg = RippleConfig(enabled=True, granularity="token",
                        fixed_threshold=0.5, i_min=0, i_max=1)
-    out, stats = ripple_attention(
+    out, stats = attention_dispatch(
         q, k, jax.random.normal(jax.random.PRNGKey(12), (1, 1, N, D)),
         grid=GRID, cfg=cfg, step=jnp.asarray(0), total_steps=10,
         with_stats=True)

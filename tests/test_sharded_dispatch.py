@@ -104,6 +104,52 @@ class TestShardedParity:
         np.testing.assert_array_equal(out, ref)
 
 
+class TestPolicyParity:
+    """Every registered reuse policy's ReuseDecision must keep dispatch
+    bitwise-stable under sharding: the policy contract (DESIGN.md §11)
+    says decisions look only along t/x/y, so each shard's decision is
+    self-contained and shard_map output equals the single-device path
+    bit for bit — for ripple, svg, equal_mse, dense and anything
+    registered out-of-tree alike."""
+
+    @pytest.mark.parametrize("ways", [1, 2, 8])
+    @pytest.mark.parametrize("policy", sorted(dispatch.list_policies()))
+    def test_bitwise_equal_to_single_device(self, ways, policy):
+        require_devices(ways)
+        q, k, v = _qkv(5)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(attention_dispatch(
+            q, k, v, grid=GRID, cfg=CFG, step=jnp.asarray(5),
+            total_steps=10, policy=policy))
+        mesh = jax.make_mesh((ways, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, CFG, policy=policy)
+            assert plan.policy == policy
+            if plan.backend != "dense":
+                assert plan.batch_shards == ways
+            out = np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=CFG, step=jnp.asarray(5),
+                total_steps=10, policy=policy))
+        np.testing.assert_array_equal(out, ref)
+
+    @pytest.mark.parametrize("policy", sorted(dispatch.list_policies()))
+    def test_head_sharded_bitwise_equal(self, policy):
+        require_devices(2)
+        q, k, v = _qkv(6)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(attention_dispatch(
+            q, k, v, grid=GRID, cfg=CFG, step=jnp.asarray(5),
+            total_steps=10, policy=policy))
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            out = np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=CFG, step=jnp.asarray(5),
+                total_steps=10, policy=policy))
+        np.testing.assert_array_equal(out, ref)
+
+
 class TestFallbacks:
     def test_indivisible_batch_replicates(self):
         require_devices(2)
@@ -136,7 +182,8 @@ def test_forced_8_device_parity_subprocess(multidevice_env):
     """Always-on guarantee (even when the parent runs single-device):
     under a forced 8-virtual-device CPU backend, shard_map output for the
     vdit_paper smoke grid is bitwise-equal to the single-device path on
-    1/2/8-way batch meshes and a 4x2 batch-and-heads mesh."""
+    1/2/8-way batch meshes and a 4x2 batch-and-heads mesh — for every
+    registered reuse policy."""
     code = textwrap.dedent(f"""
         import jax, jax.numpy as jnp, numpy as np
         from repro.config.base import RippleConfig
@@ -148,16 +195,19 @@ def test_forced_8_device_parity_subprocess(multidevice_env):
                            i_min=2, i_max=6)
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         q, k, v = (jax.random.normal(kk, (8, 2, N, D)) for kk in ks)
-        run = lambda: np.asarray(attention_dispatch(
+        run = lambda pol: np.asarray(attention_dispatch(
             q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
-            total_steps=10))
-        ref = run()
-        for shape in ((1, 1), (2, 1), (8, 1), (4, 2)):
-            mesh = jax.make_mesh(shape, ("data", "model"))
-            with dispatch_mesh(mesh):
-                dispatch.clear_plan_cache()
-                np.testing.assert_array_equal(run(), ref)
-        print("sharded parity OK on", len(jax.devices()), "devices")
+            total_steps=10, policy=pol))
+        for pol in dispatch.list_policies():
+            dispatch.clear_plan_cache()
+            ref = run(pol)
+            for shape in ((1, 1), (2, 1), (8, 1), (4, 2)):
+                mesh = jax.make_mesh(shape, ("data", "model"))
+                with dispatch_mesh(mesh):
+                    dispatch.clear_plan_cache()
+                    np.testing.assert_array_equal(run(pol), ref)
+        print("sharded parity OK on", len(jax.devices()), "devices",
+              "policies", list(dispatch.list_policies()))
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=multidevice_env,

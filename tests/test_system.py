@@ -69,7 +69,6 @@ def test_ripple_preserves_trained_vdit_output():
     """After brief training, generation with TimeRipple at a mid-range
     threshold stays close to dense generation (the paper's quality
     claim, miniature edition) while achieving real savings."""
-    from repro.core.ripple_attention import ripple_attention
     from repro.data.synthetic import DataSpec, latent_video_batch
     from repro.models.vdit import vdit_apply
 
