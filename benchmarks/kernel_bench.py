@@ -10,14 +10,19 @@ paper's 75%/85% operating points:
   * the same after pair-major reordering along the dominant axis
     (the layout trick from DESIGN.md §4).
 
-Two dispatch-layer sections (DESIGN.md §8):
+Three dispatch-layer sections (DESIGN.md §8, §12):
   * ``autotune_sweep`` — drives ``core.dispatch.autotune_attention``
     over the block-size candidates and persists the winner in the
     on-disk cache the dispatcher reads;
   * ``mask_pipeline_overhead`` — fused on-device reuse-mask kernel vs
     the unfused host-side ``compute_reuse`` at the paper's
     ``vdit_paper`` latent-grid shape, as modeled HBM traffic plus
-    measured walltime.
+    measured walltime;
+  * ``sparse_backend_sweep`` — the block-sparse masked flash backend on
+    the svg policy's head-classified block map at a vdit_paper-style
+    grid: realized skipped-tile fraction, modeled attention speedup,
+    and measured sparse-vs-dense walltime (both kernels in the same
+    interpret harness, so the ratio tracks the skip rate).
 """
 
 from __future__ import annotations
@@ -147,6 +152,82 @@ def mask_pipeline_overhead(grid=None, d=128, theta=0.35):
     }
 
 
+def sparse_backend_sweep(grid=None, d=64, heads=2, block=128):
+    """The svg policy's block map through the block-sparse backend
+    (DESIGN.md §12) at a vdit_paper-style latent grid.
+
+    The grid defaults to the paper architecture's own latent geometry
+    (``configs/vdit_paper``) at reduced frames/resolution so the CPU
+    interpret run stays in seconds: same (t, x, y) structure, 2048
+    tokens.  Reported numbers:
+
+      * ``skip_rate``   — fraction of (q, k) tiles the kernel skips
+        outright, i.e. SVG's *realized* structural savings;
+      * ``modeled_attn_speedup`` — 1 / (1 − skip_rate): both the score
+        and AV matmuls of a skipped tile are elided;
+      * ``walltime_speedup`` — the same kernel on an all-dense map vs
+        the real map (identical harness, so the ratio isolates the tile
+        skips; per-step interpret overhead mutes it on CPU — the skip
+        rate is the TPU-meaningful number);
+      * ``dense_flash_us`` — the plain flash kernel as an anchor (its
+        interpret emulation is lighter than the scalar-prefetched
+        sparse one, so compare it across PRs, not against sparse_us).
+    """
+    from repro.configs.vdit_paper import make_config
+    from repro.core.policy import get_policy
+    from repro.kernels.flash.ops import flash_attention
+    from repro.kernels.sparse.ops import (sparse_attention_pallas,
+                                          sparse_block_stats)
+
+    if grid is None:
+        grid = make_config().model.grid(frames=32, img_res=256)  # (8,16,16)
+    n = grid[0] * grid[1] * grid[2]
+    lat = correlated_video_latents(jax.random.PRNGKey(11), heads, grid, d,
+                                   temporal_rho=0.95, spatial_smooth=2)
+    x = lat.reshape(1, heads, n, d)
+    wq = 0.4 * jax.random.normal(jax.random.PRNGKey(12), (d, d))
+    wk = 0.4 * jax.random.normal(jax.random.PRNGKey(13), (d, d))
+    q = jnp.einsum("bhnd,df->bhnf", x, wq)
+    k = jnp.einsum("bhnd,df->bhnf", x, wk)
+    v = jax.random.normal(jax.random.PRNGKey(14), (1, heads, n, d))
+
+    pol = get_policy("svg")
+    from repro.config.base import RippleConfig
+    from repro.kernels.sparse.ops import PARTIAL
+    cfg = RippleConfig(enabled=True)
+    dec = pol.decide(q, k, grid=grid, cfg=cfg,
+                     thetas=pol.thetas_for(cfg, 0, 1),
+                     block_shape=(block, block))
+    skip = float(sparse_block_stats(dec.block_map))
+
+    @jax.jit
+    def sparse(q, k, v, bias, bmap):
+        return sparse_attention_pallas(q, k, v, bias=bias, block_map=bmap,
+                                       block_q=block, block_k=block)
+
+    @jax.jit
+    def dense(q, k, v):
+        return flash_attention(q, k, v, block_q=block, block_k=block)
+
+    dense_map = jnp.full(dec.block_map.shape, PARTIAL, jnp.int32)
+    sparse_us = dispatch_lib.time_best(
+        lambda: sparse(q, k, v, dec.bias, dec.block_map), repeats=2) * 1e6
+    dense_map_us = dispatch_lib.time_best(
+        lambda: sparse(q, k, v, dec.bias, dense_map), repeats=2) * 1e6
+    flash_us = dispatch_lib.time_best(lambda: dense(q, k, v),
+                                      repeats=2) * 1e6
+    return {
+        "grid": grid, "d": d, "heads": heads, "block": block,
+        "mask_savings": round(float(dec.savings), 3),
+        "skip_rate": round(skip, 3),
+        "modeled_attn_speedup": round(1.0 / max(1.0 - skip, 1e-9), 2),
+        "sparse_us": round(sparse_us, 1),
+        "dense_map_us": round(dense_map_us, 1),
+        "dense_flash_us": round(flash_us, 1),
+        "walltime_speedup": round(dense_map_us / max(sparse_us, 1e-9), 2),
+    }
+
+
 def autotune_sweep(n=1024, d=64):
     """Sweep the dispatch autotuner's block candidates and persist the
     winner in the on-disk cache ``attention_dispatch`` reads."""
@@ -175,8 +256,13 @@ def main():
               f"protected:paper={r['paper_savings_protected']},"
               f"mxu_skip={r['mxu_block_skip_protected']}")
 
+    def gname(g):
+        # no commas: the CSV rows' first two fields must stay structural
+        # for the --json parser in benchmarks/run.py
+        return "x".join(str(v) for v in g)
+
     m = mask_pipeline_overhead()
-    print(f"kernel_bench[mask_fusion@vdit_paper{m['grid']}xd{m['d']}],"
+    print(f"kernel_bench[mask_fusion@vdit_paper{gname(m['grid'])}xd{m['d']}],"
           f"{m['fused_mask_us']:.0f},"
           f"fused_bytes={m['fused_mask_bytes']};"
           f"host_bytes={m['host_mask_bytes']};"
@@ -185,13 +271,23 @@ def main():
           f"walltime_ratio={m['walltime_ratio']};"
           f"fused_le_host={m['fused_le_host']}")
 
+    s = sparse_backend_sweep()
+    print(f"kernel_bench[sparse@vdit_paper{gname(s['grid'])}xd{s['d']}],"
+          f"{s['sparse_us']:.0f},"
+          f"skip_rate={s['skip_rate']};"
+          f"mask_savings={s['mask_savings']};"
+          f"modeled_attn_speedup={s['modeled_attn_speedup']};"
+          f"sparse_us={s['sparse_us']};dense_map_us={s['dense_map_us']};"
+          f"dense_flash_us={s['dense_flash_us']};"
+          f"walltime_speedup={s['walltime_speedup']}")
+
     a = autotune_sweep()
     cand = ";".join(f"{c['block_q']}x{c['block_k']}={c['us']}us"
                     for c in a["candidates"])
     print(f"kernel_bench[autotune],{a['us']:.0f},"
           f"best={a['block_q']}x{a['block_k']};device={a['device']};"
           f"{cand};cache={a['cache']}")
-    return rows + [m, a]
+    return rows + [m, s, a]
 
 
 if __name__ == "__main__":

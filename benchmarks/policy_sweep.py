@@ -11,6 +11,11 @@ Reported rows (CSV: name,us_per_call,derived):
                                  derived = savings estimate (0..1)
   policy_sweep[<policy>_psnr]  — same wall time; derived = PSNR (dB)
                                  of the policy's output vs dense
+  policy_sweep[<policy>_skip]  — only for policies resolved onto the
+                                 block-sparse backend (DESIGN.md §12):
+                                 derived = realized skipped-tile
+                                 fraction (the structural savings the
+                                 kernel actually elides)
 
 Thresholds are evaluated mid-schedule (the Eq. 4 ramp's active range);
 ``--steps`` below the active range degenerates every schedule policy to
@@ -77,6 +82,10 @@ def main(policies: Optional[Sequence[str]] = None,
         print(f"policy_sweep[{name}],{us:.0f},{sav:.3f}")
         print(f"policy_sweep[{name}_psnr],{us:.0f},"
               f"{_psnr(dense, out):.1f}")
+        plan = dispatch.resolve_plan(q.shape, v.shape, cfg_p)
+        if plan.backend == "sparse":
+            print(f"policy_sweep[{name}_skip],{us:.0f},"
+                  f"{float(stats.structural_savings):.3f}")
 
 
 if __name__ == "__main__":

@@ -7,14 +7,84 @@ paper.  Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
 
 ``--policy NAME [--steps N]`` runs only the reuse-policy sweep
 (benchmarks/policy_sweep.py) for that registered policy at a tiny grid —
-the CI smoke invocation is ``--policy dense --steps 2``.
+the CI smoke invocations are ``--policy dense --steps 2`` and
+``--policy svg --steps 2`` (the latter keeps the svg→sparse backend
+path compiling).
+
+``--json PATH`` additionally writes every CSV row as a machine-readable
+``BENCH_*.json`` record (per-benchmark ``us_per_call`` plus the derived
+metrics — including the sparse backend's skip rate) so the perf
+trajectory can be tracked across PRs; CI uploads it as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
 import sys
+import time
 import traceback
+
+
+class _Tee(io.TextIOBase):
+    """Duplicate stdout into a buffer so the CSV rows can be parsed
+    into the --json record without changing what every benchmark
+    module prints."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.chunks = []
+
+    def write(self, s):
+        self.inner.write(s)
+        self.chunks.append(s)
+        return len(s)
+
+    def flush(self):
+        self.inner.flush()
+
+
+def _parse_rows(text: str):
+    """``name,us_per_call,derived`` rows -> JSON-ready dicts.  ``derived``
+    may itself contain commas/semicolons; only the first two fields are
+    structural."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) != 3 or parts[0] in ("", "name"):
+            continue
+        if parts[0].count("(") != parts[0].count(")"):
+            continue  # a comma inside the name field, not a CSV row
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        derived: object = parts[2]
+        try:
+            derived = float(parts[2])
+        except ValueError:
+            pass  # keep the raw key=value string
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": derived})
+    return rows
+
+
+def _write_record(path: str, args, rows, failures, walltime_s: float):
+    record = {
+        "schema": "repro-bench/1",
+        "created_unix": round(time.time(), 3),
+        "args": {"quick": args.quick, "policy": args.policy,
+                 "steps": args.steps},
+        "walltime_s": round(walltime_s, 3),
+        "benchmarks": rows,
+        "failures": [{"module": m, "error": e} for m, e in failures],
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} benchmark rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -26,31 +96,41 @@ def main() -> None:
                          "reuse policy, at a tiny smoke grid")
     ap.add_argument("--steps", type=int, default=None,
                     help="denoising-step count for the policy sweep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a machine-readable BENCH_*.json "
+                         "record of every benchmark row to PATH")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
 
-    if args.policy is not None:
-        from benchmarks import policy_sweep
-
-        policy_sweep.main(policies=[args.policy],
-                          steps=args.steps or 2, grid=(2, 4, 4))
-        return
-
-    from benchmarks import (fig7_mse, fig9_steps, fig11_window,
-                            kernel_bench, policy_sweep, serve_mixed,
-                            tbl3_ablation, tbl4_channelwise)
-    mods = [fig7_mse, fig9_steps, fig11_window, tbl3_ablation,
-            tbl4_channelwise, policy_sweep, kernel_bench, serve_mixed]
-    if not args.quick:
-        from benchmarks import tbl2_savings
-        mods.insert(0, tbl2_savings)
+    t0 = time.perf_counter()
+    tee = _Tee(sys.stdout)
     failures = []
-    for mod in mods:
-        try:
-            mod.main()
-        except Exception as e:  # noqa: BLE001 — keep the suite running
-            traceback.print_exc()
-            failures.append((mod.__name__, repr(e)))
+    with contextlib.redirect_stdout(tee):
+        print("name,us_per_call,derived")
+        if args.policy is not None:
+            from benchmarks import policy_sweep
+
+            policy_sweep.main(policies=[args.policy],
+                              steps=args.steps or 2, grid=(2, 4, 4))
+        else:
+            from benchmarks import (fig7_mse, fig9_steps, fig11_window,
+                                    kernel_bench, policy_sweep, serve_mixed,
+                                    tbl3_ablation, tbl4_channelwise)
+            mods = [fig7_mse, fig9_steps, fig11_window, tbl3_ablation,
+                    tbl4_channelwise, policy_sweep, kernel_bench,
+                    serve_mixed]
+            if not args.quick:
+                from benchmarks import tbl2_savings
+                mods.insert(0, tbl2_savings)
+            for mod in mods:
+                try:
+                    mod.main()
+                except Exception as e:  # noqa: BLE001 — keep suite running
+                    traceback.print_exc()
+                    failures.append((mod.__name__, repr(e)))
+
+    if args.json:
+        _write_record(args.json, args, _parse_rows("".join(tee.chunks)),
+                      failures, time.perf_counter() - t0)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -72,10 +72,13 @@ class RippleConfig:
     # baseline); out-of-tree strategies register under their own name.
     policy: str = "ripple"
     # Attention backend consumed by ``core.dispatch.attention_dispatch``
-    # (DESIGN.md §8).  'auto' picks the Pallas kernel on TPU when the
-    # shape is eligible and otherwise falls back to ``execution``; the
-    # explicit values force one path ('dense' disables the pipeline).
-    backend: str = "auto"  # 'auto' | 'dense' | 'reference' | 'collapse' | 'pallas'
+    # (DESIGN.md §8).  'auto' picks the block-sparse masked flash kernel
+    # for block-map-emitting policies (DESIGN.md §12), the Pallas ripple
+    # kernel on TPU when the shape is eligible, and otherwise falls back
+    # to ``execution``; the explicit values force one path ('dense'
+    # disables the pipeline).
+    # 'auto' | 'dense' | 'reference' | 'collapse' | 'pallas' | 'sparse'
+    backend: str = "auto"
     # Fused on-device Δ-check + snap (kernels/reuse_mask, DESIGN.md §8).
     # 'auto' uses the fused kernel only where it is a win (TPU); 'on'
     # forces it (interpret mode on CPU — tests/benchmarks), 'off' keeps

@@ -10,9 +10,12 @@ model targets (DESIGN.md §8).
      ``policy`` argument (DESIGN.md §11).  The policy produces one
      :class:`~repro.core.policy.ReuseDecision`; dispatch executes it.
   2. **Backend selection** — dense SDPA, the dense snapped reference,
-     the exact pair-collapse math, or the block-skipping Pallas ripple
-     kernel; resolved from ``cfg.backend`` / the explicit ``backend``
-     argument, the platform, the policy's needs, and shape eligibility.
+     the exact pair-collapse math, the block-skipping Pallas ripple
+     kernel, or the block-sparse masked flash kernel
+     (``kernels/sparse``, DESIGN.md §12) for policies that tile their
+     masks into a skip/full/partial block map; resolved from
+     ``cfg.backend`` / the explicit ``backend`` argument, the platform,
+     the policy's needs, and shape eligibility.
   3. **Mask pipeline placement** — the Fig. 6 step ①-② Δ-checks run
      either fused on-device (``kernels/reuse_mask``) or on the host
      (``core.reuse``), per ``cfg.fused_mask`` and grid eligibility.
@@ -69,7 +72,7 @@ __all__ = [
     "set_dispatch_mesh", "shape_bucket",
 ]
 
-BACKENDS = ("auto", "dense", "reference", "collapse", "pallas")
+BACKENDS = ("auto", "dense", "reference", "collapse", "pallas", "sparse")
 _DEFAULT_BLOCKS = (128, 128)
 # (block_q, block_k) candidates the autotuner sweeps; the ops-level
 # wrappers pad to block multiples so every candidate is shape-legal.
@@ -84,7 +87,7 @@ class DispatchPlan:
     looked up at execution time so re-registration takes effect); the
     plan/LRU caches and the shard_map path key on it."""
 
-    backend: str          # 'dense' | 'reference' | 'collapse' | 'pallas'
+    backend: str  # 'dense' | 'reference' | 'collapse' | 'pallas' | 'sparse'
     policy: str = "ripple"
     block_q: int = 128
     block_k: int = 128
@@ -105,7 +108,7 @@ class DispatchPlan:
     def summary(self) -> str:
         blk = (f" block={self.block_q}x{self.block_k}"
                f"{' (tuned)' if self.tuned else ''}"
-               if self.backend == "pallas" else "")
+               if self.backend in ("pallas", "sparse") else "")
         mask = " fused-mask" if self.fused_mask else ""
         shard = (f" shard=batch{self.batch_shards}x"
                  f"heads{self.head_shards}" if self.sharded else "")
@@ -268,8 +271,24 @@ def autotune_attention(q, k, v, *, backend: str = "pallas",
     Runs outside any trace (benchmarks, warm-up scripts) — never call it
     from jitted model code; :func:`attention_dispatch` only *reads* the
     cache it writes.  Returns the winning cache entry.
+
+    ``backend`` picks the kernel being tuned: 'pallas' (the ripple
+    pair-collapse kernel) or 'sparse' (the block-sparse masked flash
+    kernel, timed on an all-full map — the dense-tile inner loop is
+    what the block sizes shape; skip tiles cost nothing regardless).
     """
-    from repro.kernels.ripple.ops import ripple_attention_pallas
+    if backend == "sparse":
+        from repro.kernels.sparse.ops import sparse_attention_pallas
+
+        def make(bq, bk):
+            return lambda: sparse_attention_pallas(
+                q, k, v, block_q=bq, block_k=bk, interpret=interpret)
+    else:
+        from repro.kernels.ripple.ops import ripple_attention_pallas
+
+        def make(bq, bk):
+            return lambda: ripple_attention_pallas(
+                q, k, v, block_q=bq, block_k=bk, interpret=interpret)
 
     key = autotune_key(backend, shape_bucket(q.shape[-2]), q.shape[-1],
                        v.shape[-1])
@@ -279,11 +298,9 @@ def autotune_attention(q, k, v, *, backend: str = "pallas",
 
     results = []
     for bq, bk in candidates:
-        def run(bq=bq, bk=bk):
-            return ripple_attention_pallas(q, k, v, block_q=bq, block_k=bk,
-                                           interpret=interpret)
         results.append({"block_q": bq, "block_k": bk,
-                        "us": round(time_best(run, repeats) * 1e6, 1)})
+                        "us": round(time_best(make(bq, bk), repeats) * 1e6,
+                                    1)})
     best = min(results, key=lambda r: r["us"])
     entry = {**best, "device": _platform(), "candidates": results}
     _store_disk(key, entry, cache_path)
@@ -337,15 +354,32 @@ def resolve_backend(cfg: RippleConfig, backend: Optional[str], *,
     if not cfg.active() or pol.is_dense:
         return "dense"
     emits_bias = pol.will_emit_bias(cfg)
+    # The block-sparse backend realizes a policy's mask as skipped
+    # tiles, but only when the policy's own bias is the whole story: an
+    # external caller bias is dense/arbitrary, and the sparse kernel's
+    # full-tile fast path would silently drop it.
+    sparse_ok = pol.will_emit_block_map(cfg) and not has_bias
     if b != "auto":
         # A policy-emitted bias rules out backends that can't carry it:
         # the Pallas kernel asserts bias is None, and collapse assumes a
         # window-constant bias (an SVG block mask isn't).  Downgrade the
-        # explicit choice to the reference path rather than crash inside
-        # a jitted sampler — same fall-back-not-error stance as sharding.
+        # explicit choice to the block-sparse kernel when the policy can
+        # tile its mask, else the reference path — never crash inside a
+        # jitted sampler, same fall-back-not-error stance as sharding.
         if emits_bias and b in ("pallas", "collapse"):
+            return "sparse" if sparse_ok else "reference"
+        if b == "sparse" and has_bias and pol.will_emit_block_map(cfg):
+            # A map-emitting policy derives FULL tiles from its own keep
+            # mask; the kernel's full-tile fast path would then drop the
+            # external caller bias.  Same downgrade stance as above.
             return "reference"
         return b
+    if sparse_ok:
+        # On TPU the sparse kernel skips masked tiles' MXU work; on CPU
+        # it runs in interpret mode (correctness-representative, same
+        # stance as the other kernels) so mask policies never silently
+        # lose their structural savings to a dense fallback.
+        return "sparse"
     pallas_ok = (_platform() == "tpu" and not has_bias and not emits_bias
                  and cfg.window == 2 and n_tokens % 2 == 0)
     if pallas_ok:
@@ -393,7 +427,7 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
     if plan is not None:
         _PLAN_CACHE.move_to_end(key)
         return plan
-    if resolved == "pallas":
+    if resolved in ("pallas", "sparse"):
         bq, bk, tuned = _tuned_blocks(resolved, n, q_shape[-1], v_shape[-1])
     else:
         (bq, bk), tuned = _DEFAULT_BLOCKS, False
@@ -444,8 +478,15 @@ def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
     operands or on one shard_map shard (decisions only look along t/x/y,
     DESIGN.md §10).
     """
+    extra = {}
+    if plan.backend == "sparse" and policy.will_emit_block_map(cfg):
+        # Only sparse plans for map-emitting policies pass block_shape:
+        # policies predating the block-sparse backend keep their
+        # original decide() signature even under a forced 'sparse'
+        # (their mapless decision runs the kernel's all-full path).
+        extra["block_shape"] = (plan.block_q, plan.block_k)
     d = policy.decide(q, k, grid=grid, cfg=cfg, thetas=thetas, bias=bias,
-                      grid_slice=grid_slice, fused=plan.fused_mask)
+                      grid_slice=grid_slice, fused=plan.fused_mask, **extra)
 
     if plan.backend == "pallas":
         # Deferred import: kernels are optional at module-import time.
@@ -453,6 +494,13 @@ def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
 
         out = ripple_attention_pallas(d.q, d.k, v, bias=d.bias,
                                       window=cfg.window,
+                                      block_q=plan.block_q,
+                                      block_k=plan.block_k)
+    elif plan.backend == "sparse":
+        from repro.kernels.sparse.ops import sparse_attention_pallas
+
+        out = sparse_attention_pallas(d.q, d.k, v, bias=d.bias,
+                                      block_map=d.block_map,
                                       block_q=plan.block_q,
                                       block_k=plan.block_k)
     elif plan.backend == "collapse":

@@ -28,7 +28,8 @@ Built-in policies:
   ``ripple``     the paper: windowed Δ-checks snap Q/K entries to their
                  window representative (Eq. 3/4 schedule, ``core.reuse``)
   ``svg``        Sparse VideoGen-style head-classified spatial/temporal
-                 block masks (``core.svg_mask``) as a logit bias
+                 block masks (``core.svg_mask``) as a logit bias plus a
+                 tiled block map the sparse backend skips (DESIGN.md §12)
   ``equal_mse``  ripple's decision with the Fig. 9 equal-impact
                  per-step schedule (``core.calibrate``) instead of the
                  linear ramp
@@ -72,6 +73,12 @@ class ReuseDecision:
     policy emits).  ``q_mask`` / ``k_mask`` are boolean snap masks for
     the savings accounting (None for policies that never snap), and
     ``savings`` is the policy's expected-savings estimate for this call.
+
+    ``block_map`` (DESIGN.md §12) is the per-(q_block, k_block) tile
+    state map for the block-sparse backend — int32 skip/full/partial
+    states broadcastable over (batch, heads), tiled with the
+    ``block_shape`` the dispatcher passed to :meth:`ReusePolicy.decide`.
+    Policies derive it from their masks; None means every tile runs.
     """
 
     q: jax.Array
@@ -82,6 +89,7 @@ class ReuseDecision:
     q_mask: Optional[jax.Array] = None
     k_mask: Optional[jax.Array] = None
     savings: Optional[jax.Array] = None
+    block_map: Optional[jax.Array] = None
     window: int = 2  # collapse-window size the masks were computed with
 
 
@@ -115,12 +123,16 @@ class ReusePolicy:
       ``snaps_operands``   decide() may rewrite Q/K entries → the
                            collapse backend is worth choosing
       ``is_dense``         no-op baseline → plans resolve to 'dense'
+      ``emits_block_map``  decide() can tile its mask into a sparse
+                           block map → the block-sparse backend realizes
+                           the mask as skipped tiles (DESIGN.md §12)
     """
 
     name: str = ""
     emits_bias: bool = False
     snaps_operands: bool = True
     is_dense: bool = False
+    emits_block_map: bool = False
 
     def will_emit_bias(self, cfg: RippleConfig) -> bool:
         """Will :meth:`decide` attach a logit bias under this config?
@@ -128,6 +140,12 @@ class ReusePolicy:
         config-conditional masks — e.g. ripple's ``cfg.svg_mask`` combo
         — are also kept off the biasless backends."""
         return self.emits_bias
+
+    def will_emit_block_map(self, cfg: RippleConfig) -> bool:
+        """Will :meth:`decide` produce a ``ReuseDecision.block_map``
+        when given a ``block_shape``?  Plan resolution prefers the
+        block-sparse backend for such policies (DESIGN.md §12)."""
+        return self.emits_block_map
 
     # -- per-step threshold schedule ------------------------------------
 
@@ -158,11 +176,18 @@ class ReusePolicy:
                thetas: Dict[str, jax.Array],
                bias: Optional[jax.Array] = None,
                grid_slice: Optional[Tuple[int, int]] = None,
-               fused: bool = False) -> ReuseDecision:
+               fused: bool = False,
+               block_shape: Optional[Tuple[int, int]] = None
+               ) -> ReuseDecision:
         """The strategy itself.  Shard-oblivious by contract: it must
         produce identical values on the full operands and on one
         shard_map shard (decisions may only look along the t/x/y token
-        axes, never across batch or heads — DESIGN.md §10)."""
+        axes, never across batch or heads — DESIGN.md §10).
+
+        ``block_shape`` is the resolved plan's (block_q, block_k) — the
+        dispatcher passes it **only** when the block-sparse backend was
+        planned (so policies written before it existed keep working);
+        block-map policies tile their masks with it (DESIGN.md §12)."""
         raise NotImplementedError
 
     # -- savings accounting ---------------------------------------------
@@ -170,18 +195,41 @@ class ReusePolicy:
     def stats(self, decision: ReuseDecision) -> RippleStats:
         """RippleStats for ``with_stats=True`` callers."""
         zero = jnp.zeros(())
+        realized = None
+        if decision.block_map is not None:
+            # A block map means the sparse backend executed this
+            # decision: what's *realized* is its skipped-tile fraction,
+            # not the collapse-path accounting (which never ran).
+            from repro.kernels.sparse.ops import sparse_block_stats
+
+            realized = sparse_block_stats(decision.block_map)
         if decision.q_mask is None or decision.k_mask is None:
             s = decision.savings if decision.savings is not None else zero
-            return RippleStats(savings=s, structural_savings=s,
-                               q_snap_frac=zero, k_snap_frac=zero)
+            return RippleStats(
+                savings=s,
+                structural_savings=realized if realized is not None else s,
+                q_snap_frac=zero, k_snap_frac=zero)
         return RippleStats(
             savings=savings_lib.partial_score_savings(
                 decision.q_mask, decision.k_mask),
-            structural_savings=savings_lib.collapse_savings(
-                decision.q_mask, decision.k_mask, decision.window),
+            structural_savings=(
+                realized if realized is not None
+                else savings_lib.collapse_savings(
+                    decision.q_mask, decision.k_mask, decision.window)),
             q_snap_frac=jnp.mean(decision.q_mask.astype(jnp.float32)),
             k_snap_frac=jnp.mean(decision.k_mask.astype(jnp.float32)),
         )
+
+
+def _keep_block_map(keep: jax.Array,
+                    block_shape: Optional[Tuple[int, int]]):
+    """Tile a boolean keep-mask into sparse-backend states, or None when
+    the dispatcher didn't plan the sparse backend (no ``block_shape``)."""
+    if block_shape is None:
+        return None
+    from repro.kernels.sparse.ops import block_map_from_keep
+
+    return block_map_from_keep(keep, *block_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +290,12 @@ class RipplePolicy(ReusePolicy):
     def will_emit_bias(self, cfg):
         return self.emits_bias or cfg.svg_mask
 
+    def will_emit_block_map(self, cfg):
+        # The SVG combo's block mask tiles into skip/full/partial states,
+        # so the sparse backend can realize it (snapping still happens;
+        # only the pair-collapse structural win is traded away).
+        return self.emits_block_map or cfg.svg_mask
+
     def thetas_for(self, cfg, step, total_steps, thetas=None):
         if thetas is None:
             assert step is not None and total_steps is not None, (
@@ -257,19 +311,21 @@ class RipplePolicy(ReusePolicy):
         return {"fixed_threshold": theta}
 
     def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
-               fused=False):
+               fused=False, block_shape=None):
         active_axes = tuple(cfg.axes)
         q_s, q_mask = snap_operand(q, cfg.snap_q, grid, thetas, cfg,
                                    active_axes, grid_slice, fused)
         k_s, k_mask = snap_operand(k, cfg.snap_k, grid, thetas, cfg,
                                    active_axes, grid_slice, fused)
+        block_map = None
         if cfg.svg_mask:
-            _, bias = svg_logit_bias(q_s, k_s, grid, grid_slice, bias)
+            keep, bias = svg_logit_bias(q_s, k_s, grid, grid_slice, bias)
+            block_map = _keep_block_map(keep, block_shape)
         return ReuseDecision(
             q=q_s, k=k_s, thetas=thetas, active_axes=active_axes, bias=bias,
             q_mask=q_mask, k_mask=k_mask,
             savings=savings_lib.partial_score_savings(q_mask, k_mask),
-            window=cfg.window)
+            block_map=block_map, window=cfg.window)
 
 
 class EqualMSEPolicy(RipplePolicy):
@@ -345,25 +401,33 @@ class SVGPolicy(ReusePolicy):
     name = "svg"
     emits_bias = True
     snaps_operands = False
+    emits_block_map = True
 
     def thetas_for(self, cfg, step, total_steps, thetas=None):
         return _zero_thetas()  # no Δ-thresholds; masks are classified
 
     def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
-               fused=False):
+               fused=False, block_shape=None):
         keep, bias = svg_logit_bias(q, k, grid, grid_slice, bias)
         return ReuseDecision(
             q=q, k=k, thetas=thetas, active_axes=(), bias=bias,
-            savings=1.0 - jnp.mean(keep.astype(jnp.float32)))
+            savings=1.0 - jnp.mean(keep.astype(jnp.float32)),
+            block_map=_keep_block_map(keep, block_shape))
 
     def stats(self, decision):
         zero = jnp.zeros(())
         # savings = skippable score fraction (mask density); structural
-        # stays 0 — the reference backend computes the full dense score
-        # matrix and only zeroes weights, so until a block-skipping
-        # backend honours the mask nothing is *realized*.
+        # = the tile fraction the block-sparse backend skips outright —
+        # 0 when no block map was planned (reference execution computes
+        # the full dense score matrix and only zeroes weights).
+        if decision.block_map is not None:
+            from repro.kernels.sparse.ops import sparse_block_stats
+
+            structural = sparse_block_stats(decision.block_map)
+        else:
+            structural = zero
         return RippleStats(savings=decision.savings,
-                           structural_savings=zero,
+                           structural_savings=structural,
                            q_snap_frac=zero, k_snap_frac=zero)
 
 
@@ -377,7 +441,7 @@ class DensePolicy(ReusePolicy):
     is_dense = True
 
     def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
-               fused=False):
+               fused=False, block_shape=None):
         return ReuseDecision(q=q, k=k, thetas=thetas, active_axes=(),
                              bias=bias, savings=jnp.zeros(()))
 

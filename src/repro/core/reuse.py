@@ -87,11 +87,7 @@ def _expand_window(mask_or_rep: jax.Array, dim: int, window: int, length: int,
     if pad > 0:
         pad_shape = list(expanded.shape)
         pad_shape[dim] = pad
-        filler = (
-            jnp.zeros(pad_shape, dtype=expanded.dtype)
-            if expanded.dtype == jnp.bool_
-            else jnp.zeros(pad_shape, dtype=expanded.dtype)
-        )
+        filler = jnp.zeros(pad_shape, dtype=expanded.dtype)
         expanded = jnp.concatenate([expanded, filler], axis=dim)
     return expanded
 

@@ -2,6 +2,9 @@
 #   flash/      baseline tiled online-softmax attention
 #   ripple/     pair-collapse block-skipping attention (the paper's reuse,
 #               restructured for the MXU — DESIGN.md §4)
+#   sparse/     block-sparse masked flash attention driven by a
+#               scalar-prefetched skip/full/partial block map — the
+#               backend that makes policy masks pay (DESIGN.md §12)
 #   reuse_mask/ fused Eq.3 Δ-check + snap (single-axis pair kernel and
 #               the fused 3-axis mask pipeline — DESIGN.md §8)
 #   adaln/      fused adaLN-zero modulation (DiT hot path)

@@ -1,0 +1,166 @@
+"""Block-sparse masked flash-attention Pallas TPU kernel (DESIGN.md §12).
+
+The dense flash kernel's online-softmax loop, driven by a per-
+``(q_block, k_block)`` scalar-prefetched **block map** with three
+states:
+
+* ``SKIP`` (0)    — the tile contributes nothing: no score matmul, no
+  softmax update, no AV matmul.  This is where a mask-emitting policy's
+  modeled savings become real MXU skips.
+* ``FULL`` (1)    — every entry of the tile is kept: dense tile on the
+  mask-free fast path (the bias block is never read).
+* ``PARTIAL`` (2) — the tile is mixed: dense tile plus the additive
+  logit bias applied in-kernel (−inf entries drop exactly, matching the
+  host-side masked softmax).
+
+Two scalar-prefetched fetch-index tables make the skips pay in HBM
+traffic too, not just MXU work: the K/V (and bias) index maps remap a
+skipped tile's block index to the **last non-skipped** one, so
+consecutive grid steps over skipped tiles resolve to the same block and
+the Pallas pipeline elides the copy instead of streaming tiles the
+kernel would never read.
+
+The running max is initialized to a large *finite* negative
+(``_M_INIT``) rather than −inf so a partial tile whose entire row is
+masked (bias −inf) still produces ``exp(−inf − m) == 0`` instead of
+``exp(−inf + inf) == NaN``; rows that never meet a non-skipped tile end
+with ``l == 0`` and emit zeros (the pure-jnp oracle in ``ref.py``
+mirrors both conventions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+_LANES = 128
+# Finite stand-in for -inf in the running max: keeps exp(s - m) defined
+# when every score of a partial tile's row is bias-masked to -inf.
+_M_INIT = -1e30
+
+# Block-map states (int32).
+SKIP, FULL, PARTIAL = 0, 1, 2
+
+
+def _sparse_kernel(bmap_ref, kfetch_ref, bfetch_ref,
+                   q_ref, k_ref, v_ref, bias_ref,
+                   o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, nk: int):
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    state = bmap_ref[b, qi, ki]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def scores():
+        return jax.lax.dot_general(
+            q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    def update(s):
+        """One online-softmax update on this tile's scores."""
+        m_prev = m_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            alpha * l_ref[...][:, :1] + jnp.sum(p, axis=1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    # SKIP tiles fall through: no matmuls, no softmax-state update.
+    @pl.when(state == FULL)
+    def _full():
+        update(scores())
+
+    @pl.when(state == PARTIAL)
+    def _partial():
+        update(scores() + bias_ref[...].astype(jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...][:, :1]
+        # l == 0: every tile of the row was skipped / fully masked.
+        out = acc_ref[...] / jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def sparse_attention_kernel(
+    q, k, v, bias, block_map, k_fetch, bias_fetch,
+    *, scale: float, block_q: int = 128, block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: (BH, Nq, d), k/v: (BH, Nk, d|dv), bias: (BH, Nq, Nk) f32 or a
+    (1, block_q, block_k) zero dummy when no policy bias exists.
+
+    block_map: (BH, nq, nk) int32 of SKIP/FULL/PARTIAL states.
+    k_fetch / bias_fetch: (BH, nq, nk) int32 fetch-index tables — for
+    each grid step the k-block (resp. bias-block) index to resident in
+    VMEM; equal to ``ki`` wherever the state needs the block and to the
+    last needed index elsewhere (so the pipeline elides the copy).
+
+    Returns (BH, Nq, dv).
+    """
+    BH, Nq, d = q.shape
+    Nk = k.shape[1]
+    dv = v.shape[2]
+    assert Nq % block_q == 0 and Nk % block_k == 0, (Nq, Nk, block_q, block_k)
+    nq = Nq // block_q
+    nk = Nk // block_k
+    assert block_map.shape == (BH, nq, nk), (block_map.shape, BH, nq, nk)
+    dummy_bias = bias.shape[0] == 1 and bias.shape[1:] == (block_q, block_k)
+
+    kernel = functools.partial(_sparse_kernel, scale=scale, nk=nk)
+
+    def qmap(b, qi, ki, *_):
+        return (b, qi, 0)
+
+    def kvmap(b, qi, ki, bmap_ref, kfetch_ref, bfetch_ref):
+        return (b, kfetch_ref[b, qi, ki], 0)
+
+    if dummy_bias:
+        def biasmap(b, qi, ki, *_):
+            return (0, 0, 0)
+    else:
+        def biasmap(b, qi, ki, bmap_ref, kfetch_ref, bfetch_ref):
+            return (b, qi, bfetch_ref[b, qi, ki])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), qmap),
+            pl.BlockSpec((None, block_k, d), kvmap),
+            pl.BlockSpec((None, block_k, dv), kvmap),
+            pl.BlockSpec((None, block_q, block_k), biasmap),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dv), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, Nq, dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_map, k_fetch, bias_fetch, q, k, v, bias)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the block-sparse masked flash-attention kernel.
+
+Reproduces the kernel's exact block-map semantics (DESIGN.md §12):
+SKIP tiles contribute nothing, FULL tiles ignore the bias, PARTIAL
+tiles add it; rows whose every tile is skipped (or fully −inf-masked)
+emit zeros rather than NaN, matching the kernel's finite running-max
+convention.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse.kernel import FULL, PARTIAL, SKIP
+
+
+def sparse_grid(n_q: int, n_k: int, block_q: int,
+                block_k: int) -> Tuple[int, int, int, int]:
+    """Effective (block_q, block_k, nq, nk) for a (n_q, n_k) score map.
+
+    The one clamping rule shared by the kernel wrapper, the oracle, and
+    the policy-side block-map builders — both sides must tile the score
+    map identically or the map rides on the wrong tiles.
+    """
+    bq = min(block_q, max(n_q, 1))
+    bk = min(block_k, max(n_k, 1))
+    return bq, bk, -(-n_q // bq), -(-n_k // bk)
+
+
+def expand_block_map(block_map: jax.Array, n_q: int, n_k: int,
+                     block_q: int, block_k: int) -> jax.Array:
+    """Broadcast tile states back to a token-level (..., n_q, n_k) map."""
+    bq, bk, nq, nk = sparse_grid(n_q, n_k, block_q, block_k)
+    assert block_map.shape[-2:] == (nq, nk), (block_map.shape, nq, nk)
+    e = jnp.repeat(jnp.repeat(block_map, bq, axis=-2), bk, axis=-1)
+    return e[..., :n_q, :n_k]
+
+
+def sparse_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         bias: Optional[jax.Array] = None,
+                         block_map: Optional[jax.Array] = None,
+                         block_q: int = 128, block_k: int = 128,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: (..., Nq, d), k: (..., Nk, d), v: (..., Nk, dv) -> (..., Nq, dv).
+
+    ``block_map`` (..., nq, nk) int states; None means every tile is
+    PARTIAL when a bias exists (dense masked attention) and FULL
+    otherwise — the same degradation the ops wrapper applies.
+    """
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    if scale is None:
+        scale = float(1.0 / (q.shape[-1] ** 0.5))
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    if block_map is None:
+        if bias is not None:
+            s = s + bias.astype(jnp.float32)
+    else:
+        st = expand_block_map(block_map, n_q, n_k, block_q, block_k)
+        if bias is not None:
+            s = jnp.where(st == PARTIAL, s + bias.astype(jnp.float32), s)
+        s = jnp.where(st == SKIP, -jnp.inf, s)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("...qk,...kv->...qv", p, v.astype(jnp.float32))
+    return (out / jnp.where(l > 0.0, l, 1.0)).astype(q.dtype)

@@ -129,7 +129,7 @@ def main(argv=None):
                          "can register_policy() an out-of-tree strategy")
     ap.add_argument("--attn-backend", default=None,
                     choices=("auto", "dense", "reference", "collapse",
-                             "pallas"),
+                             "pallas", "sparse"),
                     help="override RippleConfig.backend for the dispatch "
                          "layer (default: the arch config's setting)")
     ap.add_argument("--seed", type=int, default=0)

@@ -183,6 +183,61 @@ class TestPlansAndBuckets:
         assert "reference" in s
 
 
+class TestSparseBackendResolution:
+    """Plan resolution for the block-sparse masked flash backend
+    (DESIGN.md §12): block-map policies land on it, explicit 'sparse'
+    is honoured, and its block sizes come from the autotune cache."""
+
+    def test_svg_auto_resolves_sparse(self):
+        dispatch.clear_plan_cache()
+        try:
+            p = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG, policy="svg")
+            assert p.backend == "sparse"
+            assert "sparse" in p.summary()
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_explicit_sparse_honoured_for_any_policy(self):
+        dispatch.clear_plan_cache()
+        try:
+            p = resolve_plan((1, 1, N, D), (1, 1, N, D), CFG,
+                             backend="sparse")
+            assert p.backend == "sparse" and p.policy == "ripple"
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_sparse_dispatch_matches_reference(self):
+        q, k, v = _qkv(9)
+        kw = dict(grid=GRID, cfg=CFG, step=jnp.asarray(5), total_steps=10)
+        out = attention_dispatch(q, k, v, backend="sparse", **kw)
+        ref = attention_dispatch(q, k, v, backend="reference", **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+    def test_sparse_blocks_come_from_autotune_cache(self, tmp_path,
+                                                    monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "autotune.json"))
+        dispatch.clear_plan_cache()
+        try:
+            n, d = 64, 8
+            q, k, v = _qkv(0, (1, 1, n, d))
+            entry = autotune_attention(q, k, v, backend="sparse",
+                                       candidates=((16, 16), (32, 32)),
+                                       repeats=1)
+            plan = resolve_plan((1, 1, n, d), (1, 1, n, d), CFG,
+                                backend="sparse")
+            assert plan.tuned
+            assert (plan.block_q, plan.block_k) == (entry["block_q"],
+                                                    entry["block_k"])
+            # ripple's pallas kernel never reads the sparse entry
+            plan_p = resolve_plan((1, 1, n, d), (1, 1, n, d), CFG,
+                                  backend="pallas")
+            assert not plan_p.tuned
+        finally:
+            dispatch.clear_plan_cache()
+
+
 class TestBucketProperties:
     """Property coverage for the shape-bucket map (fixed examples when
     hypothesis is absent, randomized search otherwise)."""

@@ -19,6 +19,11 @@ from repro.kernels.reuse_mask.ops import reuse_snap
 from repro.kernels.reuse_mask.ref import reuse_snap_ref
 from repro.kernels.ripple.ops import ripple_attention_pallas, ripple_block_stats
 from repro.kernels.ripple.ref import ripple_attention_ref
+from repro.kernels.sparse.ops import (FULL, PARTIAL, SKIP,
+                                      block_map_from_keep,
+                                      sparse_attention_pallas,
+                                      sparse_block_stats)
+from repro.kernels.sparse.ref import expand_block_map, sparse_attention_ref
 
 
 def _tol(dtype):
@@ -98,6 +103,136 @@ class TestRippleKernel:
         ref = ripple_attention_ref(q, k, v)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=3e-5)
+
+
+def _sparse_qkv(seed, B=1, H=2, N=256, D=32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(kk, (B, H, N, D)) for kk in ks)
+
+
+class TestSparseKernel:
+    """Block-sparse masked flash kernel vs its pure-jnp oracle for every
+    block-map state, plus the block-map-from-keep consistency contract
+    (DESIGN.md §12)."""
+
+    def test_all_full_matches_dense(self):
+        q, k, v = _sparse_qkv(0)
+        bmap = jnp.full((4, 4), FULL, jnp.int32)
+        out = sparse_attention_pallas(q, k, v, block_map=bmap,
+                                      block_q=64, block_k=64)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+        assert float(sparse_block_stats(bmap)) == 0.0
+
+    def test_all_skip_emits_zeros(self):
+        q, k, v = _sparse_qkv(1)
+        bmap = jnp.full((4, 4), SKIP, jnp.int32)
+        out = sparse_attention_pallas(q, k, v, block_map=bmap,
+                                      block_q=64, block_k=64)
+        assert not np.asarray(out).any()
+        ref = sparse_attention_ref(q, k, v, block_map=bmap,
+                                   block_q=64, block_k=64)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert float(sparse_block_stats(bmap)) == 1.0
+
+    def test_mixed_map_matches_oracle(self):
+        q, k, v = _sparse_qkv(2)
+        keep = jax.random.bernoulli(jax.random.PRNGKey(3), 0.5,
+                                    (1, 2, 256, 256))
+        keep = keep.at[..., :64, :64].set(True)    # a FULL tile
+        keep = keep.at[..., 64:128, :64].set(False)  # a SKIP tile
+        bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        bmap = block_map_from_keep(keep, 64, 64)
+        assert {int(s) for s in np.unique(np.asarray(bmap))} \
+            == {SKIP, FULL, PARTIAL}
+        out = sparse_attention_pallas(q, k, v, bias=bias, block_map=bmap,
+                                      block_q=64, block_k=64)
+        ref = sparse_attention_ref(q, k, v, bias=bias, block_map=bmap,
+                                   block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+        # a map consistent with its bias also matches the plain dense
+        # masked softmax (every row keeps at least one key here)
+        dense = sparse_attention_ref(q, k, v, bias=bias,
+                                     block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                                   atol=3e-5)
+
+    def test_partial_bias_applied_in_kernel(self):
+        q, k, v = _sparse_qkv(4)
+        bias = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 256, 256))
+        bmap = jnp.full((4, 4), PARTIAL, jnp.int32)
+        out = sparse_attention_pallas(q, k, v, bias=bias, block_map=bmap,
+                                      block_q=64, block_k=64)
+        s = (jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32)
+             * (1.0 / np.sqrt(q.shape[-1]))) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        ref = jnp.einsum("...qk,...kv->...qv", p, v.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+    @pytest.mark.parametrize("N", [200, 130])
+    def test_unaligned_tokens_padded_correctly(self, N):
+        q, k, v = _sparse_qkv(6, N=N)
+        keep = jax.random.bernoulli(jax.random.PRNGKey(7), 0.6,
+                                    (1, 2, N, N))
+        keep = keep.at[..., 64:128, :64].set(False)
+        bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        bmap = block_map_from_keep(keep, 64, 64)
+        out = sparse_attention_pallas(q, k, v, bias=bias, block_map=bmap,
+                                      block_q=64, block_k=64)
+        ref = sparse_attention_ref(q, k, v, bias=bias, block_map=bmap,
+                                   block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+    def test_no_map_degrades_to_masked_dense(self):
+        """block_map=None + bias: every tile runs PARTIAL (dense masked
+        flash); block_map=None + no bias: plain flash."""
+        q, k, v = _sparse_qkv(8)
+        keep = jax.random.bernoulli(jax.random.PRNGKey(9), 0.7,
+                                    (1, 2, 256, 256))
+        bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        out = sparse_attention_pallas(q, k, v, bias=bias,
+                                      block_q=64, block_k=64)
+        ref = sparse_attention_ref(q, k, v, bias=bias,
+                                   block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+        out2 = sparse_attention_pallas(q, k, v, block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(out2),
+                                   np.asarray(attention_ref(q, k, v)),
+                                   atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_property_block_map_consistency(self, seed):
+        """For any keep-mask: FULL tiles keep everything, SKIP tiles
+        nothing, and the kernel on (map, bias) matches the dense masked
+        softmax wherever a row keeps at least one key."""
+        key = jax.random.PRNGKey(seed)
+        density = float(jax.random.uniform(key, minval=0.05, maxval=0.95))
+        N, blk = 128, 32
+        keep = jax.random.bernoulli(jax.random.fold_in(key, 1), density,
+                                    (1, 1, N, N))
+        bmap = block_map_from_keep(keep, blk, blk)
+        st_tok = np.asarray(expand_block_map(bmap, N, N, blk, blk))
+        keep_np = np.asarray(keep)
+        assert keep_np[st_tok == FULL].all()
+        assert not keep_np[st_tok == SKIP].any()
+        q, k, v = _sparse_qkv(seed + 1, H=1, N=N, D=16)
+        bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        out = np.asarray(sparse_attention_pallas(
+            q, k, v, bias=bias, block_map=bmap, block_q=blk, block_k=blk))
+        ref = np.asarray(sparse_attention_ref(
+            q, k, v, bias=bias, block_q=blk, block_k=blk))
+        rows_alive = keep_np.any(axis=-1)
+        np.testing.assert_allclose(out[rows_alive], ref[rows_alive],
+                                   atol=3e-5)
+        # fully-masked rows: the kernel's zero convention, never NaN
+        assert np.isfinite(out).all()
+        assert not out[~rows_alive].any()
 
 
 class TestReuseSnapKernel:

@@ -99,6 +99,28 @@ class TestBuiltinDecisions:
         assert d.bias is not None and d.bias.shape[-2:] == (N, N)
         assert 0.0 < float(d.savings) < 1.0
 
+    def test_svg_decision_block_map_consistent_with_mask(self):
+        """Given a plan block_shape, svg tiles its keep-mask into the
+        sparse backend's states; FULL tiles keep everything, SKIP tiles
+        nothing (PARTIAL covers the rest)."""
+        from repro.kernels.sparse.ops import FULL, SKIP
+        from repro.kernels.sparse.ref import expand_block_map
+
+        q, k, _ = _qkv(3)
+        pol = get_policy("svg")
+        d = pol.decide(q, k, grid=GRID, cfg=CFG,
+                       thetas=pol.thetas_for(CFG, STEP, 10),
+                       block_shape=(32, 32))
+        assert d.block_map is not None
+        keep = np.asarray(svg_block_mask(q, k, GRID))
+        st = np.asarray(expand_block_map(d.block_map, N, N, 32, 32))
+        assert keep[st == FULL].all()
+        assert not keep[st == SKIP].any()
+        # without a planned block_shape the decision carries no map
+        d2 = pol.decide(q, k, grid=GRID, cfg=CFG,
+                        thetas=pol.thetas_for(CFG, STEP, 10))
+        assert d2.block_map is None
+
     def test_equal_mse_schedule_grows_with_step(self):
         pol = get_policy("equal_mse")
         th = [float(pol.thetas_for(CFG, jnp.asarray(i), 20)["t"])
@@ -152,13 +174,15 @@ class TestDispatchWithPolicies:
                                    atol=1e-6)
 
     def test_svg_policy_equals_masked_dense(self):
+        # auto now routes svg through the block-sparse kernel; its
+        # online softmax matches the host masked softmax to fp tolerance
         q, k, v = _qkv(1)
         out = _dispatch("svg")
         keep = svg_block_mask(q, k, GRID)
         bias = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
         ref = dense_attention(q, k, v, 1.0 / np.sqrt(D), bias)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                   atol=1e-6)
+                                   atol=3e-5)
 
     def test_cfg_policy_field_selects(self):
         cfg = dataclasses.replace(CFG, policy="dense")
@@ -192,11 +216,49 @@ class TestDispatchWithPolicies:
         _, st = _dispatch("dense", with_stats=True)
         assert float(st.savings) == 0.0
 
-    def test_svg_structural_savings_not_fabricated(self):
-        """SVG runs on the dense reference backend (the bias only zeroes
-        weights), so nothing is *structurally* skipped yet — the
-        realized-savings metric must stay 0, not echo the mask density."""
-        _, st = _dispatch("svg", with_stats=True)
+    def test_svg_structural_savings_realized_by_sparse_backend(self):
+        """With the block-sparse backend honouring the mask, SVG's
+        structural savings are the *actually skipped* tile fraction —
+        positive once the grid spans several tiles, never echoing the
+        raw mask density."""
+        grid = (8, 8, 8)
+        n = grid[0] * grid[1] * grid[2]
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q, k, v = (jax.random.normal(kk, (2, 2, n, D)) for kk in ks)
+        out, st = attention_dispatch(q, k, v, grid=grid, cfg=CFG, step=STEP,
+                                     total_steps=10, policy="svg",
+                                     with_stats=True)
+        assert float(st.savings) > 0.0
+        assert 0.0 < float(st.structural_savings) < 1.0
+        # realized (tile-granular) savings never exceed the modeled
+        # (score-granular) mask density
+        assert float(st.structural_savings) <= float(st.savings) + 1e-6
+
+    def test_ripple_svg_combo_structural_is_skipped_tile_fraction(self):
+        """ripple+svg_mask also executes on the sparse backend; its
+        realized savings must be the skipped-tile fraction of the block
+        map it carried, not the collapse accounting (which never ran)."""
+        from repro.kernels.sparse.ops import sparse_block_stats
+
+        grid = (8, 8, 8)
+        n = grid[0] * grid[1] * grid[2]
+        cfg = dataclasses.replace(CFG, svg_mask=True)
+        ks = jax.random.split(jax.random.PRNGKey(10), 3)
+        q, k, v = (jax.random.normal(kk, (1, 2, n, D)) for kk in ks)
+        _, st = attention_dispatch(q, k, v, grid=grid, cfg=cfg, step=STEP,
+                                   total_steps=10, with_stats=True)
+        pol = get_policy("ripple")
+        d = pol.decide(q, k, grid=grid, cfg=cfg,
+                       thetas=pol.thetas_for(cfg, STEP, 10),
+                       block_shape=(128, 128))
+        assert float(st.structural_savings) > 0.0
+        assert float(st.structural_savings) == pytest.approx(
+            float(sparse_block_stats(d.block_map)))
+
+    def test_svg_structural_zero_off_the_sparse_backend(self):
+        """Forced onto the dense reference path nothing is structurally
+        skipped, so the realized metric must fall back to 0."""
+        _, st = _dispatch("svg", with_stats=True, backend="reference")
         assert float(st.savings) > 0.0
         assert float(st.structural_savings) == 0.0
 
@@ -218,28 +280,36 @@ class TestPlanKeying:
         finally:
             dispatch.clear_plan_cache()
 
-    def test_bias_policy_avoids_collapse_on_auto(self):
+    def test_bias_policy_resolves_sparse_on_auto(self):
+        """svg tiles its mask into a block map, so auto prefers the
+        block-sparse backend (no reference downgrade) — and never the
+        collapse path, whose window-constant-bias assumption the SVG
+        mask violates."""
         dispatch.clear_plan_cache()
         try:
             cfg = dataclasses.replace(CFG, execution="collapse")
             shape = (1, 1, N, D)
             assert resolve_plan(shape, shape, cfg).backend == "collapse"
             assert resolve_plan(shape, shape, cfg,
-                                policy="svg").backend == "reference"
+                                policy="svg").backend == "sparse"
+            # ... but an external caller bias (arbitrary, not tile-
+            # structured) keeps svg off the sparse fast path
+            assert resolve_plan(shape, shape, cfg, policy="svg",
+                                has_bias=True).backend == "reference"
         finally:
             dispatch.clear_plan_cache()
 
     def test_explicit_biasless_backend_downgrades_for_bias_policy(self):
         """Forcing pallas/collapse with a bias-emitting policy must not
         crash inside a jitted sampler; the plan downgrades to the
-        reference path instead."""
+        block-sparse kernel (which carries the mask) instead."""
         dispatch.clear_plan_cache()
         try:
             shape = (1, 1, N, D)
             for forced in ("pallas", "collapse"):
                 p = resolve_plan(shape, shape, CFG, backend=forced,
                                  policy="svg")
-                assert p.backend == "reference"
+                assert p.backend == "sparse"
                 # the downgrade really executes: dispatch works end-to-end
                 out = _dispatch("svg", backend=forced)
                 assert np.isfinite(np.asarray(out)).all()
@@ -253,16 +323,17 @@ class TestPlanKeying:
         """cfg.svg_mask makes the ripple policy emit a (non-window-
         constant) bias too: auto must not resolve to collapse, and an
         explicit pallas/collapse downgrades — collapse on that bias is
-        silently wrong math, pallas a trace-time crash."""
+        silently wrong math, pallas a trace-time crash.  The combo tiles
+        its mask, so the downgrade target is the block-sparse kernel."""
         dispatch.clear_plan_cache()
         try:
             cfg = dataclasses.replace(CFG, svg_mask=True,
                                       execution="collapse")
             shape = (1, 1, N, D)
-            assert resolve_plan(shape, shape, cfg).backend == "reference"
+            assert resolve_plan(shape, shape, cfg).backend == "sparse"
             for forced in ("pallas", "collapse"):
                 assert resolve_plan(shape, shape, cfg,
-                                    backend=forced).backend == "reference"
+                                    backend=forced).backend == "sparse"
             # dispatch agrees with dense-with-bias on the snapped operands
             q, k, v = _qkv(8)
             out = attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
@@ -270,6 +341,25 @@ class TestPlanKeying:
             ref = attention_dispatch(q, k, v, grid=GRID, cfg=cfg, step=STEP,
                                      total_steps=10)
             np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        finally:
+            dispatch.clear_plan_cache()
+
+    def test_forced_sparse_with_external_bias_downgrades(self):
+        """An explicit 'sparse' with an external caller bias must not
+        reach the kernel for a map-emitting policy: its FULL tiles are
+        derived from the policy's own mask and would silently drop the
+        caller's bias — downgrade to reference instead."""
+        dispatch.clear_plan_cache()
+        try:
+            shape = (1, 1, N, D)
+            p = resolve_plan(shape, shape, CFG, backend="sparse",
+                             has_bias=True, policy="svg")
+            assert p.backend == "reference"
+            # mapless policies keep forced sparse: with no block map the
+            # kernel runs every tile PARTIAL, so the bias is honoured
+            p = resolve_plan(shape, shape, CFG, backend="sparse",
+                             has_bias=True, policy="ripple")
+            assert p.backend == "sparse"
         finally:
             dispatch.clear_plan_cache()
 
@@ -360,6 +450,17 @@ class TestOutOfTreeRegistration:
         # both half_k_test requests share one bucket -> same output for
         # the same seed-independent sampler input shape
         assert len(eng._compiled) == 3
+
+    def test_legacy_decide_signature_survives_forced_sparse(self, half_k):
+        """A pre-§12 policy whose decide() lacks the block_shape kwarg
+        must not crash under a forced 'sparse' backend — the dispatcher
+        only passes block_shape to map-emitting policies, and a mapless
+        decision runs the kernel's all-full path."""
+        q, k, v = _qkv(7)
+        out = _dispatch("half_k_test", seed=7, backend="sparse")
+        ref = _dispatch("half_k_test", seed=7, backend="reference")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
 
     def test_policy_refused_when_factory_cannot_honour_it(self):
         """A legacy 2-arg factory can't build per-policy samplers;

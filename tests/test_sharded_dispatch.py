@@ -150,6 +150,61 @@ class TestPolicyParity:
         np.testing.assert_array_equal(out, ref)
 
 
+class TestSparseShardedParity:
+    """The block-sparse backend (DESIGN.md §12) under shard_map: every
+    policy that emits a block map — svg, and ripple with the svg_mask
+    combo — must stay bitwise-equal to the single-device path across
+    1/2/8-way meshes.  Block maps are per-(batch, head) and derive only
+    from t/x/y structure, so each shard's map is self-contained."""
+
+    @staticmethod
+    def _cases():
+        import dataclasses
+        return [("svg", CFG),
+                ("ripple", dataclasses.replace(CFG, svg_mask=True))]
+
+    @pytest.mark.parametrize("ways", [1, 2, 8])
+    @pytest.mark.parametrize("case", range(2))
+    def test_bitwise_equal_to_single_device(self, ways, case):
+        require_devices(ways)
+        policy, cfg = self._cases()[case]
+        q, k, v = _qkv(7)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(attention_dispatch(
+            q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
+            total_steps=10, policy=policy))
+        mesh = jax.make_mesh((ways, 1), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, cfg, policy=policy)
+            assert plan.backend == "sparse"
+            assert plan.batch_shards == ways
+            out = np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
+                total_steps=10, policy=policy))
+        np.testing.assert_array_equal(out, ref)
+
+    @pytest.mark.parametrize("case", range(2))
+    def test_head_sharded_bitwise_equal(self, case):
+        require_devices(2)
+        policy, cfg = self._cases()[case]
+        q, k, v = _qkv(8)
+        dispatch.clear_plan_cache()
+        ref = np.asarray(attention_dispatch(
+            q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
+            total_steps=10, policy=policy))
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        with dispatch_mesh(mesh):
+            dispatch.clear_plan_cache()
+            plan = resolve_plan(q.shape, v.shape, cfg, policy=policy)
+            assert plan.backend == "sparse"
+            assert (plan.head_axis, plan.head_shards) == ("model", 2)
+            out = np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
+                total_steps=10, policy=policy))
+        np.testing.assert_array_equal(out, ref)
+
+
 class TestFallbacks:
     def test_indivisible_batch_replicates(self):
         require_devices(2)
@@ -195,17 +250,21 @@ def test_forced_8_device_parity_subprocess(multidevice_env):
                            i_min=2, i_max=6)
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         q, k, v = (jax.random.normal(kk, (8, 2, N, D)) for kk in ks)
-        run = lambda pol: np.asarray(attention_dispatch(
-            q, k, v, grid=GRID, cfg=cfg, step=jnp.asarray(5),
-            total_steps=10, policy=pol))
-        for pol in dispatch.list_policies():
+        import dataclasses
+        combo = dataclasses.replace(cfg, svg_mask=True)
+        cases = [(pol, cfg) for pol in dispatch.list_policies()]
+        cases.append(("ripple", combo))  # svg_mask combo: sparse backend
+        for pol, c in cases:
+            run = lambda: np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=c, step=jnp.asarray(5),
+                total_steps=10, policy=pol))
             dispatch.clear_plan_cache()
-            ref = run(pol)
+            ref = run()
             for shape in ((1, 1), (2, 1), (8, 1), (4, 2)):
                 mesh = jax.make_mesh(shape, ("data", "model"))
                 with dispatch_mesh(mesh):
                     dispatch.clear_plan_cache()
-                    np.testing.assert_array_equal(run(pol), ref)
+                    np.testing.assert_array_equal(run(), ref)
         print("sharded parity OK on", len(jax.devices()), "devices",
               "policies", list(dispatch.list_policies()))
     """)
