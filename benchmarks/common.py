@@ -53,6 +53,47 @@ def theta_for_savings(q, k, target, grid=GRID, axes=("t", "x", "y"),
     return 0.5 * (lo + hi)
 
 
+def decision_tensors(d):
+    """The tensors of a ReuseDecision an attention backend would read."""
+    return tuple(t for t in (d.q, d.k, d.bias, d.block_map)
+                 if t is not None)
+
+
+def decision_harness(pol, q, k, *, grid, cfg, thetas, block_shape=None,
+                     want_plan=False):
+    """Shared decide-timing harness (DESIGN.md §13), used by both
+    ``kernel_bench.decision_amortization`` and ``policy_sweep``'s
+    decision_overhead rows so the two report comparable decide times.
+
+    Returns ``(decide, floor, d0)``: ``decide(q, k)`` is a jitted
+    decide() reduced to scalar sums of every consumed tensor — XLA
+    cannot fold the decision away, while standalone output copies are
+    excluded; ``floor()`` runs the same reductions on the precomputed
+    decision ``d0`` — the measured consumer floor to subtract so the
+    number isolates decision work.  ``block_shape`` must mirror what
+    the dispatch plan would pass (sparse-planned map policies tile
+    their masks, and that tiling is part of the decide cost)."""
+    extra = {}
+    if block_shape is not None:
+        extra["block_shape"] = block_shape
+    if want_plan:
+        extra["want_plan"] = True
+
+    @jax.jit
+    def decide(q, k):
+        return tuple(t.sum() for t in decision_tensors(
+            pol.decide(q, k, grid=grid, cfg=cfg, thetas=thetas, **extra)))
+
+    d0 = pol.decide(q, k, grid=grid, cfg=cfg, thetas=thetas, **extra)
+    d0_tensors = decision_tensors(d0)
+
+    @jax.jit
+    def consume(*ts):
+        return tuple(t.sum() for t in ts)
+
+    return decide, (lambda: consume(*d0_tensors)), d0
+
+
 def attention_out(q, k, v):
     scale = 1.0 / np.sqrt(q.shape[-1])
     s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale

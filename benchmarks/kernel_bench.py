@@ -10,7 +10,7 @@ paper's 75%/85% operating points:
   * the same after pair-major reordering along the dominant axis
     (the layout trick from DESIGN.md §4).
 
-Three dispatch-layer sections (DESIGN.md §8, §12):
+Four dispatch-layer sections (DESIGN.md §8, §12, §13):
   * ``autotune_sweep`` — drives ``core.dispatch.autotune_attention``
     over the block-size candidates and persists the winner in the
     on-disk cache the dispatcher reads;
@@ -22,7 +22,11 @@ Three dispatch-layer sections (DESIGN.md §8, §12):
     the svg policy's head-classified block map at a vdit_paper-style
     grid: realized skipped-tile fraction, modeled attention speedup,
     and measured sparse-vs-dense walltime (both kernels in the same
-    interpret harness, so the ratio tracks the skip rate).
+    interpret harness, so the ratio tracks the skip rate);
+  * ``decision_amortization`` — the cross-step decision cache
+    (DESIGN.md §13) at the same grid: measured decide-vs-apply µs per
+    policy and the resulting per-step decision overhead at cadence
+    R ∈ {1, 2, 4, 8}.
 """
 
 from __future__ import annotations
@@ -33,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import theta_for_savings
+from benchmarks.common import (decision_harness, decision_tensors,
+                               theta_for_savings)
 from repro.core import dispatch as dispatch_lib
 from repro.core import reuse, savings as savings_lib
 from repro.core.collapse import pair_major_order
@@ -228,6 +233,84 @@ def sparse_backend_sweep(grid=None, d=64, heads=2, block=128):
     }
 
 
+def decision_amortization(grid=None, d=64, heads=2,
+                          cadences=(1, 2, 4, 8)):
+    """Per-step decision overhead of the cross-step decision cache
+    (DESIGN.md §13) at a vdit_paper-style latent grid.
+
+    For each cache-capable policy this times, in the same jit harness,
+
+      * ``decide_us`` — one full ``decide(want_plan=True)``: the
+        windowed Δ-stats / head classification plus the plan build
+        (what every step of every layer used to pay), and
+      * ``apply_us`` — one ``apply_decision``: re-applying the cached
+        plan to fresh operands (a gather for ripple, a pure
+        bias/block-map passthrough for svg),
+
+    each consuming every tensor the backend would read (q, k, bias,
+    block map) through a scalar reduction — so XLA cannot fold the
+    decision away (masks and savings dead-code-eliminate, as in a
+    stats-less dispatch), while the standalone-harness *output copies*
+    are excluded (in the real pipeline those tensors feed the kernel
+    inside one program).  A measured consumer floor — the same
+    reductions on precomputed decision outputs — is subtracted from
+    both, so the numbers isolate pure decision work.  The per-step
+    decision overhead at cadence R is then
+    ``(decide + (R-1)·apply) / R`` — what the sampler's refresh cond
+    amortizes — and ``reduction_R`` its improvement over R=1.
+    """
+    from repro.config.base import RippleConfig
+    from repro.configs.vdit_paper import make_config
+    from repro.core import decision_cache as dc
+    from repro.core.policy import get_policy
+
+    if grid is None:
+        grid = make_config().model.grid(frames=32, img_res=256)  # (8,16,16)
+    n = grid[0] * grid[1] * grid[2]
+    lat = correlated_video_latents(jax.random.PRNGKey(21), heads, grid, d,
+                                   temporal_rho=0.95, spatial_smooth=2)
+    x = lat.reshape(1, heads, n, d)
+    wq = 0.4 * jax.random.normal(jax.random.PRNGKey(22), (d, d))
+    wk = 0.4 * jax.random.normal(jax.random.PRNGKey(23), (d, d))
+    q = jnp.einsum("bhnd,df->bhnf", x, wq)
+    k = jnp.einsum("bhnd,df->bhnf", x, wk)
+
+    rows = []
+    for name in ("ripple", "svg"):
+        pol = get_policy(name)
+        cfg = RippleConfig(enabled=True, policy=name, theta_min=0.2,
+                           theta_max=0.5, i_min=2, i_max=8)
+        thetas = pol.thetas_for(cfg, jnp.asarray(5), 10)
+        decide, floor, d0 = decision_harness(
+            pol, q, k, grid=grid, cfg=cfg, thetas=thetas,
+            block_shape=(128, 128) if name == "svg" else None,
+            want_plan=True)
+        cache = dc.cache_from_decision(d0, dc.drift_stat(q, k, cfg))
+
+        @jax.jit
+        def apply(q, k, cache):
+            return tuple(t.sum() for t in decision_tensors(
+                pol.apply_decision(q, k, cache, grid=grid, cfg=cfg,
+                                   thetas=thetas)))
+
+        floor_us = dispatch_lib.time_best(floor, repeats=5) * 1e6
+        decide_us = max(dispatch_lib.time_best(
+            lambda: decide(q, k), repeats=5) * 1e6 - floor_us, 0.0)
+        apply_us = max(dispatch_lib.time_best(
+            lambda: apply(q, k, cache), repeats=5) * 1e6 - floor_us, 0.0)
+        per_step = {R: (decide_us + (R - 1) * apply_us) / R
+                    for R in cadences}
+        rows.append({
+            "policy": name, "grid": grid, "d": d, "heads": heads,
+            "decide_us": round(decide_us, 1),
+            "apply_us": round(apply_us, 1),
+            "per_step_us": {R: round(us, 1) for R, us in per_step.items()},
+            "reduction": {R: round(per_step[1] / max(us, 1e-9), 2)
+                          for R, us in per_step.items()},
+        })
+    return rows
+
+
 def autotune_sweep(n=1024, d=64):
     """Sweep the dispatch autotuner's block candidates and persist the
     winner in the on-disk cache ``attention_dispatch`` reads."""
@@ -281,13 +364,23 @@ def main():
           f"dense_flash_us={s['dense_flash_us']};"
           f"walltime_speedup={s['walltime_speedup']}")
 
+    amort = decision_amortization()
+    for r in amort:
+        per = ";".join(f"R{R}={us}" for R, us in r["per_step_us"].items())
+        red = ";".join(f"red_R{R}={x}" for R, x in r["reduction"].items())
+        print(f"kernel_bench[decision_amortization@vdit_paper"
+              f"{gname(r['grid'])}xd{r['d']}/{r['policy']}],"
+              f"{r['decide_us']:.0f},"
+              f"decide_us={r['decide_us']};apply_us={r['apply_us']};"
+              f"{per};{red}")
+
     a = autotune_sweep()
     cand = ";".join(f"{c['block_q']}x{c['block_k']}={c['us']}us"
                     for c in a["candidates"])
     print(f"kernel_bench[autotune],{a['us']:.0f},"
           f"best={a['block_q']}x{a['block_k']};device={a['device']};"
           f"{cand};cache={a['cache']}")
-    return rows + [m, s, a]
+    return rows + [m, s, a] + amort
 
 
 if __name__ == "__main__":

@@ -16,6 +16,20 @@ Reported rows (CSV: name,us_per_call,derived):
                                  derived = realized skipped-tile
                                  fraction (the structural savings the
                                  kernel actually elides)
+  decision_overhead[<policy>]  — decide-only µs vs the end-to-end
+                                 dispatch µs per call: the share of a
+                                 step the decision cache (DESIGN.md
+                                 §13) can amortize away
+  policy_sweep[<policy>_cache] — with ``reuse_every`` > 1 on a
+                                 cache-capable policy: a scan over the
+                                 denoising steps carrying the decision
+                                 cache; derived = hits / refreshes /
+                                 hit rate
+  policy_sweep[<policy>_reuse<R>_psnr] — PSNR vs dense of the *cached*
+                                 trajectory's mean step output
+                                 (compare against <policy>_psnr1, the
+                                 same loop at R=1, for the cost of the
+                                 stale decisions)
 
 Thresholds are evaluated mid-schedule (the Eq. 4 ramp's active range);
 ``--steps`` below the active range degenerates every schedule policy to
@@ -33,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import GRID, correlated_qk, timed
+from benchmarks.common import GRID, correlated_qk, decision_harness, timed
 from repro.config.base import RippleConfig
 from repro.core import dispatch
 from repro.core.dispatch import attention_dispatch
@@ -48,9 +62,58 @@ def _psnr(a, b) -> float:
     return 10 * np.log10(rng ** 2 / max(mse, 1e-12))
 
 
+def _decide_us(name, q, k, grid, cfg, step, total_steps, plan) -> float:
+    """Decide-only walltime minus the measured consumer floor (the
+    shared ``benchmarks.common.decision_harness``, also used by
+    kernel_bench.decision_amortization — the two report comparable
+    decide times).  ``plan`` supplies the block_shape a sparse-planned
+    map policy would tile with: that tiling is part of the decide cost
+    the cache amortizes."""
+    from repro.core.policy import get_policy
+
+    pol = get_policy(name)
+    thetas = pol.thetas_for(cfg, step, total_steps)
+    block_shape = ((plan.block_q, plan.block_k)
+                   if plan.backend == "sparse"
+                   and pol.will_emit_block_map(cfg) else None)
+    decide, floor, _ = decision_harness(pol, q, k, grid=grid, cfg=cfg,
+                                        thetas=thetas,
+                                        block_shape=block_shape)
+    return max(timed(decide, q, k) - timed(floor), 0.0)
+
+
+def _cache_loop(name, q, k, v, grid, cfg, total_steps, reuse_every):
+    """Scan the denoising steps carrying the decision cache (DESIGN.md
+    §13) — the sampler-shaped loop, minus the model around it.  Returns
+    (per-step outputs, final CachedDecision, walltime us)."""
+    from repro.core import decision_cache
+
+    cfg_r = dataclasses.replace(cfg, policy=name,
+                                reuse_every=int(reuse_every))
+
+    @jax.jit
+    def loop(q, k, v):
+        init = decision_cache.initial_state(q.shape, grid=grid, cfg=cfg_r)
+
+        def body(carry, si):
+            out, carry = attention_dispatch(
+                q, k, v, grid=grid, cfg=cfg_r, step=si,
+                total_steps=total_steps, cached_decision=carry)
+            return carry, out
+
+        return jax.lax.scan(body, init, jnp.arange(total_steps))
+
+    us = timed(loop, q, k, v)
+    final, outs = loop(q, k, v)
+    return outs, final, us
+
+
 def main(policies: Optional[Sequence[str]] = None,
          steps: Optional[int] = None,
-         grid: Optional[Tuple[int, int, int]] = None) -> None:
+         grid: Optional[Tuple[int, int, int]] = None,
+         reuse_every: Optional[int] = None) -> None:
+    from repro.core import decision_cache
+
     grid = grid or GRID
     total_steps = steps or 10
     q, k = correlated_qk(grid=grid, d=D)
@@ -86,6 +149,35 @@ def main(policies: Optional[Sequence[str]] = None,
         if plan.backend == "sparse":
             print(f"policy_sweep[{name}_skip],{us:.0f},"
                   f"{float(stats.structural_savings):.3f}")
+        if plan.backend != "dense":
+            dus = _decide_us(name, q, k, grid, cfg_p, step, total_steps,
+                             plan)
+            print(f"decision_overhead[{name}],{dus:.0f},"
+                  f"decide_us={dus:.0f};end_to_end_us={us:.0f};"
+                  f"decide_frac={dus / max(us, 1e-9):.3f}")
+        if reuse_every and reuse_every > 1 \
+                and decision_cache.supports_cache(cfg_p):
+            outs_r, final, cus = _cache_loop(name, q, k, v, grid, cfg,
+                                             total_steps, reuse_every)
+            outs_1, _, _ = _cache_loop(name, q, k, v, grid, cfg,
+                                       total_steps, 1)
+            hits = int(np.asarray(final.hits).sum())
+            refr = int(np.asarray(final.refreshes).sum())
+            print(f"policy_sweep[{name}_cache],{cus:.0f},"
+                  f"hits={hits};refreshes={refr};"
+                  f"hit_rate={hits / max(hits + refr, 1):.3f}")
+            mean_r = np.asarray(outs_r).mean(axis=0)
+            mean_1 = np.asarray(outs_1).mean(axis=0)
+            p_r, p_1 = _psnr(dense, mean_r), _psnr(dense, mean_1)
+            # degradation = how much *worse* than the per-step baseline
+            # the cached trajectory is; stale decisions carry an older
+            # (smaller) θ, so the cached path is usually conservative
+            # and the degradation clamps at 0.
+            print(f"policy_sweep[{name}_reuse{reuse_every}_psnr],{cus:.0f},"
+                  f"{p_r:.1f}")
+            print(f"policy_sweep[{name}_psnr1],{cus:.0f},{p_1:.1f}")
+            print(f"policy_sweep[{name}_reuse{reuse_every}_degradation_db],"
+                  f"{cus:.0f},{max(p_1 - p_r, 0.0):.2f}")
 
 
 if __name__ == "__main__":

@@ -9,12 +9,16 @@ paper.  Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
 (benchmarks/policy_sweep.py) for that registered policy at a tiny grid —
 the CI smoke invocations are ``--policy dense --steps 2`` and
 ``--policy svg --steps 2`` (the latter keeps the svg→sparse backend
-path compiling).
+path compiling).  ``--reuse-every R`` additionally scans the steps
+carrying the cross-step decision cache (DESIGN.md §13) and reports its
+hit counters and reuse-PSNR rows.
 
-``--json PATH`` additionally writes every CSV row as a machine-readable
-``BENCH_*.json`` record (per-benchmark ``us_per_call`` plus the derived
-metrics — including the sparse backend's skip rate) so the perf
-trajectory can be tracked across PRs; CI uploads it as an artifact.
+Every run writes a machine-readable ``BENCH_*.json`` record (per-
+benchmark ``us_per_call`` plus the derived metrics — including the
+sparse backend's skip rate and the decision-cache hit counts) so the
+perf trajectory is tracked across PRs; CI uploads it as an artifact.
+``--json PATH`` overrides the default ``BENCH_<policy|full>[_rR].json``
+name; ``--json ''`` disables the record.
 """
 
 from __future__ import annotations
@@ -76,7 +80,7 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
         "schema": "repro-bench/1",
         "created_unix": round(time.time(), 3),
         "args": {"quick": args.quick, "policy": args.policy,
-                 "steps": args.steps},
+                 "steps": args.steps, "reuse_every": args.reuse_every},
         "walltime_s": round(walltime_s, 3),
         "benchmarks": rows,
         "failures": [{"module": m, "error": e} for m, e in failures],
@@ -85,6 +89,13 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
         json.dump(record, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path} ({len(rows)} benchmark rows)", file=sys.stderr)
+
+
+def _default_json_path(args) -> str:
+    name = args.policy or "full"
+    if args.reuse_every and args.reuse_every > 1:
+        name += f"_r{args.reuse_every}"
+    return f"BENCH_{name}.json"
 
 
 def main() -> None:
@@ -96,10 +107,17 @@ def main() -> None:
                          "reuse policy, at a tiny smoke grid")
     ap.add_argument("--steps", type=int, default=None,
                     help="denoising-step count for the policy sweep")
+    ap.add_argument("--reuse-every", type=int, default=None, metavar="R",
+                    help="decision-cache cadence for the policy sweep "
+                         "(DESIGN.md §13): scan the steps carrying the "
+                         "cache and report hit counters + reuse-PSNR")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write a machine-readable BENCH_*.json "
-                         "record of every benchmark row to PATH")
+                    help="write the machine-readable BENCH_*.json record "
+                         "to PATH (default: BENCH_<policy|full>[_rR].json "
+                         "in the working directory; '' disables)")
     args = ap.parse_args()
+    json_path = args.json if args.json is not None \
+        else _default_json_path(args)
 
     t0 = time.perf_counter()
     tee = _Tee(sys.stdout)
@@ -110,7 +128,8 @@ def main() -> None:
             from benchmarks import policy_sweep
 
             policy_sweep.main(policies=[args.policy],
-                              steps=args.steps or 2, grid=(2, 4, 4))
+                              steps=args.steps or 2, grid=(2, 4, 4),
+                              reuse_every=args.reuse_every)
         else:
             from benchmarks import (fig7_mse, fig9_steps, fig11_window,
                                     kernel_bench, policy_sweep, serve_mixed,
@@ -123,13 +142,19 @@ def main() -> None:
                 mods.insert(0, tbl2_savings)
             for mod in mods:
                 try:
-                    mod.main()
+                    if mod is policy_sweep:
+                        # the one module that honours the cadence flag —
+                        # never stamp a cadence into the record that no
+                        # benchmark actually ran with
+                        mod.main(reuse_every=args.reuse_every)
+                    else:
+                        mod.main()
                 except Exception as e:  # noqa: BLE001 — keep suite running
                     traceback.print_exc()
                     failures.append((mod.__name__, repr(e)))
 
-    if args.json:
-        _write_record(args.json, args, _parse_rows("".join(tee.chunks)),
+    if json_path:
+        _write_record(json_path, args, _parse_rows("".join(tee.chunks)),
                       failures, time.perf_counter() - t0)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)

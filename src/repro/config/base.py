@@ -84,6 +84,19 @@ class RippleConfig:
     # forces it (interpret mode on CPU — tests/benchmarks), 'off' keeps
     # the host-side jnp mask computation from ``core.reuse``.
     fused_mask: str = "auto"  # 'auto' | 'on' | 'off'
+    # Cross-step decision cache (DESIGN.md §13): re-decide the reuse
+    # masks / snap sources / block map only every ``reuse_every`` steps
+    # and cheaply re-apply the cached decision to the fresh Q/K in
+    # between (the per-step math stays exact; only the *decision* is
+    # stale).  1 = decide every step (the pre-cache behaviour).
+    reuse_every: int = 1
+    # Optional drift guard: when > 0, a sampled-channel Δ statistic of
+    # the fresh operands is compared against the statistic recorded when
+    # the cached decision was made; a relative change above ``drift_tol``
+    # forces an early refresh before the cadence is due.  0 disables.
+    drift_tol: float = 0.0
+    # How many channels the drift statistic samples (stride-subsampled).
+    drift_channels: int = 8
     # Experimental 1-D reuse on LM sequence windows. Off by default and
     # not part of the reproduction claims.
     enable_1d: bool = False

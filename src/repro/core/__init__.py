@@ -36,7 +36,16 @@ from repro.core.policy import (
     list_policies,
     register_policy,
 )
-from repro.core.ripple_attention import ripple_attention
+# The cross-step decision cache (DESIGN.md §13): amortize decide() over
+# the reuse_every cadence; the deprecated core.ripple_attention shim is
+# intentionally NOT re-exported here — call attention_dispatch.
+from repro.core.decision_cache import (
+    CachedDecision,
+    drift_stat,
+    initial_state as initial_decision_state,
+    refresh_due,
+    supports_cache,
+)
 from repro.core.calibrate import (calibrate_threshold, equal_mse_schedule,
                                   fit_step_sensitivity)
 from repro.core.svg_mask import svg_block_mask, svg_logit_bias

@@ -1,0 +1,195 @@
+"""Cross-step reuse-decision cache (DESIGN.md §13).
+
+TIMERIPPLE's premise is that the spatio-temporal correlations the
+Δ-checks measure are *stable* in latent space — yet the pipeline used to
+recompute the full reuse decision (windowed Δ-stats on three axes,
+snap-mask resolution, block-map tiling) on every attention call of every
+denoising step, paying the decision ``steps × layers`` times per video
+while the decided masks barely change between adjacent steps.  This
+module amortizes that cost the way Sparse VideoGen amortizes online
+profiling and Sparse-vDiT amortizes offline pattern search — but keeps
+the per-step math exact, because only the *decision* is reused: the
+cached plan is re-applied to the **fresh** Q/K values each step.
+
+The cacheable plan of one :class:`~repro.core.policy.ReuseDecision` is a
+:class:`CachedDecision`:
+
+  * ``q_idx`` / ``k_idx`` — snap-source token maps (operand-rewriting
+    policies); replaying one is a single ``take_along_axis`` gather,
+  * ``bias`` / ``block_map`` — mask-emitting policies; reused verbatim,
+    so for block-map policies a cache hit skips ``decide()`` entirely
+    (the sparse kernel only needs the map),
+  * ``ref_stat`` — the sampled-channel Δ statistic recorded when the
+    decision was made (per (batch, head) cell, so shard_map slices it
+    like the operands — decisions are shard-local, zero halo),
+  * ``hits`` / ``refreshes`` — per-cell counters for serving telemetry.
+
+Refresh policy: a decision is recomputed when ``step % cfg.reuse_every
+== 0`` or, with ``cfg.drift_tol > 0``, when the cheap drift statistic of
+the fresh operands moved more than ``drift_tol`` (relative) from
+``ref_stat`` — so the cadence is adaptive, not blind.  The whole
+refresh-vs-reuse choice runs under ``lax.cond`` inside
+``attention_dispatch``, which makes the state scan-carriable: samplers
+thread one stacked :class:`CachedDecision` per layer through their
+``lax.scan`` carry (``diffusion.sampler``, ``models.vdit``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RippleConfig
+from repro.core.policy import ReuseDecision, get_policy
+
+__all__ = ["CachedDecision", "cache_from_decision", "drift_stat",
+           "initial_state", "refresh_due", "supports_cache"]
+
+
+@dataclasses.dataclass
+class CachedDecision:
+    """Scan-carriable plan half of one reuse decision (see module doc).
+
+    Every array leaf keeps the operands' leading (batch, head, ...)
+    dims, so under shard_map each shard carries exactly its own cache
+    slice (DESIGN.md §10/§13)."""
+
+    q_idx: Optional[jax.Array] = None      # int32 (..., Ng, d) snap sources
+    k_idx: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None       # f32 additive logit mask
+    block_map: Optional[jax.Array] = None  # int32 (..., nq, nk) tile states
+    ref_stat: Optional[jax.Array] = None   # f32 lead-shaped drift reference
+    hits: Optional[jax.Array] = None       # i32 lead-shaped counters
+    refreshes: Optional[jax.Array] = None
+
+
+jax.tree_util.register_dataclass(
+    CachedDecision,
+    data_fields=["q_idx", "k_idx", "bias", "block_map", "ref_stat",
+                 "hits", "refreshes"],
+    meta_fields=[])
+
+
+def supports_cache(cfg: RippleConfig, policy=None) -> bool:
+    """Can dispatch carry decisions across steps for this config?  The
+    gate callers check before threading state: the config must be active
+    and the resolved policy must declare the capability
+    (``ReusePolicy.caches_decisions``) — pre-cache policies keep their
+    original ``decide`` signature and simply never see the cache."""
+    if not cfg.active():
+        return False
+    pol = get_policy(policy if policy is not None else cfg.policy)
+    return (not pol.is_dense) and pol.will_cache_decisions(cfg)
+
+
+def drift_stat(q: jax.Array, k: jax.Array, cfg: RippleConfig) -> jax.Array:
+    """Cheap sampled-channel Δ statistic, one f32 scalar per leading
+    (batch, head, ...) cell: mean |adjacent-token difference| over a
+    strided sample of ``cfg.drift_channels`` channels of Q and K.  This
+    is a O(N·c) proxy for the full windowed Δ the decision measured —
+    if the latent correlations the cached decision is built on move,
+    this moves with them.  Shard-oblivious: reduces only along tokens
+    and channels, never across batch or heads."""
+    c = max(int(cfg.drift_channels), 1)
+
+    def stat(x):
+        stride = max(x.shape[-1] // c, 1)
+        xs = x[..., ::stride].astype(jnp.float32)
+        return jnp.mean(jnp.abs(xs[..., 1:, :] - xs[..., :-1, :]),
+                        axis=(-1, -2))
+
+    return 0.5 * (stat(q) + stat(k))
+
+
+def refresh_due(step, cfg: RippleConfig, stat: jax.Array,
+                ref_stat: Optional[jax.Array],
+                total_steps: Optional[int] = None):
+    """Scalar bool: is the cached decision stale at ``step``?  Due on
+    the ``reuse_every`` cadence; early when the drift guard is on and
+    any (batch, head) cell's statistic moved more than ``drift_tol``
+    relative to the cached reference; and always on the final denoising
+    step — the Eq. 4 schedule forces it dense (quality-critical, paper
+    §3.3), and applying a stale mask there would silently override
+    that.
+
+    Refresh granularity is the cond's scope: the ``jnp.any`` reduces
+    over whatever cells this call sees — all of them single-device, one
+    shard's slice under shard_map.  With ``drift_tol=0`` (the default)
+    that makes no difference and sharded trajectories are bitwise-equal
+    to single-device; with the guard on, a drifted sample refreshes its
+    whole call single-device but only its own shard when sharded —
+    deliberate (zero-halo: no collective in the decision path), traded
+    against cross-topology bitwise reproducibility (DESIGN.md §13.3).
+    """
+    every = max(int(cfg.reuse_every), 1)
+    step = jnp.asarray(step, jnp.int32)
+    due = jnp.equal(jnp.mod(step, every), 0)
+    if total_steps is not None:
+        due = jnp.logical_or(due, step >= jnp.asarray(total_steps) - 1)
+    if cfg.drift_tol > 0 and ref_stat is not None:
+        rel = jnp.abs(stat - ref_stat) > cfg.drift_tol * (
+            jnp.abs(ref_stat) + 1e-6)
+        due = jnp.logical_or(due, jnp.any(rel))
+    return due
+
+
+def cache_from_decision(decision: ReuseDecision, stat: jax.Array,
+                        prev: Optional[CachedDecision] = None
+                        ) -> CachedDecision:
+    """Extract the cacheable plan of a fresh ``decide(want_plan=True)``
+    call, bumping the refresh counter (``prev=None`` starts them)."""
+    if prev is None or prev.hits is None:
+        hits = jnp.zeros(stat.shape, jnp.int32)
+        refreshes = jnp.ones(stat.shape, jnp.int32)
+    else:
+        hits = prev.hits
+        refreshes = prev.refreshes + 1
+    return CachedDecision(
+        q_idx=decision.q_src, k_idx=decision.k_src, bias=decision.bias,
+        block_map=decision.block_map, ref_stat=stat, hits=hits,
+        refreshes=refreshes)
+
+
+def bump_hit(cached: CachedDecision) -> CachedDecision:
+    """The cache-hit branch's counter update."""
+    return dataclasses.replace(cached, hits=cached.hits + 1)
+
+
+def initial_state(q_shape: Tuple[int, ...], *,
+                  grid: Tuple[int, int, int],
+                  cfg: RippleConfig,
+                  policy=None,
+                  grid_slice: Optional[Tuple[int, int]] = None,
+                  num_layers: Optional[int] = None,
+                  dtype=jnp.float32,
+                  backend: Optional[str] = None) -> CachedDecision:
+    """All-zeros :class:`CachedDecision` with exactly the structure the
+    dispatcher will carry for these operand shapes — built by
+    ``eval_shape``-ing the dispatch call itself, so it can never drift
+    from the runtime structure.  With ``num_layers`` every leaf gains a
+    leading layer dim (the per-layer state a model threads through its
+    scan-over-layers).  Safe to call inside a jit trace: the zeros
+    become constants.  Step 0 always refreshes (``0 % R == 0``), so the
+    dummy plan is never applied."""
+    from repro.core.dispatch import attention_dispatch
+
+    q = jax.ShapeDtypeStruct(tuple(q_shape), dtype)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def build(q, k, v, step):
+        return attention_dispatch(
+            q, k, v, grid=grid, cfg=cfg, step=step,
+            total_steps=max(int(cfg.reuse_every), 2),
+            grid_slice=grid_slice, backend=backend, policy=policy,
+            return_decision=True)[1]
+
+    shapes = jax.eval_shape(build, q, q, q, step)
+    zeros = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    if num_layers is not None:
+        zeros = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((num_layers,) + a.shape, a.dtype), zeros)
+    return zeros

@@ -28,9 +28,10 @@ model targets (DESIGN.md §8).
      :func:`autotune_attention` (benchmarks/kernel_bench.py sweeps it);
      plan resolution never times kernels inside a trace.
 
-``core.ripple_attention.ripple_attention`` is a thin compatibility
-wrapper over this module; model code calls :func:`attention_dispatch`
-via ``models.attention.mha_attention``.
+``core.ripple_attention.ripple_attention`` is a deprecated out-of-tree
+compatibility wrapper over this module (nothing in-repo imports it);
+model code calls :func:`attention_dispatch` via
+``models.attention.mha_attention``.
 
 When a mesh is active (:func:`dispatch_mesh` / :func:`set_dispatch_mesh`
 — the serving launchers install one), plan resolution additionally
@@ -469,6 +470,43 @@ def plan_for_shape(n_tokens: int, head_dim: int, cfg: RippleConfig, *,
 # ---------------------------------------------------------------------------
 
 
+def _decide_extra(plan: DispatchPlan, policy: ReusePolicy,
+                  cfg: RippleConfig) -> dict:
+    extra = {}
+    if plan.backend == "sparse" and policy.will_emit_block_map(cfg):
+        # Only sparse plans for map-emitting policies pass block_shape:
+        # policies predating the block-sparse backend keep their
+        # original decide() signature even under a forced 'sparse'
+        # (their mapless decision runs the kernel's all-full path).
+        extra["block_shape"] = (plan.block_q, plan.block_k)
+    return extra
+
+
+def _execute_backend(d: ReuseDecision, v, scale, *, plan: DispatchPlan,
+                     cfg: RippleConfig):
+    """Fig. 6 steps ③-④: run the planned backend on one decision."""
+    if plan.backend == "pallas":
+        # Deferred import: kernels are optional at module-import time.
+        from repro.kernels.ripple.ops import ripple_attention_pallas
+
+        return ripple_attention_pallas(d.q, d.k, v, bias=d.bias,
+                                       window=cfg.window,
+                                       block_q=plan.block_q,
+                                       block_k=plan.block_k)
+    if plan.backend == "sparse":
+        from repro.kernels.sparse.ops import sparse_attention_pallas
+
+        return sparse_attention_pallas(d.q, d.k, v, bias=d.bias,
+                                       block_map=d.block_map,
+                                       block_q=plan.block_q,
+                                       block_k=plan.block_k)
+    if plan.backend == "collapse":
+        return collapsed_attention(d.q, d.k, v, bias=d.bias,
+                                   window=cfg.window, scale=scale)
+    # 'reference': dense attention on the decided operands
+    return dense_attention(d.q, d.k, v, scale, d.bias)
+
+
 def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
                   grid, cfg: RippleConfig, grid_slice,
                   policy: ReusePolicy):
@@ -478,37 +516,55 @@ def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
     operands or on one shard_map shard (decisions only look along t/x/y,
     DESIGN.md §10).
     """
-    extra = {}
-    if plan.backend == "sparse" and policy.will_emit_block_map(cfg):
-        # Only sparse plans for map-emitting policies pass block_shape:
-        # policies predating the block-sparse backend keep their
-        # original decide() signature even under a forced 'sparse'
-        # (their mapless decision runs the kernel's all-full path).
-        extra["block_shape"] = (plan.block_q, plan.block_k)
     d = policy.decide(q, k, grid=grid, cfg=cfg, thetas=thetas, bias=bias,
-                      grid_slice=grid_slice, fused=plan.fused_mask, **extra)
+                      grid_slice=grid_slice, fused=plan.fused_mask,
+                      **_decide_extra(plan, policy, cfg))
+    return _execute_backend(d, v, scale, plan=plan, cfg=cfg), d
 
-    if plan.backend == "pallas":
-        # Deferred import: kernels are optional at module-import time.
-        from repro.kernels.ripple.ops import ripple_attention_pallas
 
-        out = ripple_attention_pallas(d.q, d.k, v, bias=d.bias,
-                                      window=cfg.window,
-                                      block_q=plan.block_q,
-                                      block_k=plan.block_k)
-    elif plan.backend == "sparse":
-        from repro.kernels.sparse.ops import sparse_attention_pallas
+def _run_pipeline_cached(q, k, v, thetas, scale, *, plan: DispatchPlan,
+                         grid, cfg: RippleConfig, grid_slice,
+                         policy: ReusePolicy, step, cached,
+                         total_steps=None):
+    """The cross-step decision-cache pipeline (DESIGN.md §13): decide
+    fresh when the cadence / drift guard says the cached plan is stale,
+    otherwise re-apply the carried plan to the fresh operands — both
+    arms of one ``lax.cond`` producing structurally identical
+    (ReuseDecision, CachedDecision) pairs, so the state is
+    scan-carriable.  The backend then executes once on the selected
+    decision (the kernels are not duplicated into the branches).
+    External bias must be None (the dispatcher gates this).  Returns
+    (out, decision, new_cache).
+    """
+    from repro.core import decision_cache as dc
 
-        out = sparse_attention_pallas(d.q, d.k, v, bias=d.bias,
-                                      block_map=d.block_map,
-                                      block_q=plan.block_q,
-                                      block_k=plan.block_k)
-    elif plan.backend == "collapse":
-        out = collapsed_attention(d.q, d.k, v, bias=d.bias,
-                                  window=cfg.window, scale=scale)
-    else:  # 'reference': dense attention on the decided operands
-        out = dense_attention(d.q, d.k, v, scale, d.bias)
-    return out, d
+    extra = _decide_extra(plan, policy, cfg)
+    # The drift statistic is only worth its O(N·c) pass when the guard
+    # can act on it; with the guard off the carry keeps a zero stat so
+    # the pytree structure (and cadence behaviour) is identical.
+    if cfg.drift_tol > 0:
+        stat = dc.drift_stat(q, k, cfg)
+    else:
+        stat = jnp.zeros(q.shape[:-2], jnp.float32)
+
+    def fresh(prev):
+        d = policy.decide(q, k, grid=grid, cfg=cfg, thetas=thetas,
+                          bias=None, grid_slice=grid_slice,
+                          fused=plan.fused_mask, want_plan=True, **extra)
+        return d, dc.cache_from_decision(d, stat, prev=prev)
+
+    if cached is None:
+        d, new_cache = fresh(None)
+    else:
+        def reuse(prev):
+            d = policy.apply_decision(q, k, prev, grid=grid, cfg=cfg,
+                                      thetas=thetas, grid_slice=grid_slice)
+            return d, dc.bump_hit(prev)
+
+        refresh = dc.refresh_due(step, cfg, stat, cached.ref_stat,
+                                 total_steps)
+        d, new_cache = jax.lax.cond(refresh, fresh, reuse, cached)
+    return _execute_backend(d, v, scale, plan=plan, cfg=cfg), d, new_cache
 
 
 def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
@@ -522,14 +578,37 @@ def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
     return P(*entries)
 
 
+def _lead_spec(plan: DispatchPlan, ndim: int) -> P:
+    """PartitionSpec for a decision-cache leaf: every leaf keeps the
+    operands' leading (batch, head) dims (DESIGN.md §13), whatever its
+    trailing rank — snap-source maps (..., Ng, d), biases (..., N, N),
+    block maps (..., nq, nk), and lead-shaped stats/counters alike.
+    ``plan.head_axis`` is only ever set for 4-D operands, so placing it
+    at dim 1 is always correct here."""
+    entries: list = [None] * ndim
+    if plan.batch_axes and ndim >= 1:
+        entries[0] = (plan.batch_axes if len(plan.batch_axes) > 1
+                      else plan.batch_axes[0])
+    if plan.head_axis is not None and ndim >= 2:
+        entries[1] = plan.head_axis
+    return P(*entries)
+
+
 def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
                       mesh: Mesh, grid, cfg: RippleConfig, grid_slice,
-                      policy: ReusePolicy):
+                      policy: ReusePolicy, step=None, cached=None,
+                      want_cache: bool = False, total_steps=None):
     """Run :func:`_run_pipeline` under shard_map over the plan's batch /
     head axes.  No collectives: the sharded axes never carry a reuse
     window (the policy contract — decisions look only along t/x/y), so
     each shard's decision is self-contained (zero halo) and the result
-    is bitwise-identical to the replicated path."""
+    is bitwise-identical to the replicated path.
+
+    With ``want_cache`` the decision cache rides along: every cache
+    leaf keeps the operands' leading dims, so each shard carries (and
+    refreshes) exactly its own cache slice — drift on one shard
+    refreshes that shard alone.  Returns (out, new_cache) then.
+    """
     from jax.experimental.shard_map import shard_map
 
     spec = _operand_spec(plan, q.ndim)
@@ -537,16 +616,47 @@ def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
                         for a in ("t", "x", "y")])
     scale = jnp.asarray(scale, jnp.float32)
 
-    def body(qs, ks, vs, th, sc):
-        th_d = {"t": th[0], "x": th[1], "y": th[2]}
-        out, _ = _run_pipeline(qs, ks, vs, th_d, sc, None, plan=plan,
-                               grid=grid, cfg=cfg, grid_slice=grid_slice,
-                               policy=policy)
-        return out
+    if not want_cache:
+        def body(qs, ks, vs, th, sc):
+            th_d = {"t": th[0], "x": th[1], "y": th[2]}
+            out, _ = _run_pipeline(qs, ks, vs, th_d, sc, None, plan=plan,
+                                   grid=grid, cfg=cfg, grid_slice=grid_slice,
+                                   policy=policy)
+            return out
 
-    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec, P(), P()),
-                   out_specs=spec, check_rep=False)
-    return fn(q, k, v, th_vec, scale)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(spec, spec, spec, P(), P()),
+                       out_specs=spec, check_rep=False)
+        return fn(q, k, v, th_vec, scale)
+
+    step = jnp.asarray(step, jnp.int32)
+    # The cache's pytree structure (for the out_specs) without running
+    # anything: abstract-eval the cached pipeline.  Identical to the
+    # runtime structure by construction — it is the same call.
+    tmpl = cached if cached is not None else jax.eval_shape(
+        lambda qq, kk, vv, st: _run_pipeline_cached(
+            qq, kk, vv, thetas, scale, plan=plan, grid=grid, cfg=cfg,
+            grid_slice=grid_slice, policy=policy, step=st, cached=None,
+            total_steps=total_steps)[2],
+        q, k, v, step)
+    cache_specs = jax.tree_util.tree_map(
+        lambda a: _lead_spec(plan, len(a.shape)), tmpl)
+
+    def body(qs, ks, vs, th, sc, st, *cache):
+        th_d = {"t": th[0], "x": th[1], "y": th[2]}
+        out, _, new_cache = _run_pipeline_cached(
+            qs, ks, vs, th_d, sc, plan=plan, grid=grid, cfg=cfg,
+            grid_slice=grid_slice, policy=policy, step=st,
+            cached=cache[0] if cache else None, total_steps=total_steps)
+        return out, new_cache
+
+    in_specs = (spec, spec, spec, P(), P(), P()) + (
+        (cache_specs,) if cached is not None else ())
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(spec, cache_specs), check_rep=False)
+    args = (q, k, v, th_vec, scale, step) + (
+        (cached,) if cached is not None else ())
+    return fn(*args)
 
 
 def attention_dispatch(
@@ -565,6 +675,8 @@ def attention_dispatch(
     mesh: Optional[Mesh] = None,
     policy=None,
     with_stats: bool = False,
+    cached_decision=None,
+    return_decision: bool = False,
 ):
     """Sparse attention behind one dispatch seam.
 
@@ -576,7 +688,19 @@ def attention_dispatch(
     per-step schedule (otherwise derived from ``step``/``total_steps``).
     ``mesh`` overrides the active dispatch mesh; when the resolved plan
     carries sharding, the pipeline runs under shard_map (DESIGN.md §10).
-    Returns ``out`` or ``(out, RippleStats)``.
+
+    Cross-step decision cache (DESIGN.md §13): ``cached_decision`` is a
+    :class:`~repro.core.decision_cache.CachedDecision` from an earlier
+    call on identically-shaped operands — the decision is then only
+    recomputed when ``step % cfg.reuse_every == 0`` or the drift guard
+    fires, and otherwise cheaply re-applied to the fresh operands.
+    ``return_decision=True`` (implied by passing ``cached_decision``)
+    returns the updated cache as the second element so samplers can
+    carry it through their scan.  Requires an active cache-capable
+    policy, a concrete ``step``, and no external ``bias``.
+
+    Returns ``out``, ``(out, RippleStats)``, ``(out, CachedDecision)``
+    or ``(out, CachedDecision, RippleStats)``.
     """
     if mesh is None:
         mesh = _ACTIVE_MESH
@@ -584,6 +708,22 @@ def attention_dispatch(
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
                         has_bias=bias is not None, mesh=mesh, policy=pol)
+    want_cache = return_decision or cached_decision is not None
+    if want_cache:
+        if plan.backend == "dense" or not pol.will_cache_decisions(cfg):
+            raise ValueError(
+                f"decision caching requested but policy {pol.name!r} "
+                f"under this config resolves to "
+                f"{plan.backend!r}/caches_decisions="
+                f"{pol.will_cache_decisions(cfg)} — gate on "
+                f"decision_cache.supports_cache(cfg, policy) first")
+        if bias is not None:
+            raise ValueError("decision caching requires bias=None (the "
+                             "cached plan could not account for a fresh "
+                             "external bias)")
+        if step is None:
+            raise ValueError("decision caching needs a concrete step for "
+                             "the reuse_every cadence")
     if plan.backend == "dense" or not cfg.active():
         out = dense_attention(q, k, v, scale, bias)
         if with_stats:
@@ -599,7 +739,19 @@ def attention_dispatch(
             and not with_stats):
         return _sharded_pipeline(q, k, v, thetas, scale, plan=plan,
                                  mesh=mesh, grid=grid, cfg=cfg,
-                                 grid_slice=grid_slice, policy=pol)
+                                 grid_slice=grid_slice, policy=pol,
+                                 step=step, cached=cached_decision,
+                                 want_cache=want_cache,
+                                 total_steps=total_steps)
+
+    if want_cache:
+        out, decision, new_cache = _run_pipeline_cached(
+            q, k, v, thetas, scale, plan=plan, grid=grid, cfg=cfg,
+            grid_slice=grid_slice, policy=pol, step=step,
+            cached=cached_decision, total_steps=total_steps)
+        if with_stats:
+            return out, new_cache, pol.stats(decision)
+        return out, new_cache
 
     out, decision = _run_pipeline(
         q, k, v, thetas, scale, bias, plan=plan, grid=grid, cfg=cfg,

@@ -79,6 +79,15 @@ class ReuseDecision:
     states broadcastable over (batch, heads), tiled with the
     ``block_shape`` the dispatcher passed to :meth:`ReusePolicy.decide`.
     Policies derive it from their masks; None means every tile runs.
+
+    ``q_src`` / ``k_src`` (only with ``want_plan=True``, DESIGN.md §13)
+    are int32 snap-source token maps over the decided grid segment —
+    the cacheable half of an operand-rewriting decision: re-applying it
+    to fresh operands is one ``take_along_axis`` gather.
+
+    Registered as a jax pytree (``active_axes`` / ``window`` are static
+    metadata) so whole decisions can flow through ``lax.cond`` — the
+    decision cache's refresh-vs-reuse branch point.
     """
 
     q: jax.Array
@@ -91,6 +100,15 @@ class ReuseDecision:
     savings: Optional[jax.Array] = None
     block_map: Optional[jax.Array] = None
     window: int = 2  # collapse-window size the masks were computed with
+    q_src: Optional[jax.Array] = None
+    k_src: Optional[jax.Array] = None
+
+
+jax.tree_util.register_dataclass(
+    ReuseDecision,
+    data_fields=["q", "k", "thetas", "bias", "q_mask", "k_mask", "savings",
+                 "block_map", "q_src", "k_src"],
+    meta_fields=["active_axes", "window"])
 
 
 def zero_inactive_axes(thetas: Dict[str, jax.Array],
@@ -126,6 +144,13 @@ class ReusePolicy:
       ``emits_block_map``  decide() can tile its mask into a sparse
                            block map → the block-sparse backend realizes
                            the mask as skipped tiles (DESIGN.md §12)
+      ``caches_decisions`` decide(want_plan=True) emits a reusable plan
+                           (snap-source maps / bias / block map) that
+                           :meth:`apply_decision` can re-apply to fresh
+                           operands — the cross-step decision cache
+                           (DESIGN.md §13).  Policies written before the
+                           cache existed default to False and keep
+                           their original ``decide`` signature.
     """
 
     name: str = ""
@@ -133,6 +158,7 @@ class ReusePolicy:
     snaps_operands: bool = True
     is_dense: bool = False
     emits_block_map: bool = False
+    caches_decisions: bool = False
 
     def will_emit_bias(self, cfg: RippleConfig) -> bool:
         """Will :meth:`decide` attach a logit bias under this config?
@@ -146,6 +172,14 @@ class ReusePolicy:
         when given a ``block_shape``?  Plan resolution prefers the
         block-sparse backend for such policies (DESIGN.md §12)."""
         return self.emits_block_map
+
+    def will_cache_decisions(self, cfg: RippleConfig) -> bool:
+        """Can this policy's decision be cached across steps under this
+        config (DESIGN.md §13)?  The dispatcher passes ``want_plan=True``
+        to :meth:`decide` — and calls :meth:`apply_decision` on cache
+        hits — only when this returns True, so pre-cache policies keep
+        their original signature."""
+        return self.caches_decisions
 
     # -- per-step threshold schedule ------------------------------------
 
@@ -187,8 +221,55 @@ class ReusePolicy:
         ``block_shape`` is the resolved plan's (block_q, block_k) — the
         dispatcher passes it **only** when the block-sparse backend was
         planned (so policies written before it existed keep working);
-        block-map policies tile their masks with it (DESIGN.md §12)."""
+        block-map policies tile their masks with it (DESIGN.md §12).
+
+        Cache-capable policies (``caches_decisions``) additionally take
+        ``want_plan`` (again passed only when the capability is
+        declared) and populate ``ReuseDecision.q_src`` / ``k_src`` when
+        it is set, so the dispatcher can carry the decision across
+        steps (DESIGN.md §13)."""
         raise NotImplementedError
+
+    # -- cross-step decision reuse (DESIGN.md §13) ----------------------
+
+    def apply_decision(self, q: jax.Array, k: jax.Array, cached, *,
+                       grid: Tuple[int, int, int], cfg: RippleConfig,
+                       thetas: Dict[str, jax.Array],
+                       grid_slice: Optional[Tuple[int, int]] = None
+                       ) -> ReuseDecision:
+        """Re-apply a cached decision to *fresh* operands — the cheap
+        half of the plan/apply split.  ``cached`` is the
+        :class:`~repro.core.decision_cache.CachedDecision` an earlier
+        ``decide(want_plan=True)`` produced for identically-shaped
+        operands: snap-source maps are replayed as one gather each, the
+        cached bias / block map are attached verbatim.  The per-step
+        math stays exact — only the decision is stale.
+
+        The base implementation covers both built-in shapes (operand
+        rewriting via ``q_src``/``k_src``, mask emission via
+        ``bias``/``block_map``); override for exotic plans.  Must
+        produce a ReuseDecision with the same pytree structure as the
+        corresponding ``decide(want_plan=True)`` call — the dispatcher
+        selects between the two under ``lax.cond``.
+        """
+        q_s, q_mask = replay_snap(q, cached.q_idx, grid_slice,
+                                  self.snaps_operands)
+        k_s, k_mask = replay_snap(k, cached.k_idx, grid_slice,
+                                  self.snaps_operands)
+        if q_mask is not None and k_mask is not None:
+            sav = savings_lib.partial_score_savings(q_mask, k_mask)
+        elif cached.bias is not None:
+            # mask policies: skippable score fraction = masked density
+            sav = 1.0 - jnp.mean((cached.bias >= 0.0).astype(jnp.float32))
+        else:
+            sav = jnp.zeros(())
+        return ReuseDecision(
+            q=q_s, k=k_s, thetas=thetas,
+            active_axes=tuple(cfg.axes) if self.snaps_operands else (),
+            bias=cached.bias, q_mask=q_mask, k_mask=k_mask, savings=sav,
+            block_map=cached.block_map,
+            window=cfg.window if self.snaps_operands else 2,
+            q_src=cached.q_idx, k_src=cached.k_idx)
 
     # -- savings accounting ---------------------------------------------
 
@@ -239,37 +320,67 @@ def _keep_block_map(keep: jax.Array,
 
 
 def _snap_segment(seg, grid, thetas, cfg: RippleConfig, active_axes,
-                  use_fused: bool):
+                  use_fused: bool, want_src: bool = False):
     """Step ①-② on one contiguous grid segment: fused kernel when the
-    plan asks for it and the shape qualifies, host pipeline otherwise."""
-    if use_fused:
+    plan asks for it and the shape qualifies, host pipeline otherwise.
+    ``want_src`` forces the host pipeline (the fused kernel does not
+    expose snap sources) and additionally returns the source map —
+    bitwise-equal outputs either way (the fused-mask parity contract)."""
+    if use_fused and not want_src:
         from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
                                                   fused_reuse_eligible)
         if fused_reuse_eligible(grid, window=cfg.window,
                                 granularity=cfg.granularity,
                                 axes=active_axes):
-            return fused_compute_reuse(seg, grid, thetas, axes=active_axes,
+            s, m = fused_compute_reuse(seg, grid, thetas, axes=active_axes,
                                        granularity=cfg.granularity)
+            return s, m, None
     r = reuse_lib.compute_reuse(
         seg, grid, thetas, axes=active_axes, window=cfg.window,
-        granularity=cfg.granularity, channel_groups=cfg.channel_groups)
-    return r.snapped, r.mask
+        granularity=cfg.granularity, channel_groups=cfg.channel_groups,
+        want_src=want_src)
+    return r.snapped, r.mask, r.src_idx
 
 
 def snap_operand(x, do: bool, grid, thetas, cfg: RippleConfig, active_axes,
-                 grid_slice, use_fused: bool):
+                 grid_slice, use_fused: bool, want_src: bool = False):
     """Snap one operand (or pass it through with an all-False mask when
     ``do`` is off).  ``grid_slice`` restricts snapping to the grid
-    tokens of a mixed text+grid sequence."""
+    tokens of a mixed text+grid sequence.  Returns ``(snapped, mask,
+    src)`` where ``src`` is the segment-scoped snap-source map (None
+    unless ``want_src`` and ``do``)."""
     if not do:
-        return x, jnp.zeros(x.shape, jnp.bool_)
+        return x, jnp.zeros(x.shape, jnp.bool_), None
     if grid_slice is None:
-        return _snap_segment(x, grid, thetas, cfg, active_axes, use_fused)
+        return _snap_segment(x, grid, thetas, cfg, active_axes, use_fused,
+                             want_src)
     s, n = grid_slice
     seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
-    snapped_seg, mask_seg = _snap_segment(seg, grid, thetas, cfg,
-                                          active_axes, use_fused)
+    snapped_seg, mask_seg, src_seg = _snap_segment(
+        seg, grid, thetas, cfg, active_axes, use_fused, want_src)
     snapped = jax.lax.dynamic_update_slice_in_dim(x, snapped_seg, s, axis=-2)
+    mask = jnp.zeros(x.shape, jnp.bool_)
+    mask = jax.lax.dynamic_update_slice_in_dim(mask, mask_seg, s, axis=-2)
+    return snapped, mask, src_seg
+
+
+def replay_snap(x, src, grid_slice, snaps_operands: bool):
+    """Re-apply a cached snap-source map to a fresh operand: one
+    ``take_along_axis`` gather over the grid segment (DESIGN.md §13).
+    Returns ``(snapped, mask)``; with ``src is None`` the operand passes
+    through (all-False mask for snap policies, no mask otherwise, so the
+    pytree structure matches the corresponding decide branch)."""
+    if src is None:
+        return x, (jnp.zeros(x.shape, jnp.bool_) if snaps_operands else None)
+    if grid_slice is None:
+        snapped = jnp.take_along_axis(x, src, axis=-2)
+        mask = src != jnp.arange(x.shape[-2], dtype=src.dtype)[:, None]
+        return snapped, mask
+    s, n = grid_slice
+    seg = jax.lax.slice_in_dim(x, s, s + n, axis=-2)
+    snapped_seg = jnp.take_along_axis(seg, src, axis=-2)
+    snapped = jax.lax.dynamic_update_slice_in_dim(x, snapped_seg, s, axis=-2)
+    mask_seg = src != jnp.arange(n, dtype=src.dtype)[:, None]
     mask = jnp.zeros(x.shape, jnp.bool_)
     mask = jax.lax.dynamic_update_slice_in_dim(mask, mask_seg, s, axis=-2)
     return snapped, mask
@@ -286,6 +397,7 @@ class RipplePolicy(ReusePolicy):
     block mask on top, the TIMERIPPLE+SVG row of Tbl. 2)."""
 
     name = "ripple"
+    caches_decisions = True
 
     def will_emit_bias(self, cfg):
         return self.emits_bias or cfg.svg_mask
@@ -311,12 +423,14 @@ class RipplePolicy(ReusePolicy):
         return {"fixed_threshold": theta}
 
     def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
-               fused=False, block_shape=None):
+               fused=False, block_shape=None, want_plan=False):
         active_axes = tuple(cfg.axes)
-        q_s, q_mask = snap_operand(q, cfg.snap_q, grid, thetas, cfg,
-                                   active_axes, grid_slice, fused)
-        k_s, k_mask = snap_operand(k, cfg.snap_k, grid, thetas, cfg,
-                                   active_axes, grid_slice, fused)
+        q_s, q_mask, q_src = snap_operand(q, cfg.snap_q, grid, thetas, cfg,
+                                          active_axes, grid_slice, fused,
+                                          want_src=want_plan)
+        k_s, k_mask, k_src = snap_operand(k, cfg.snap_k, grid, thetas, cfg,
+                                          active_axes, grid_slice, fused,
+                                          want_src=want_plan)
         block_map = None
         if cfg.svg_mask:
             keep, bias = svg_logit_bias(q_s, k_s, grid, grid_slice, bias)
@@ -325,7 +439,8 @@ class RipplePolicy(ReusePolicy):
             q=q_s, k=k_s, thetas=thetas, active_axes=active_axes, bias=bias,
             q_mask=q_mask, k_mask=k_mask,
             savings=savings_lib.partial_score_savings(q_mask, k_mask),
-            block_map=block_map, window=cfg.window)
+            block_map=block_map, window=cfg.window,
+            q_src=q_src, k_src=k_src)
 
 
 class EqualMSEPolicy(RipplePolicy):
@@ -402,12 +517,16 @@ class SVGPolicy(ReusePolicy):
     emits_bias = True
     snaps_operands = False
     emits_block_map = True
+    caches_decisions = True
 
     def thetas_for(self, cfg, step, total_steps, thetas=None):
         return _zero_thetas()  # no Δ-thresholds; masks are classified
 
     def decide(self, q, k, *, grid, cfg, thetas, bias=None, grid_slice=None,
-               fused=False, block_shape=None):
+               fused=False, block_shape=None, want_plan=False):
+        # The whole decision is the (bias, block_map) pair, which the
+        # cache carries verbatim — a cache hit skips the online head
+        # classification entirely (no want_plan-specific work needed).
         keep, bias = svg_logit_bias(q, k, grid, grid_slice, bias)
         return ReuseDecision(
             q=q, k=k, thetas=thetas, active_axes=(), bias=bias,

@@ -38,11 +38,17 @@ class ReuseResult:
     snapped:  x with reusable entries overwritten by their representative.
     mask:     bool, same shape as x; True where the value was snapped.
     axis_masks: per-axis bool masks (before priority resolution).
+    src_idx:  only with ``want_src=True``: int32, same shape as x, the
+              token index each entry's value was copied from (its own
+              index where nothing snapped).  Re-applying the decision to
+              fresh operands is then one ``take_along_axis`` gather —
+              the cacheable half of the decision (DESIGN.md §13).
     """
 
     snapped: jax.Array
     mask: jax.Array
     axis_masks: Dict[str, jax.Array]
+    src_idx: Optional[jax.Array] = None
 
 
 def window_delta(x: jax.Array, dim: int, window: int) -> Tuple[jax.Array, jax.Array]:
@@ -153,6 +159,23 @@ def axis_reuse_mask(
     return mask, rep_full
 
 
+def axis_source_tokens(grid: Tuple[int, int, int], axis: str,
+                       window: int) -> jax.Array:
+    """(N,) int32 map: each token's window-representative token index
+    along ``axis`` (identity on the remainder tail that never snaps).
+    Token order is the module's row-major (t, y, x) convention."""
+    T, H, W = grid
+    t, y, x = jnp.meshgrid(jnp.arange(T), jnp.arange(H), jnp.arange(W),
+                           indexing="ij")
+    coords = {"t": t, "y": y, "x": x}
+    length = {"t": T, "y": H, "x": W}[axis]
+    n = (length // window) * window
+    c = coords[axis]
+    coords[axis] = jnp.where(c < n, (c // window) * window, c)
+    flat = (coords["t"] * H + coords["y"]) * W + coords["x"]
+    return flat.reshape(-1).astype(jnp.int32)
+
+
 def compute_reuse(
     x: jax.Array,
     grid: Tuple[int, int, int],
@@ -162,6 +185,7 @@ def compute_reuse(
     granularity: str = "channel",
     channel_groups: Sequence[float] = (0.125, 0.4375, 0.4375),
     protect_axis: Optional[str] = None,
+    want_src: bool = False,
 ) -> ReuseResult:
     """Full TimeRipple reuse for one operand (Q or K).
 
@@ -178,6 +202,12 @@ def compute_reuse(
     t-pairs breaks, and the structured kernel loses its block skips —
     protecting the representatives costs only the cross-axis reuse of
     half the tokens but preserves the full pair-collapse structure.
+
+    ``want_src`` additionally materializes ``ReuseResult.src_idx``, the
+    per-entry snap-source token map the decision cache replays with a
+    single gather (DESIGN.md §13).  ``take_along_axis(x, src_idx, -2)``
+    is bitwise-identical to ``snapped``: both copy the representative's
+    float entries verbatim.
     """
     T, H, W = grid
     *lead, N, d = x.shape
@@ -198,6 +228,11 @@ def compute_reuse(
     snapped = x_grid
     claimed = jnp.zeros(x_grid.shape, dtype=jnp.bool_)
     axis_masks: Dict[str, jax.Array] = {}
+    src = None
+    if want_src:
+        src = jnp.broadcast_to(
+            jnp.arange(N, dtype=jnp.int32).reshape(
+                (1,) * len(lead) + (N, 1)), (*lead, N, d))
     for axis in axes:
         mask, rep = axis_reuse_mask(
             x_grid, axis, thetas[axis], window, granularity, channel_groups
@@ -207,12 +242,17 @@ def compute_reuse(
         axis_masks[axis] = mask
         take = jnp.logical_and(mask, ~claimed)  # first-wins priority
         snapped = jnp.where(take, rep, snapped)
+        if want_src:
+            ax_src = axis_source_tokens(grid, axis, window)
+            src = jnp.where(take.reshape(*lead, N, d),
+                            ax_src[:, None], src)
         claimed = jnp.logical_or(claimed, mask)
 
     return ReuseResult(
         snapped=snapped.reshape(*lead, N, d),
         mask=claimed.reshape(*lead, N, d),
         axis_masks={a: m.reshape(*lead, N, d) for a, m in axis_masks.items()},
+        src_idx=src,
     )
 
 

@@ -68,16 +68,22 @@ def ripple_attention(
     .. deprecated:: use :func:`repro.core.dispatch.attention_dispatch`.
     """
     global _deprecation_warned
-    if not _deprecation_warned:
-        _deprecation_warned = True
-        warnings.warn(
-            "repro.core.ripple_attention.ripple_attention is deprecated; "
-            "call repro.core.dispatch.attention_dispatch instead",
-            DeprecationWarning, stacklevel=2)
     if backend == "jnp":
         resolved = "collapse" if cfg.execution == "collapse" else "reference"
     else:
         resolved = backend
+    if not _deprecation_warned:
+        _deprecation_warned = True
+        warnings.warn(
+            "repro.core.ripple_attention.ripple_attention is deprecated "
+            "and no longer imported anywhere in-repo; replace this call "
+            "with repro.core.dispatch.attention_dispatch(q, k, v, "
+            "grid=grid, cfg=cfg, step=step, total_steps=total_steps, "
+            "thetas=thetas, bias=bias, grid_slice=grid_slice, "
+            f"backend={resolved!r}, with_stats=with_stats) — for your "
+            f"arguments backend={resolved!r} reproduces the old "
+            f"backend={backend!r} behaviour exactly",
+            DeprecationWarning, stacklevel=2)
     return attention_dispatch(
         q, k, v, grid=grid, cfg=cfg, step=step, total_steps=total_steps,
         thetas=thetas, bias=bias, grid_slice=grid_slice, backend=resolved,

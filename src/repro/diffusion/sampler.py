@@ -5,6 +5,14 @@ model function receives (x_t, t_cont, step, total_steps).
 
 ``denoise_fn(x, t, step) -> eps/velocity`` closes over params, text
 conditioning and the RippleConfig; samplers stay model-agnostic.
+
+Cross-step decision cache (DESIGN.md §13): pass ``decision_state`` (the
+model's per-layer stacked CachedDecision, e.g. from
+``launch.workloads.vdit_decision_state``) and the contract becomes
+``denoise_fn(x, t, step, state) -> (eps/velocity, state)`` — the state
+rides the denoising scan's carry, so the reuse decision is recomputed
+only on the ``reuse_every`` cadence (or drift), and the sampler returns
+``(x, final_state)`` so callers can report cache hit rates.
 """
 
 from __future__ import annotations
@@ -25,8 +33,13 @@ def ddim_sample(
     *,
     eta: float = 0.0,
     rng: Optional[jax.Array] = None,
-) -> jax.Array:
-    """DDIM sampler. denoise_fn(x, t_int (B,), step_idx) -> eps."""
+    decision_state=None,
+):
+    """DDIM sampler. denoise_fn(x, t_int (B,), step_idx) -> eps.
+
+    With ``decision_state`` the model's decision cache rides the scan
+    carry (``denoise_fn(x, t, step, state) -> (eps, state)``) and the
+    sampler returns ``(x, final_state)``."""
     T = schedule.num_train_steps
     ts = jnp.linspace(T - 1, 0, num_steps).astype(jnp.int32)
     alpha_bars = schedule.alpha_bars()
@@ -34,13 +47,16 @@ def ddim_sample(
     bshape = (-1,) + (1,) * (x_T.ndim - 1)
 
     def body(carry, si):
-        x, rng = carry
+        x, rng, dstate = carry
         t = ts[si]
         t_prev = jnp.where(si + 1 < num_steps, ts[jnp.minimum(si + 1,
                                                               num_steps - 1)], -1)
         ab_t = alpha_bars[t]
         ab_prev = jnp.where(t_prev >= 0, alpha_bars[jnp.maximum(t_prev, 0)], 1.0)
-        eps = denoise_fn(x, jnp.full((B,), t), si)
+        if dstate is None:
+            eps = denoise_fn(x, jnp.full((B,), t), si)
+        else:
+            eps, dstate = denoise_fn(x, jnp.full((B,), t), si, dstate)
         x0 = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
         sigma = eta * jnp.sqrt((1 - ab_prev) / (1 - ab_t)) * \
             jnp.sqrt(1 - ab_t / ab_prev)
@@ -51,11 +67,14 @@ def ddim_sample(
         else:
             noise = jnp.zeros_like(x)
         x = jnp.sqrt(ab_prev) * x0 + dir_xt + sigma * noise
-        return (x, rng), None
+        return (x, rng, dstate), None
 
-    (x, _), _ = jax.lax.scan(body, (x_T, rng if rng is not None
-                                    else jax.random.PRNGKey(0)),
-                             jnp.arange(num_steps))
+    (x, _, dstate), _ = jax.lax.scan(
+        body, (x_T, rng if rng is not None else jax.random.PRNGKey(0),
+               decision_state),
+        jnp.arange(num_steps))
+    if decision_state is not None:
+        return x, dstate
     return x
 
 
@@ -65,18 +84,30 @@ def euler_flow_sample(
     num_steps: int,
     *,
     schedule: Optional[RectifiedFlowSchedule] = None,
-) -> jax.Array:
+    decision_state=None,
+):
     """Euler ODE integration of rectified flow from t=1 (noise) to t=0.
-    denoise_fn(x, t_cont (B,), step_idx) -> velocity (noise - x0)."""
+    denoise_fn(x, t_cont (B,), step_idx) -> velocity (noise - x0).
+
+    With ``decision_state`` the model's decision cache rides the scan
+    carry (``denoise_fn(x, t, step, state) -> (v, state)``) and the
+    sampler returns ``(x, final_state)``."""
     B = x_T.shape[0]
     ts = jnp.linspace(1.0, 0.0, num_steps + 1)
 
-    def body(x, si):
+    def body(carry, si):
+        x, dstate = carry
         t, t_next = ts[si], ts[si + 1]
-        v = denoise_fn(x, jnp.full((B,), t), si)
-        return x + (t_next - t) * v, None
+        if dstate is None:
+            v = denoise_fn(x, jnp.full((B,), t), si)
+        else:
+            v, dstate = denoise_fn(x, jnp.full((B,), t), si, dstate)
+        return (x + (t_next - t) * v, dstate), None
 
-    x, _ = jax.lax.scan(body, x_T, jnp.arange(num_steps))
+    (x, dstate), _ = jax.lax.scan(body, (x_T, decision_state),
+                                  jnp.arange(num_steps))
+    if decision_state is not None:
+        return x, dstate
     return x
 
 

@@ -29,7 +29,8 @@ from repro.diffusion.schedule import DDPMSchedule
 from repro.launch.mesh import parse_mesh_spec
 from repro.launch.workloads import (_denoise_call, attention_plan,
                                     latent_shape_for, mixed_gen_shapes,
-                                    mixed_request_stream, model_fns)
+                                    mixed_request_stream, model_fns,
+                                    vdit_decision_state)
 from repro.distributed.sharding import NULL_CTX
 from repro.models.params import init_params
 from repro.serving.engine import DiffusionEngine
@@ -38,21 +39,38 @@ from repro.utils.logging import get_logger
 log = get_logger("launch.serve")
 
 
-def build_sampler(arch, shape, params, *, use_ripple=True, policy=None):
-    """Returns sample_fn(noise, txt, rngs) -> latents and the latent
-    shape.  ``rngs`` is the engine's (B, 2) per-request key batch: the
-    initial noise is built outside from the same keys, and conditioning
+def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
+                  reuse_every=None):
+    """Returns sample_fn(noise, txt, rngs) -> latents (or ``(latents,
+    aux)`` with decision-cache telemetry) and the latent shape.
+    ``rngs`` is the engine's (B, 2) per-request key batch: the initial
+    noise is built outside from the same keys, and conditioning
     randomness (DiT labels) is drawn per request via vmap — no request
     in a batch ever shares sampler randomness.  ``policy`` overrides the
-    arch config's reuse policy for this sampler (DESIGN.md §11)."""
+    arch config's reuse policy for this sampler (DESIGN.md §11);
+    ``reuse_every`` its decision-cache cadence (DESIGN.md §13) — with a
+    cadence > 1 (or the drift guard on) on a cache-capable vdit config,
+    the per-layer decision state is threaded through the sampler's scan
+    and the reuse decision is only recomputed on refresh steps."""
     if policy:
         arch = dataclasses.replace(
             arch, ripple=dataclasses.replace(arch.ripple, policy=policy))
+    if reuse_every is not None:
+        arch = dataclasses.replace(
+            arch, ripple=dataclasses.replace(arch.ripple,
+                                             reuse_every=int(reuse_every)))
     m = arch.model
     fam = arch.family
     steps = shape.steps or 50
     lat_shape = latent_shape_for(arch, shape)
     ddpm = DDPMSchedule()
+    from repro.core import decision_cache
+
+    rip = arch.ripple
+    thread_cache = (
+        use_ripple and fam == "vdit"
+        and (rip.reuse_every > 1 or rip.drift_tol > 0)
+        and decision_cache.supports_cache(rip))
 
     def make_cond(txt, rngs):
         if fam == "dit":
@@ -69,6 +87,20 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None):
     def sample_fn(noise, txt, rngs):
         cond = make_cond(txt, rngs)
 
+        if thread_cache:
+            def denoise(x, t, step, dstate):
+                out, dstate = _denoise_call(
+                    arch, params, x, t, cond, step, steps, NULL_CTX,
+                    use_ripple=use_ripple, dstate=dstate)
+                return out.astype(x.dtype), dstate
+
+            dstate = vdit_decision_state(arch, shape.img_res,
+                                         noise.shape[0])
+            lat, final = ddim_sample(denoise, noise, ddpm, steps,
+                                     decision_state=dstate)
+            return lat, {"cache_hits": final.hits.sum(),
+                         "cache_refreshes": final.refreshes.sum()}
+
         def denoise(x, t, step):
             return _denoise_call(
                 arch, params, x, t, cond, step, steps, NULL_CTX,
@@ -84,17 +116,19 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None):
 def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
                          mesh=None):
     """(engine sampler_factory, plan_fn) over a set of generate cells,
-    keyed by the engine's (latent_shape, steps, policy) bucket identity.
-    The engine hands both callables the bucket's reuse-policy name
-    (None = the arch config's ``ripple.policy``)."""
+    keyed by the engine's (latent_shape, steps, policy, reuse_every)
+    bucket identity.  The engine hands both callables the bucket's
+    reuse-policy name (None = the arch config's ``ripple.policy``) and
+    the factory additionally its decision-cache cadence (None = the
+    config's ``ripple.reuse_every``)."""
     by_bucket = {}
     for sp in shapes:
         by_bucket[(tuple(latent_shape_for(arch, sp)), sp.steps)] = sp
 
-    def factory(latent_shape, steps, policy=None):
+    def factory(latent_shape, steps, policy=None, reuse_every=None):
         sp = by_bucket[(tuple(latent_shape), steps)]
         fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple,
-                              policy=policy)
+                              policy=policy, reuse_every=reuse_every)
         return fn
 
     def plan_fn(latent_shape, steps, policy=None):
@@ -127,6 +161,18 @@ def main(argv=None):
     ap.add_argument("--policy-module", default=None, metavar="MODULE",
                     help="import this python module before serving so it "
                          "can register_policy() an out-of-tree strategy")
+    ap.add_argument("--reuse-every", type=int, default=None, metavar="R",
+                    help="decision-cache cadence (DESIGN.md §13): "
+                         "recompute the reuse decision every R denoising "
+                         "steps and re-apply it in between; part of the "
+                         "engine bucket key.  Default: the arch config's "
+                         "ripple.reuse_every (1 = per-step decisions)")
+    ap.add_argument("--drift-tol", type=float, default=None, metavar="TOL",
+                    help="decision-cache drift guard: force an early "
+                         "refresh when the sampled-channel Δ statistic "
+                         "moves more than TOL (relative) from the cached "
+                         "decision's reference.  0 disables (default: "
+                         "the arch config's ripple.drift_tol)")
     ap.add_argument("--attn-backend", default=None,
                     choices=("auto", "dense", "reference", "collapse",
                              "pallas", "sparse"),
@@ -154,6 +200,10 @@ def main(argv=None):
         arch = dataclasses.replace(
             arch, ripple=dataclasses.replace(arch.ripple,
                                              backend=args.attn_backend))
+    if args.drift_tol is not None:
+        arch = dataclasses.replace(
+            arch, ripple=dataclasses.replace(arch.ripple,
+                                             drift_tol=args.drift_tol))
 
     if args.shape is not None:
         shapes = (arch.shape(args.shape),)
@@ -171,10 +221,12 @@ def main(argv=None):
                              max_batch=args.max_batch,
                              max_compiled=args.max_compiled,
                              plan_fn=plan_fn,
-                             default_policy=args.policy)
+                             default_policy=args.policy,
+                             default_reuse_every=args.reuse_every)
     engine.start()
     traffic = mixed_request_stream(arch, shapes, args.requests,
-                                   seed=args.seed, policy=args.policy)
+                                   seed=args.seed, policy=args.policy,
+                                   reuse_every=args.reuse_every)
     t0 = time.time()
     for _, req in traffic:
         engine.submit(req)

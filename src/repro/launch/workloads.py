@@ -283,12 +283,18 @@ def _diffusion_batch_specs(arch: ArchConfig, shape: ShapeSpec, mesh,
 
 
 def _denoise_call(arch: ArchConfig, params, x, t, cond, step, total, ctx,
-                  use_ripple: bool):
+                  use_ripple: bool, dstate=None):
+    """One denoiser forward.  ``dstate`` threads the per-layer decision
+    cache (DESIGN.md §13) — vdit only; the call then returns
+    ``(out, new_dstate)``."""
     fam = arch.family
     m = arch.model
     rip = arch.ripple if use_ripple else dataclasses.replace(
         arch.ripple, enabled=False)
     kw = dict(ripple=rip, step=step, total_steps=total, ctx=ctx)
+    if dstate is not None and fam != "vdit":
+        raise ValueError(f"decision-cache state is only threaded through "
+                         f"the vdit family, not {fam!r}")
     if fam == "dit":
         out = dit_lib.dit_apply(params, x, t, cond["labels"], m, **kw)
         return out[..., : m.in_channels]  # drop sigma for the ODE path
@@ -298,7 +304,8 @@ def _denoise_call(arch: ArchConfig, params, x, t, cond, step, total, ctx,
     if fam == "unet":
         return unet_lib.unet_apply(params, x, t, cond["ctx"], m, **kw)
     if fam == "vdit":
-        return vdit_lib.vdit_apply(params, x, t, cond["txt"], m, **kw)
+        return vdit_lib.vdit_apply(params, x, t, cond["txt"], m,
+                                   decision_state=dstate, **kw)
     raise ValueError(fam)
 
 
@@ -445,6 +452,33 @@ def attention_plan(arch: ArchConfig, shape: ShapeSpec,
                                        mesh=mesh, policy=policy)
 
 
+def vdit_decision_state(arch: ArchConfig, img_res: int, batch: int,
+                        policy: Optional[str] = None,
+                        compute_dtype=jnp.bfloat16):
+    """Per-layer decision-cache state for one vdit sampler invocation
+    (DESIGN.md §13): an all-zeros stacked CachedDecision matching the
+    model's per-layer self-attention operands at this resolution and
+    batch.  Safe to call inside the jitted sampler (the zeros become
+    constants); step 0 always refreshes, so the zeros are never applied.
+    Returns None when the config can't cache (inactive ripple, or a
+    policy without the capability) — callers fall back to the plain
+    per-step path."""
+    from repro.core import decision_cache
+
+    pol = policy or arch.ripple.policy
+    if not decision_cache.supports_cache(arch.ripple, pol):
+        return None
+    m = arch.model
+    g = m.grid(img_res=img_res)
+    n_img = g[0] * g[1] * g[2]
+    hd = m.d_model // m.num_heads
+    q_shape = (batch, m.num_heads, m.txt_tokens + n_img, hd)
+    return decision_cache.initial_state(
+        q_shape, grid=g, cfg=dataclasses.replace(arch.ripple, policy=pol),
+        grid_slice=(m.txt_tokens, n_img), num_layers=m.num_layers,
+        dtype=compute_dtype)
+
+
 # --- serving traffic helpers ----------------------------------------------------
 
 
@@ -497,11 +531,13 @@ def mixed_gen_shapes(arch: ArchConfig, *, smoke: bool = False,
 
 
 def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
-                         seed: int = 0, policy: Optional[str] = None):
+                         seed: int = 0, policy: Optional[str] = None,
+                         reuse_every: Optional[int] = None):
     """Round-robin (ShapeSpec, GenRequest) traffic over ``shapes`` with
     deterministic per-request text embeddings and seeds.  ``policy``
-    stamps every request with that reuse-policy name (its own engine
-    bucket dimension)."""
+    stamps every request with that reuse-policy name, ``reuse_every``
+    with that decision-cache cadence (each its own engine bucket
+    dimension)."""
     from repro.serving.engine import GenRequest
 
     m = arch.model
@@ -514,7 +550,8 @@ def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
             (txt_tokens, txt_dim)).astype(np.float32)
         out.append((sp, GenRequest(
             request_id=i, txt=txt, steps=sp.steps, seed=seed + i,
-            latent_shape=latent_shape_for(arch, sp), policy=policy)))
+            latent_shape=latent_shape_for(arch, sp), policy=policy,
+            reuse_every=reuse_every)))
     return out
 
 

@@ -213,6 +213,8 @@ def mha_attention(
     grid_slice: Optional[Tuple[int, int]] = None,
     encoder_out: Optional[jax.Array] = None,
     backend: Optional[str] = None,
+    cached_decision=None,
+    return_decision: bool = False,
     ctx: ShardCtx = NULL_CTX,
 ):
     """Bidirectional MHA through the dispatch layer. x: (B, N, d).
@@ -222,7 +224,13 @@ def mha_attention(
     forced onto its dense backend).  ``backend`` overrides
     ``ripple.backend`` for this call.  ``rope_cos/sin`` are precomputed
     factorized 3-D RoPE tables (``common.rope_3d_angles``); None means
-    no RoPE (e.g. DiT's absolute sin-cos embeddings)."""
+    no RoPE (e.g. DiT's absolute sin-cos embeddings).
+
+    ``cached_decision`` / ``return_decision`` thread the cross-step
+    decision cache (DESIGN.md §13) through to ``attention_dispatch``;
+    when either is set the layer returns ``(out, CachedDecision)`` so
+    the model can carry per-layer decision state across denoising
+    steps.  Self-attention only (cross-attention has no grid)."""
     from repro.models.common import apply_rope_precomputed
 
     dt = x.dtype
@@ -249,10 +257,26 @@ def mha_attention(
     # Cross-attention has no grid to snap: force the dense backend so
     # the dispatcher bypasses the reuse pipeline entirely.
     eff_backend = "dense" if encoder_out is not None else backend
-    out = attention_dispatch(
-        q, k, v, grid=grid, cfg=ripple, step=step,
-        total_steps=total_steps, grid_slice=grid_slice, backend=eff_backend)
+    want_cache = cached_decision is not None or return_decision
+    if want_cache and encoder_out is not None:
+        raise ValueError("decision caching applies to grid self-attention "
+                         "only, not cross-attention")
+    new_cache = None
+    if want_cache:
+        out, new_cache = attention_dispatch(
+            q, k, v, grid=grid, cfg=ripple, step=step,
+            total_steps=total_steps, grid_slice=grid_slice,
+            backend=eff_backend, cached_decision=cached_decision,
+            return_decision=True)
+    else:
+        out = attention_dispatch(
+            q, k, v, grid=grid, cfg=ripple, step=step,
+            total_steps=total_steps, grid_slice=grid_slice,
+            backend=eff_backend)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, N, n_heads * head_dim)
     out = jnp.einsum("bnh,hd->bnd", out, params["wo"].astype(dt))
-    return ctx.c(out, ("batch", "seq", "embed"))
+    out = ctx.c(out, ("batch", "seq", "embed"))
+    if want_cache:
+        return out, new_cache
+    return out

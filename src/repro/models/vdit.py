@@ -89,7 +89,16 @@ def vdit_apply(
     ctx: ShardCtx = NULL_CTX,
     compute_dtype=jnp.bfloat16,
     remat: bool = False,
+    decision_state=None,
 ) -> jax.Array:
+    """Apply the vDiT.  ``decision_state`` (optional) is the per-layer
+    cross-step decision-cache state (DESIGN.md §13): a stacked
+    :class:`~repro.core.decision_cache.CachedDecision` whose leading dim
+    is ``num_layers`` (``launch.workloads.vdit_decision_state`` builds
+    it).  Each layer's slice rides the scan-over-layers as a per-layer
+    input and the updated slices are restacked, so the sampler can carry
+    the whole thing through its denoising scan; the function then
+    returns ``(out, new_decision_state)``."""
     dt = compute_dtype
     B, T, H, W, C = latents.shape
     tg, hg, wg = T // cfg.t_patch, H // cfg.patch, W // cfg.patch
@@ -122,7 +131,7 @@ def vdit_apply(
     rope_cos = jnp.concatenate([cos_t, cos_g], axis=0)
     rope_sin = jnp.concatenate([sin_t, sin_g], axis=0)
 
-    def body(x, bp):
+    def block(x, bp, dcache):
         ada = linear(bp["ada"], c)
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
         h_ = layernorm({}, x) * (1 + sc1[:, None]) + sh1[:, None]
@@ -130,17 +139,32 @@ def vdit_apply(
             bp["attn"], h_, n_heads=cfg.num_heads, head_dim=hd, grid=grid,
             ripple=ripple, step=step, total_steps=total_steps,
             rope_cos=rope_cos, rope_sin=rope_sin,
-            grid_slice=(L_txt, n_img), ctx=ctx)
+            grid_slice=(L_txt, n_img), cached_decision=dcache,
+            return_decision=dcache is not None, ctx=ctx)
+        if dcache is not None:
+            attn, dcache = attn
         x = x + g1[:, None] * attn
         h_ = layernorm({}, x) * (1 + sc2[:, None]) + sh2[:, None]
         x = x + g2[:, None] * mlp(bp["mlp"], h_)
-        return ctx.c(x, ("batch", "seq", "embed")), None
+        return ctx.c(x, ("batch", "seq", "embed")), dcache
+
+    if decision_state is None:
+        def body(x, bp):
+            return block(x, bp, None)
+        xs = params["blocks"]
+    else:
+        def body(x, layer_in):
+            return block(x, layer_in[0], layer_in[1])
+        xs = (params["blocks"], decision_state)
 
     if remat:
         body = jax.checkpoint(body)
-    x, _ = scan_layers(body, x, params["blocks"])
+    x, new_state = scan_layers(body, x, xs)
 
     sh, sc = jnp.split(linear(params["final_ada"], c), 2, axis=-1)
     x = layernorm({}, x[:, L_txt:]) * (1 + sc[:, None]) + sh[:, None]
     x = linear(params["final"], x)
-    return unpatchify_3d(x, cfg.t_patch, cfg.patch, tg, hg, wg, C)
+    out = unpatchify_3d(x, cfg.t_patch, cfg.patch, tg, hg, wg, C)
+    if decision_state is not None:
+        return out, new_state
+    return out

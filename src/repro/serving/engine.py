@@ -38,28 +38,40 @@ from repro.utils.logging import get_logger
 
 log = get_logger("serve")
 
-# (latent_shape, steps, policy); legacy single-sampler engines use
-# steps=-1 so requests with differing ``steps`` still share the one
-# compiled entry; policy is the reuse-policy name (None = the engine /
-# sampler default), so requests under different sparsity strategies
-# never share a compiled sampler.
-BucketKey = Tuple[Tuple[int, ...], int, Optional[str]]
+# (latent_shape, steps, policy, reuse_every); legacy single-sampler
+# engines use steps=-1 so requests with differing ``steps`` still share
+# the one compiled entry; policy is the reuse-policy name (None = the
+# engine / sampler default), so requests under different sparsity
+# strategies never share a compiled sampler; reuse_every is the
+# decision-cache cadence (DESIGN.md §13; None = the sampler default) —
+# it is baked into the compiled sampler's refresh cond, so mixed-cadence
+# traffic must never share one compiled entry either.
+BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int]]
 
 
-def _takes_policy(fn: Optional[Callable]) -> bool:
-    """Does ``fn`` accept a third positional (policy) argument?  Legacy
-    two-argument factories / plan_fns keep working unchanged."""
+def _positional_arity(fn: Optional[Callable]) -> int:
+    """How many positional arguments ``fn`` accepts.  Legacy
+    two-argument factories / plan_fns keep working unchanged;
+    policy-aware ones take a third, cadence-aware ones a fourth.  A
+    ``*args`` factory counts as 3 — exactly what such factories have
+    received since the policy seam landed — so pre-cadence var-positional
+    factories keep unpacking (shape, steps, policy); declare a fourth
+    named parameter to opt into the cadence."""
     if fn is None:
-        return False
+        return 0
     try:
         params = list(inspect.signature(fn).parameters.values())
     except (TypeError, ValueError):
-        return False
+        return 2
     if any(p.kind == p.VAR_POSITIONAL for p in params):
-        return True
-    positional = [p for p in params
-                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
-    return len(positional) >= 3
+        return 3
+    return len([p for p in params
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)])
+
+
+def _takes_policy(fn: Optional[Callable]) -> bool:
+    """Does ``fn`` accept a third positional (policy) argument?"""
+    return _positional_arity(fn) >= 3
 
 
 @dataclasses.dataclass
@@ -74,6 +86,10 @@ class GenRequest:
     # Reuse-policy name for this request (core.policy registry); None ->
     # the engine's default policy.  Part of the bucket identity.
     policy: Optional[str] = None
+    # Decision-cache cadence for this request (RippleConfig.reuse_every,
+    # DESIGN.md §13); None -> the engine default.  Part of the bucket
+    # identity — the cadence is compiled into the sampler's refresh cond.
+    reuse_every: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -88,15 +104,18 @@ class GenResult:
 class DiffusionEngine:
     """Continuous-batching engine over bucketed samplers.
 
-    ``sampler_factory(latent_shape, steps[, policy]) -> sample_fn``
-    builds (and jits) the sampler for one bucket; ``sample_fn(latents0,
-    txt, rngs)`` takes a ``(B, 2)`` uint32 batch of per-request PRNG
-    keys.  Factories (and ``plan_fn``) that accept a third argument
-    receive the bucket's reuse-policy name (``GenRequest.policy`` /
-    ``default_policy``); two-argument factories keep working.  The
-    legacy single-sampler form ``DiffusionEngine(sample_fn,
-    latent_shape)`` is still accepted: every request then lands in one
-    default bucket.
+    ``sampler_factory(latent_shape, steps[, policy[, reuse_every]]) ->
+    sample_fn`` builds (and jits) the sampler for one bucket;
+    ``sample_fn(latents0, txt, rngs)`` takes a ``(B, 2)`` uint32 batch
+    of per-request PRNG keys and returns latents or ``(latents, aux)``
+    with decision-cache telemetry.  Factories (and ``plan_fn``) that
+    accept a third positional argument receive the bucket's reuse-policy
+    name (``GenRequest.policy`` / ``default_policy``); a fourth receives
+    the decision-cache cadence (``GenRequest.reuse_every`` /
+    ``default_reuse_every``, DESIGN.md §13).  Two-argument factories
+    keep working.  The legacy single-sampler form
+    ``DiffusionEngine(sample_fn, latent_shape)`` is still accepted:
+    every request then lands in one default bucket.
     """
 
     def __init__(self, sample_fn: Optional[Callable] = None,
@@ -106,20 +125,28 @@ class DiffusionEngine:
                  max_compiled: int = 8, starve_after_s: float = 2.0,
                  attn_plan: Optional[Any] = None,
                  plan_fn: Optional[Callable] = None,
-                 default_policy: Optional[str] = None):
+                 default_policy: Optional[str] = None,
+                 default_reuse_every: Optional[int] = None):
         if sampler_factory is None:
             if sample_fn is None:
                 raise ValueError("need sample_fn or sampler_factory")
             sampler_factory = lambda shape, steps: sample_fn  # noqa: E731
         self._factory = sampler_factory
-        self._factory_takes_policy = _takes_policy(sampler_factory)
+        self._factory_arity = _positional_arity(sampler_factory)
+        self._factory_takes_policy = self._factory_arity >= 3
+        self._factory_takes_reuse = self._factory_arity >= 4
         self._plan_fn_takes_policy = _takes_policy(plan_fn)
         self._legacy = sample_fn is not None
         if default_policy is not None and not self._factory_takes_policy:
             raise ValueError(
                 "default_policy is set but the sampler factory does not "
                 "take a policy argument — it could not honour it")
+        if default_reuse_every is not None and not self._factory_takes_reuse:
+            raise ValueError(
+                "default_reuse_every is set but the sampler factory does "
+                "not take a reuse_every argument — it could not honour it")
         self.default_policy = default_policy
+        self.default_reuse_every = default_reuse_every
         self.latent_shape = latent_shape
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -172,6 +199,11 @@ class DiffusionEngine:
                 f"request {req.request_id} sets policy={req.policy!r} but "
                 "this engine's sampler factory does not take a policy "
                 "argument")
+        if req.reuse_every is not None and not self._factory_takes_reuse:
+            raise ValueError(
+                f"request {req.request_id} sets "
+                f"reuse_every={req.reuse_every!r} but this engine's "
+                "sampler factory does not take a reuse_every argument")
         key = self._bucket_key(req)
         with self._lock:
             if self._stop:
@@ -205,7 +237,9 @@ class DiffusionEngine:
                              "(set GenRequest.latent_shape or the engine "
                              "default)")
         return (shape, -1 if self._legacy else req.steps,
-                req.policy or self.default_policy)
+                req.policy or self.default_policy,
+                req.reuse_every if req.reuse_every is not None
+                else self.default_reuse_every)
 
     def _next_bucket(self) -> Optional[BucketKey]:
         """Hottest (deepest) bucket first — unless some bucket's head
@@ -250,10 +284,9 @@ class DiffusionEngine:
         survives eviction."""
         fn = self._compiled.get(key)
         if fn is None:
-            shape, steps, pol = key
-            fn = (self._factory(shape, steps, pol)
-                  if self._factory_takes_policy
-                  else self._factory(shape, steps))
+            shape, steps, pol, reuse = key
+            args = (shape, steps, pol, reuse)[:min(self._factory_arity, 4)]
+            fn = self._factory(*args)
             self._compiled[key] = fn
             if self.plan_fn is not None:
                 try:
@@ -283,6 +316,18 @@ class DiffusionEngine:
             # The full (B, 2) key batch goes to the sampler — every
             # request keeps its own randomness inside one batch.
             lat = fn(noise, txt, rngs)
+            # Cache-aware samplers return (latents, aux) with decision-
+            # cache telemetry (DESIGN.md §13) — log the hit rate so the
+            # amortization is observable in serving, not just benches.
+            if isinstance(lat, (tuple, list)) and len(lat) == 2:
+                lat, aux = lat
+                hits = int(jax.device_get(aux.get("cache_hits", 0)))
+                refr = int(jax.device_get(aux.get("cache_refreshes", 0)))
+                if hits + refr:
+                    log.info(
+                        "bucket %s decision cache: %d hits / %d refreshes "
+                        "(hit rate %.2f)", key, hits, refr,
+                        hits / max(hits + refr, 1))
             lat = np.asarray(jax.device_get(lat))
             err = None
         except Exception as e:  # noqa: BLE001 — fail the batch, not the engine

@@ -1,0 +1,379 @@
+"""Cross-step decision-cache tests (DESIGN.md §13).
+
+The contract under test:
+
+  * ``reuse_every=1`` is bitwise-identical to the per-step path — the
+    cache only wraps the decision in a refresh cond, it never changes
+    the math (single-device here; the 8-device subprocess check at the
+    bottom guarantees the sharded variant on every run of the suite);
+  * ``reuse_every>1`` with *unchanged* operands and a step-invariant
+    schedule equals the ``reuse_every=1`` trajectory bitwise — re-
+    applying a cached plan to the same operands reproduces the fresh
+    decision exactly;
+  * a drift past ``drift_tol`` forces an early refresh, and the final
+    denoising step always refreshes (the schedule's dense-last-step
+    contract);
+  * the state is scan-carriable (samplers) and threads end-to-end
+    through vdit's scan-over-layers.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import RippleConfig
+from repro.core import decision_cache as dc
+from repro.core import dispatch
+from repro.core.dispatch import attention_dispatch
+from repro.core.policy import ReusePolicy
+
+GRID = (4, 4, 6)
+N = GRID[0] * GRID[1] * GRID[2]
+D = 16
+
+CFG = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                   i_min=2, i_max=6)
+# Step-invariant schedule for the R>1 == R=1 bitwise comparisons: a
+# fixed θ inside an all-active range makes decide() independent of the
+# step, so the only difference between cadences is *which branch* of
+# the refresh cond produced the operands.
+CFG_CONST = dataclasses.replace(CFG, fixed_threshold=0.35, i_min=0,
+                                i_max=1, theta_min=0.35, theta_max=0.35)
+
+
+def _qkv(seed=0, shape=(2, 3, N, D)):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, shape) for k in ks)
+
+
+def _scan(q, k, v, cfg, policy=None, steps=8, total_steps=None):
+    """Denoising-shaped scan carrying the cache; returns (outs, final)."""
+    total = total_steps if total_steps is not None else steps + 2
+
+    def body(carry, si):
+        out, carry = attention_dispatch(
+            q, k, v, grid=GRID, cfg=cfg, step=si, total_steps=total,
+            cached_decision=carry, policy=policy)
+        return carry, out
+
+    init = dc.initial_state(q.shape, grid=GRID, cfg=cfg, policy=policy)
+    final, outs = jax.lax.scan(body, init, jnp.arange(steps))
+    return np.asarray(outs), final
+
+
+class TestRefreshEveryStep:
+    """R=1: the cache is a pass-through — bitwise equal to today."""
+
+    @pytest.mark.parametrize("policy", ["ripple", "svg", "equal_mse"])
+    def test_bitwise_identical_to_per_step_path(self, policy):
+        q, k, v = _qkv(0)
+        cfg = dataclasses.replace(CFG, reuse_every=1)
+        outs, final = _scan(q, k, v, cfg, policy=policy, steps=6)
+        for si in range(6):
+            ref = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                     step=jnp.asarray(si), total_steps=8,
+                                     policy=policy)
+            np.testing.assert_array_equal(outs[si], np.asarray(ref))
+        assert int(np.asarray(final.refreshes).max()) == 6
+        assert int(np.asarray(final.hits).max()) == 0
+
+    def test_single_call_return_decision_matches_plain(self):
+        q, k, v = _qkv(1)
+        ref = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                 step=jnp.asarray(5), total_steps=10)
+        out, cache = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                        step=jnp.asarray(5), total_steps=10,
+                                        return_decision=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert cache.q_idx.dtype == jnp.int32
+        assert cache.q_idx.shape == q.shape
+
+
+class TestCadence:
+    """R>1 with unchanged operands reproduces the R=1 trajectory."""
+
+    @pytest.mark.parametrize("policy", ["ripple", "svg"])
+    @pytest.mark.parametrize("every", [2, 4])
+    def test_hits_bitwise_equal_to_refreshes(self, policy, every):
+        q, k, v = _qkv(2)
+        cfg1 = dataclasses.replace(CFG_CONST, reuse_every=1)
+        cfgR = dataclasses.replace(CFG_CONST, reuse_every=every)
+        outs1, fin1 = _scan(q, k, v, cfg1, policy=policy, steps=6)
+        outsR, finR = _scan(q, k, v, cfgR, policy=policy, steps=6)
+        np.testing.assert_array_equal(outsR, outs1)
+        # and the cadence really did skip decide() on the hit steps
+        # (the final scan step always refreshes — dense-last contract)
+        expected = len([s for s in range(6)
+                        if s % every == 0 or s == 8 - 1])
+        assert int(np.asarray(finR.refreshes).max()) == expected
+        assert int(np.asarray(finR.hits).max()) == 6 - expected
+
+    def test_hit_counters_per_cell(self):
+        q, k, v = _qkv(3)
+        cfg = dataclasses.replace(CFG_CONST, reuse_every=4)
+        _, fin = _scan(q, k, v, cfg, steps=4, total_steps=10)
+        # steps 0..3 at R=4: one refresh (step 0), three hits — per cell
+        assert np.asarray(fin.refreshes).tolist() == [[1, 1, 1]] * 2
+        assert np.asarray(fin.hits).tolist() == [[3, 3, 3]] * 2
+
+    def test_final_step_always_refreshes(self):
+        q, k, v = _qkv(4)
+        cfg = dataclasses.replace(CFG, reuse_every=8)
+        # 6 steps of a 6-step schedule: refresh at 0 and at the final
+        # step (5), which the Eq. 4 schedule forces dense
+        _, fin = _scan(q, k, v, cfg, steps=6, total_steps=6)
+        assert int(np.asarray(fin.refreshes).max()) == 2
+        out_last = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                      step=jnp.asarray(5), total_steps=6)
+        outs, _ = _scan(q, k, v, cfg, steps=6, total_steps=6)
+        np.testing.assert_array_equal(outs[5], np.asarray(out_last))
+
+
+class TestDrift:
+    def test_perturbation_past_bound_forces_refresh(self):
+        q, k, v = _qkv(5)
+        cfg = dataclasses.replace(CFG, reuse_every=8, drift_tol=0.05)
+        _, c0 = attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                   step=jnp.asarray(0), total_steps=10,
+                                   return_decision=True)
+        # unchanged operands at an off-cadence step: hit
+        _, c1 = attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                   step=jnp.asarray(1), total_steps=10,
+                                   cached_decision=c0)
+        assert int(np.asarray(c1.hits).sum()) > 0
+        assert np.array_equal(np.asarray(c1.refreshes),
+                              np.asarray(c0.refreshes))
+        # perturbed well past the bound: early refresh, and the output
+        # equals a fresh decision on the perturbed operands
+        qp = 3.0 * q
+        out, c2 = attention_dispatch(qp, k, v, grid=GRID, cfg=cfg,
+                                     step=jnp.asarray(2), total_steps=10,
+                                     cached_decision=c1)
+        assert (np.asarray(c2.refreshes) == np.asarray(c1.refreshes) + 1).all()
+        ref, _ = attention_dispatch(qp, k, v, grid=GRID, cfg=cfg,
+                                    step=jnp.asarray(2), total_steps=10,
+                                    return_decision=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_drift_off_never_early_refreshes(self):
+        q, k, v = _qkv(6)
+        cfg = dataclasses.replace(CFG, reuse_every=8, drift_tol=0.0)
+        _, c0 = attention_dispatch(q, k, v, grid=GRID, cfg=cfg,
+                                   step=jnp.asarray(0), total_steps=10,
+                                   return_decision=True)
+        _, c1 = attention_dispatch(3.0 * q, k, v, grid=GRID, cfg=cfg,
+                                   step=jnp.asarray(1), total_steps=10,
+                                   cached_decision=c0)
+        assert np.array_equal(np.asarray(c1.refreshes),
+                              np.asarray(c0.refreshes))
+
+
+class TestGating:
+    def test_dense_policy_rejects_cache(self):
+        q, k, v = _qkv(7)
+        with pytest.raises(ValueError, match="decision caching"):
+            attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                               step=jnp.asarray(0), total_steps=10,
+                               policy="dense", return_decision=True)
+
+    def test_external_bias_rejected(self):
+        q, k, v = _qkv(7)
+        bias = jnp.zeros((1, 1, N, N))
+        with pytest.raises(ValueError, match="bias"):
+            attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                               step=jnp.asarray(0), total_steps=10,
+                               bias=bias, return_decision=True)
+
+    def test_legacy_policy_without_capability_rejected(self):
+        class _Legacy(ReusePolicy):
+            name = "legacy_nocache_test"
+
+            def decide(self, q, k, *, grid, cfg, thetas, bias=None,
+                       grid_slice=None, fused=False):
+                from repro.core.policy import ReuseDecision
+                return ReuseDecision(q=q, k=k, thetas=thetas,
+                                     active_axes=(), savings=jnp.zeros(()))
+
+        assert not dc.supports_cache(CFG, _Legacy())
+        q, k, v = _qkv(7)
+        with pytest.raises(ValueError, match="decision caching"):
+            attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                               step=jnp.asarray(0), total_steps=10,
+                               policy=_Legacy(), return_decision=True)
+        # ...but the plain path still serves it untouched
+        out = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                 step=jnp.asarray(0), total_steps=10,
+                                 policy=_Legacy())
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_supports_cache_matrix(self):
+        assert dc.supports_cache(CFG, "ripple")
+        assert dc.supports_cache(CFG, "svg")
+        assert dc.supports_cache(CFG, "equal_mse")
+        assert not dc.supports_cache(CFG, "dense")
+        assert not dc.supports_cache(RippleConfig(), "ripple")  # inactive
+
+
+class TestModelAndSampler:
+    """End-to-end threading: vdit scan-over-layers + sampler carry."""
+
+    @pytest.fixture(scope="class")
+    def vdit_setup(self):
+        from repro.configs import get_smoke_config
+        from repro.launch.workloads import model_fns
+        from repro.models.params import init_params
+
+        arch = get_smoke_config("vdit-paper")
+        arch = dataclasses.replace(arch, ripple=dataclasses.replace(
+            arch.ripple, i_min=1, i_max=3))
+        params = init_params(model_fns(arch), jax.random.PRNGKey(0))
+        m = arch.model
+        g = m.grid(img_res=64)
+        B = 2
+        lat = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (B, g[0] * m.t_patch, g[1] * m.patch, g[2] * m.patch,
+             m.in_channels))
+        txt = 0.05 * jax.random.normal(jax.random.PRNGKey(2),
+                                       (B, m.txt_tokens, m.txt_dim))
+        return arch, params, lat, txt
+
+    def test_vdit_refresh_step_matches_plain(self, vdit_setup):
+        from repro.launch.workloads import vdit_decision_state
+        from repro.models import vdit as vdit_lib
+
+        arch, params, lat, txt = vdit_setup
+        rip = dataclasses.replace(arch.ripple, reuse_every=2)
+        t = jnp.full((lat.shape[0],), 500.0)
+        plain = vdit_lib.vdit_apply(params, lat, t, txt, arch.model,
+                                    ripple=rip, step=jnp.asarray(2),
+                                    total_steps=4)
+        st = vdit_decision_state(arch, 64, lat.shape[0])
+        assert st is not None
+        out, st2 = vdit_lib.vdit_apply(params, lat, t, txt, arch.model,
+                                       ripple=rip, step=jnp.asarray(2),
+                                       total_steps=4, decision_state=st)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+        assert int(np.asarray(st2.refreshes).sum()) > 0
+
+    def test_sampler_threads_state_and_counts(self, vdit_setup):
+        from repro.launch.serve import build_sampler
+
+        arch, params, _, txt = vdit_setup
+        sp = dataclasses.replace(
+            [s for s in arch.shapes if s.kind == "generate"][0],
+            img_res=64, steps=4)
+        fn, lshape = build_sampler(arch, sp, params, reuse_every=2)
+        B = 2
+        noise = jax.random.normal(jax.random.PRNGKey(3), (B, *lshape))
+        rngs = jnp.stack([jax.random.PRNGKey(i) for i in range(B)])
+        lat_out, aux = fn(noise, txt, rngs)
+        assert lat_out.shape == (B, *lshape)
+        hits = int(np.asarray(aux["cache_hits"]))
+        refr = int(np.asarray(aux["cache_refreshes"]))
+        # 4 steps at R=2: refresh at 0, 2 and the final step; hit at 1 —
+        # per layer per (batch, head) cell
+        m = arch.model
+        cells = m.num_layers * B * m.num_heads
+        assert (hits, refr) == (1 * cells, 3 * cells)
+
+    def test_engine_buckets_on_reuse_every(self):
+        from repro.serving.engine import DiffusionEngine, GenRequest
+
+        built = []
+
+        def factory(shape, steps, policy=None, reuse_every=None):
+            built.append((policy, reuse_every))
+            return lambda n, t, r: n
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=2,
+                              max_wait_s=0.01)
+        eng.start()
+        for rid, r in enumerate((None, 4, 4, 1)):
+            eng.submit(GenRequest(request_id=rid,
+                                  txt=np.zeros((1, 1), np.float32),
+                                  steps=2, latent_shape=(4, D),
+                                  reuse_every=r))
+        for rid in range(4):
+            eng.result(rid, timeout=60)
+        eng.stop()
+        assert len(built) == 3
+        assert set(built) == {(None, None), (None, 1), (None, 4)}
+
+    def test_engine_refuses_cadence_it_cannot_honour(self):
+        from repro.serving.engine import DiffusionEngine, GenRequest
+
+        eng = DiffusionEngine(
+            sampler_factory=lambda shape, steps: (lambda n, t, r: n))
+        with pytest.raises(ValueError, match="reuse_every"):
+            eng.submit(GenRequest(request_id=0,
+                                  txt=np.zeros((1, 1), np.float32),
+                                  latent_shape=(2,), reuse_every=4))
+        with pytest.raises(ValueError, match="default_reuse_every"):
+            DiffusionEngine(
+                sampler_factory=lambda shape, steps: (lambda n, t, r: n),
+                default_reuse_every=4)
+
+
+def test_forced_8_device_cache_parity_subprocess(multidevice_env):
+    """Always-on multi-device guarantee: the cache-carrying scan under a
+    forced 8-virtual-device backend is bitwise-equal to the single-device
+    trajectory on 1/2/8-way batch meshes and a 4x2 batch-and-heads mesh —
+    R=1 against the plain path, R=3 against the single-device R=3 run —
+    for both cache-capable built-in policies."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config.base import RippleConfig
+        from repro.core import decision_cache as dc, dispatch
+        from repro.core.dispatch import attention_dispatch, dispatch_mesh
+
+        GRID, N, D = (4, 4, 4), 64, 16
+        cfg = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                           i_min=2, i_max=6, reuse_every=3)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (jax.random.normal(kk, (8, 2, N, D)) for kk in ks)
+
+        def scan(pol, c):
+            def body(carry, si):
+                out, carry = attention_dispatch(
+                    q, k, v, grid=GRID, cfg=c, step=si, total_steps=8,
+                    cached_decision=carry, policy=pol)
+                return carry, out
+            init = dc.initial_state(q.shape, grid=GRID, cfg=c, policy=pol)
+            fin, outs = jax.lax.scan(body, init, jnp.arange(6))
+            return np.asarray(outs), fin
+
+        for pol in ("ripple", "svg"):
+            dispatch.clear_plan_cache()
+            ref_outs, ref_fin = scan(pol, cfg)
+            plain = np.stack([np.asarray(attention_dispatch(
+                q, k, v, grid=GRID, cfg=dataclasses.replace(
+                    cfg, reuse_every=1),
+                step=jnp.asarray(si), total_steps=8, policy=pol))
+                for si in range(6)])
+            for shape in ((1, 1), (2, 1), (8, 1), (4, 2)):
+                mesh = jax.make_mesh(shape, ("data", "model"))
+                with dispatch_mesh(mesh):
+                    dispatch.clear_plan_cache()
+                    outs, fin = scan(pol, cfg)
+                    np.testing.assert_array_equal(outs, ref_outs)
+                    np.testing.assert_array_equal(
+                        np.asarray(fin.hits), np.asarray(ref_fin.hits))
+                    c1 = dataclasses.replace(cfg, reuse_every=1)
+                    outs1, _ = scan(pol, c1)
+                    np.testing.assert_array_equal(outs1, plain)
+        print("cache sharded parity OK on", len(jax.devices()), "devices")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=multidevice_env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "cache sharded parity OK on 8 devices" in r.stdout

@@ -17,10 +17,11 @@ except ImportError:  # degrade to fixed-example property checks
 
 from repro.config.base import RippleConfig
 from repro.core import dispatch
+from repro.core.collapse import collapsed_attention
 from repro.core.dispatch import (attention_dispatch, autotune_attention,
-                                 dense_attention, resolve_plan, shape_bucket)
+                                 dense_attention, get_policy, resolve_plan,
+                                 shape_bucket)
 from repro.core.reuse import compute_reuse
-from repro.core.ripple_attention import ripple_attention
 from repro.kernels.reuse_mask.ops import (fused_compute_reuse,
                                           fused_reuse_eligible)
 
@@ -38,7 +39,8 @@ def _qkv(seed=0, shape=(2, 3, N, D)):
 
 
 class TestBackendEquivalence:
-    """Dispatch output matches the direct ripple_attention paths."""
+    """Dispatch output matches the paper pipeline built from first
+    principles (compute_reuse snap → backend math) — no shim."""
 
     STEP = jnp.asarray(5)
 
@@ -48,28 +50,31 @@ class TestBackendEquivalence:
                                   step=self.STEP, total_steps=10,
                                   backend=backend, **kw)
 
-    def test_reference_matches_direct(self):
+    def _snapped(self, q, k, cfg=CFG):
+        thetas = get_policy("ripple").thetas_for(cfg, self.STEP, 10)
+        rq = compute_reuse(q, GRID, thetas, window=cfg.window)
+        rk = compute_reuse(k, GRID, thetas, window=cfg.window)
+        return rq.snapped, rk.snapped
+
+    def test_reference_matches_manual_snapped_dense(self):
         q, k, v = _qkv(1)
-        direct = ripple_attention(q, k, v, grid=GRID, cfg=CFG,
-                                  step=self.STEP, total_steps=10)
+        q_s, k_s = self._snapped(q, k)
+        direct = dense_attention(q_s, k_s, v, 1.0 / np.sqrt(D))
         np.testing.assert_allclose(np.asarray(self._dispatch("reference")),
                                    np.asarray(direct), atol=1e-6)
 
-    def test_collapse_matches_direct(self):
+    def test_collapse_matches_manual_collapsed(self):
         q, k, v = _qkv(1)
-        cfg = dataclasses.replace(CFG, execution="collapse")
-        direct = ripple_attention(q, k, v, grid=GRID, cfg=cfg,
-                                  step=self.STEP, total_steps=10)
+        q_s, k_s = self._snapped(q, k)
+        direct = collapsed_attention(q_s, k_s, v, window=CFG.window,
+                                     scale=1.0 / np.sqrt(D))
         np.testing.assert_allclose(np.asarray(self._dispatch("collapse")),
                                    np.asarray(direct), atol=3e-5)
 
-    def test_pallas_matches_direct(self):
-        q, k, v = _qkv(1)
-        direct = ripple_attention(q, k, v, grid=GRID, cfg=CFG,
-                                  step=self.STEP, total_steps=10,
-                                  backend="pallas")
+    def test_pallas_matches_reference(self):
+        ref = self._dispatch("reference")
         np.testing.assert_allclose(np.asarray(self._dispatch("pallas")),
-                                   np.asarray(direct), atol=3e-5)
+                                   np.asarray(ref), atol=3e-5)
 
     def test_backends_agree_with_each_other(self):
         ref = self._dispatch("reference")
@@ -101,12 +106,55 @@ class TestBackendEquivalence:
         out, stats = attention_dispatch(
             q, k, v, grid=GRID, cfg=CFG, step=self.STEP, total_steps=10,
             grid_slice=(L, N), with_stats=True)
-        ref, ref_stats = ripple_attention(
-            q, k, v, grid=GRID, cfg=CFG, step=self.STEP, total_steps=10,
-            grid_slice=(L, N), with_stats=True)
+        # manual reference: snap only the grid segment, dense attention
+        thetas = get_policy("ripple").thetas_for(CFG, self.STEP, 10)
+
+        def snap_seg(x):
+            seg = x[..., L:, :]
+            r = compute_reuse(seg, GRID, thetas, window=CFG.window)
+            return jnp.concatenate([x[..., :L, :], r.snapped], axis=-2), \
+                r.mask
+        q_s, q_mask = snap_seg(q)
+        k_s, k_mask = snap_seg(k)
+        ref = dense_attention(q_s, k_s, v, 1.0 / np.sqrt(D))
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-6)
-        assert float(stats.savings) == pytest.approx(float(ref_stats.savings))
+        from repro.core.savings import partial_score_savings
+        pad_q = jnp.concatenate(
+            [jnp.zeros((*q.shape[:-2], L, D), jnp.bool_), q_mask], axis=-2)
+        pad_k = jnp.concatenate(
+            [jnp.zeros((*k.shape[:-2], L, D), jnp.bool_), k_mask], axis=-2)
+        assert float(stats.savings) == pytest.approx(
+            float(partial_score_savings(pad_q, pad_k)))
+
+
+class TestShimDeprecation:
+    """core.ripple_attention survives only as an out-of-tree shim: no
+    in-repo module imports it, and its one-time warning spells out the
+    exact attention_dispatch replacement call."""
+
+    def test_core_package_does_not_reexport_shim(self):
+        import repro.core as core
+        assert "ripple_attention" not in vars(core) or \
+            not callable(vars(core).get("ripple_attention"))
+
+    def test_shim_warns_with_replacement_signature(self):
+        from repro.core import ripple_attention as shim
+        q, k, v = _qkv(1)
+        shim._deprecation_warned = False
+        with pytest.warns(DeprecationWarning,
+                          match=r"attention_dispatch\(q, k, v, grid=grid"):
+            out = shim.ripple_attention(q, k, v, grid=GRID, cfg=CFG,
+                                        step=jnp.asarray(5), total_steps=10)
+        ref = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
+                                 step=jnp.asarray(5), total_steps=10,
+                                 backend="reference")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        # the message names the resolved backend for these arguments
+        shim._deprecation_warned = False
+        with pytest.warns(DeprecationWarning, match=r"backend='reference'"):
+            shim.ripple_attention(q, k, v, grid=GRID, cfg=CFG,
+                                  step=jnp.asarray(5), total_steps=10)
 
 
 class TestFusedMask:

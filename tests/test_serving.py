@@ -196,7 +196,8 @@ class TestMixedTrafficConcurrency:
                               max_wait_s=0.01, max_compiled=2)
         eng.start()
         rid = 0
-        hot = ((2, 2), 2, None)  # bucket keys carry the policy name
+        # bucket keys carry the policy name and reuse cadence
+        hot = ((2, 2), 2, None, None)
         for round_ in range(3):
             for shape, steps in ((hot[0], hot[1]), ((4, 4), 2), ((8, 8), 2)):
                 eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
