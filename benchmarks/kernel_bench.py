@@ -26,7 +26,15 @@ Four dispatch-layer sections (DESIGN.md §8, §12, §13):
   * ``decision_amortization`` — the cross-step decision cache
     (DESIGN.md §13) at the same grid: measured decide-vs-apply µs per
     policy and the resulting per-step decision overhead at cadence
-    R ∈ {1, 2, 4, 8}.
+    R ∈ {1, 2, 4, 8};
+  * ``ring_sweep`` — context-parallel ring attention (DESIGN.md §14)
+    at the same grid: drives ``attention_dispatch`` under a
+    (data, model, seq) mesh and reports the elided-hop fraction — the
+    ring hops whose block-map slice is all-SKIP, so the shard skips the
+    whole hop's kernel launch.  Needs >1 local device (on CPU prefix
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
+    skipped silently otherwise.  ``benchmarks/run.py --mesh 1x1xS``
+    routes here.
 """
 
 from __future__ import annotations
@@ -311,6 +319,116 @@ def decision_amortization(grid=None, d=64, heads=2,
     return rows
 
 
+def ring_sweep(grid=None, d=64, heads=2, policy="svg", steps=2,
+               seq=None):
+    """Context-parallel ring attention (DESIGN.md §14) at a vdit_paper-
+    style latent grid.
+
+    Runs ``steps`` cached dispatch calls under a ``1x1xS`` mesh and
+    reads the ring telemetry off the threaded decision state:
+
+      * ``elided_hops`` — ring hops whose block-map slice was all-SKIP
+        (the shard skipped the hop's kernel launch entirely),
+      * ``hops`` — total hops executed (steps × S shards × S hops),
+      * ``elided_frac`` — the realized structural savings of the ring
+        schedule; the K/V rotation itself still runs every hop, so the
+        matching communication savings are modeled, not realized
+        (DESIGN.md §14).
+
+    Returns ``None`` when no ring mesh can be built (single device, or
+    the seq degree does not divide the frame axis).
+    """
+    from repro.config.base import RippleConfig
+    from repro.configs.vdit_paper import make_config
+    from repro.core import decision_cache as dc
+    from repro.launch.mesh import parse_mesh_spec
+
+    if grid is None:
+        grid = make_config().model.grid(frames=32, img_res=256)  # (8,16,16)
+    mesh = dispatch_lib.active_dispatch_mesh()
+    if mesh is None or "seq" not in mesh.axis_names \
+            or int(mesh.shape["seq"]) < 2:
+        if seq is None:
+            n_dev = jax.device_count()
+            seq = max((s for s in (8, 4, 2)
+                       if s <= n_dev and grid[0] % s == 0), default=1)
+        if seq < 2:
+            return None
+        mesh = parse_mesh_spec(f"1x1x{seq}")
+    S = int(mesh.shape["seq"])
+    if grid[0] % S:
+        return None
+
+    n = grid[0] * grid[1] * grid[2]
+    # Random operands: with uncorrelated data every head classifies
+    # spatial (the 2/T-vs-3/HW margin, DESIGN.md §12), whose local+sink
+    # mask is what makes whole ring hops elidable.
+    q = jax.random.normal(jax.random.PRNGKey(31), (1, heads, n, d))
+    k = jax.random.normal(jax.random.PRNGKey(32), (1, heads, n, d))
+    v = jax.random.normal(jax.random.PRNGKey(33), (1, heads, n, d))
+    cfg = RippleConfig(enabled=True, policy=policy, reuse_every=2)
+
+    with dispatch_lib.dispatch_mesh(mesh):
+        plan = dispatch_lib.resolve_plan(q.shape, v.shape, cfg,
+                                         backend="sparse", policy=policy,
+                                         grid=grid)
+        state = dc.initial_state(q.shape, grid=grid, cfg=cfg,
+                                 policy=policy, backend="sparse")
+
+        @jax.jit
+        def step_fn(q, k, v, step, state):
+            return dispatch_lib.attention_dispatch(
+                q, k, v, grid=grid, cfg=cfg, step=step,
+                total_steps=steps + 1, backend="sparse", policy=policy,
+                cached_decision=state, return_decision=True)
+
+        # Compile outside the timed loop; the warm-up call's state is
+        # discarded so the elided counters cover the timed steps only.
+        warm, _ = step_fn(q, k, v, jnp.asarray(0, jnp.int32), state)
+        jax.block_until_ready(warm)
+        t0 = time.perf_counter()
+        for s in range(steps):
+            out, state = step_fn(q, k, v, jnp.asarray(s, jnp.int32),
+                                 state)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) * 1e6 / steps
+
+    elided = (0 if state.elided is None
+              else int(jax.device_get(state.elided).sum()))
+    hops = steps * S * S
+    frac = elided / hops
+    return {
+        "grid": grid, "d": d, "heads": heads, "policy": policy,
+        "seq": S, "steps": steps, "ring": plan.seq_shards == S,
+        "elided_hops": elided, "hops": hops,
+        "elided_frac": round(frac, 3),
+        "modeled_attn_speedup": round(1.0 / max(1.0 - frac, 1e-9), 2),
+        "us_per_step": round(us, 1),
+    }
+
+
+def ring_main(policy="svg", steps=2):
+    """Print the ring_sweep CSV row (the ``--mesh`` path of
+    ``benchmarks/run.py`` lands here)."""
+    r = ring_sweep(policy=policy, steps=steps)
+    if r is None:
+        print("# ring_sweep skipped: needs >1 device and seq | frames "
+              "(prefix XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        return None
+
+    def gname(g):
+        return "x".join(str(v) for v in g)
+
+    print(f"kernel_bench[ring@{r['policy']}x{r['seq']}seq"
+          f"_vdit_paper{gname(r['grid'])}xd{r['d']}],"
+          f"{r['us_per_step']:.0f},"
+          f"elided_hops={r['elided_hops']};hops={r['hops']};"
+          f"elided_frac={r['elided_frac']};"
+          f"modeled_attn_speedup={r['modeled_attn_speedup']};"
+          f"ring={r['ring']};steps={r['steps']}")
+    return r
+
+
 def autotune_sweep(n=1024, d=64):
     """Sweep the dispatch autotuner's block candidates and persist the
     winner in the on-disk cache ``attention_dispatch`` reads."""
@@ -380,7 +498,9 @@ def main():
     print(f"kernel_bench[autotune],{a['us']:.0f},"
           f"best={a['block_q']}x{a['block_k']};device={a['device']};"
           f"{cand};cache={a['cache']}")
-    return rows + [m, s, a] + amort
+
+    ring = ring_main()  # no-op on a single device
+    return rows + [m, s, a] + amort + ([ring] if ring else [])
 
 
 if __name__ == "__main__":

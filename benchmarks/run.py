@@ -11,7 +11,12 @@ the CI smoke invocations are ``--policy dense --steps 2`` and
 ``--policy svg --steps 2`` (the latter keeps the svg→sparse backend
 path compiling).  ``--reuse-every R`` additionally scans the steps
 carrying the cross-step decision cache (DESIGN.md §13) and reports its
-hit counters and reuse-PSNR rows.
+hit counters and reuse-PSNR rows.  ``--mesh DxMxS`` installs a dispatch
+mesh first; with a seq degree > 1 the run becomes the context-parallel
+ring sweep (benchmarks/kernel_bench.py ``ring_sweep``, DESIGN.md §14)
+and the record's derived fields carry ``elided_hops`` — the CI ring
+smoke is ``--mesh 1x1x2 --policy svg --steps 2`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``.
 
 Every run writes a machine-readable ``BENCH_*.json`` record (per-
 benchmark ``us_per_call`` plus the derived metrics — including the
@@ -80,7 +85,8 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
         "schema": "repro-bench/1",
         "created_unix": round(time.time(), 3),
         "args": {"quick": args.quick, "policy": args.policy,
-                 "steps": args.steps, "reuse_every": args.reuse_every},
+                 "steps": args.steps, "reuse_every": args.reuse_every,
+                 "mesh": args.mesh},
         "walltime_s": round(walltime_s, 3),
         "benchmarks": rows,
         "failures": [{"module": m, "error": e} for m, e in failures],
@@ -91,10 +97,12 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
     print(f"# wrote {path} ({len(rows)} benchmark rows)", file=sys.stderr)
 
 
-def _default_json_path(args) -> str:
+def _default_json_path(args, ring: bool = False) -> str:
     name = args.policy or "full"
     if args.reuse_every and args.reuse_every > 1:
         name += f"_r{args.reuse_every}"
+    if ring:
+        name += "_ring"
     return f"BENCH_{name}.json"
 
 
@@ -111,20 +119,43 @@ def main() -> None:
                     help="decision-cache cadence for the policy sweep "
                          "(DESIGN.md §13): scan the steps carrying the "
                          "cache and report hit counters + reuse-PSNR")
+    ap.add_argument("--mesh", default=None, metavar="DxMxS",
+                    help="install a (data, model[, seq]) dispatch mesh; "
+                         "a seq degree > 1 (e.g. 1x1x2) runs the context-"
+                         "parallel ring sweep (DESIGN.md §14) instead of "
+                         "the policy sweep — on CPU prefix with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable BENCH_*.json record "
                          "to PATH (default: BENCH_<policy|full>[_rR].json "
                          "in the working directory; '' disables)")
     args = ap.parse_args()
+
+    ring = False
+    if args.mesh:
+        from repro.core import dispatch as dispatch_lib
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(args.mesh)
+        dispatch_lib.set_dispatch_mesh(mesh)
+        ring = "seq" in mesh.axis_names and int(mesh.shape["seq"]) > 1
     json_path = args.json if args.json is not None \
-        else _default_json_path(args)
+        else _default_json_path(args, ring)
 
     t0 = time.perf_counter()
     tee = _Tee(sys.stdout)
     failures = []
     with contextlib.redirect_stdout(tee):
         print("name,us_per_call,derived")
-        if args.policy is not None:
+        if ring:
+            from benchmarks import kernel_bench
+
+            r = kernel_bench.ring_main(policy=args.policy or "svg",
+                                       steps=args.steps or 2)
+            if r is None:
+                failures.append(("benchmarks.kernel_bench",
+                                 "ring_sweep could not build a ring mesh"))
+        elif args.policy is not None:
             from benchmarks import policy_sweep
 
             policy_sweep.main(policies=[args.policy],

@@ -37,8 +37,7 @@ from repro.core.policy import (
     register_policy,
 )
 # The cross-step decision cache (DESIGN.md §13): amortize decide() over
-# the reuse_every cadence; the deprecated core.ripple_attention shim is
-# intentionally NOT re-exported here — call attention_dispatch.
+# the reuse_every cadence.
 from repro.core.decision_cache import (
     CachedDecision,
     drift_stat,

@@ -64,12 +64,17 @@ class CachedDecision:
     ref_stat: Optional[jax.Array] = None   # f32 lead-shaped drift reference
     hits: Optional[jax.Array] = None       # i32 lead-shaped counters
     refreshes: Optional[jax.Array] = None
+    # Ring-path telemetry (DESIGN.md §14): running count of elided ring
+    # hops, a (1,) i32 per seq shard.  Only the context-parallel sparse
+    # path populates it; everywhere else it stays None so existing
+    # cache structures are untouched.
+    elided: Optional[jax.Array] = None
 
 
 jax.tree_util.register_dataclass(
     CachedDecision,
     data_fields=["q_idx", "k_idx", "bias", "block_map", "ref_stat",
-                 "hits", "refreshes"],
+                 "hits", "refreshes", "elided"],
     meta_fields=[])
 
 

@@ -28,9 +28,7 @@ model targets (DESIGN.md §8).
      :func:`autotune_attention` (benchmarks/kernel_bench.py sweeps it);
      plan resolution never times kernels inside a trace.
 
-``core.ripple_attention.ripple_attention`` is a deprecated out-of-tree
-compatibility wrapper over this module (nothing in-repo imports it);
-model code calls :func:`attention_dispatch` via
+Model code calls :func:`attention_dispatch` via
 ``models.attention.mha_attention``.
 
 When a mesh is active (:func:`dispatch_mesh` / :func:`set_dispatch_mesh`
@@ -43,6 +41,14 @@ along the t/x/y token axes, never along batch or heads, so the halo for
 the sharded axes is exactly zero and per-shard results are bitwise equal
 to the single-device path (DESIGN.md §10).  Indivisible shapes fall back
 to replicated execution with the same plan cache entry semantics.
+
+A mesh with a third ``seq`` axis additionally shards the **token axis**
+— context-parallel ring attention with an explicit ``window − 1`` frame
+halo for the Δ-checks and per-hop block-map elision (``core.ring``,
+DESIGN.md §14) — for policies that declare ``will_seq_shard`` and
+shapes where the grid covers the whole sequence and T divides by the
+seq degree.  Everything else falls back to the replicated token axis,
+never an error.
 """
 
 from __future__ import annotations
@@ -101,10 +107,14 @@ class DispatchPlan:
     head_axis: Optional[str] = None
     batch_shards: int = 1
     head_shards: int = 1
+    # Context-parallel ring attention (DESIGN.md §14): the mesh axis
+    # sharding the token axis, None when the tokens stay replicated.
+    seq_axis: Optional[str] = None
+    seq_shards: int = 1
 
     @property
     def sharded(self) -> bool:
-        return self.batch_shards * self.head_shards > 1
+        return self.batch_shards * self.head_shards * self.seq_shards > 1
 
     def summary(self) -> str:
         blk = (f" block={self.block_q}x{self.block_k}"
@@ -113,8 +123,9 @@ class DispatchPlan:
         mask = " fused-mask" if self.fused_mask else ""
         shard = (f" shard=batch{self.batch_shards}x"
                  f"heads{self.head_shards}" if self.sharded else "")
-        return (f"attention[{self.policy}/{self.backend}{blk}{mask}{shard} "
-                f"bucket={self.bucket}]")
+        ring = (f" ring=seq{self.seq_shards}" if self.seq_axis else "")
+        return (f"attention[{self.policy}/{self.backend}{blk}{mask}{shard}"
+                f"{ring} bucket={self.bucket}]")
 
 
 def dense_attention(q, k, v, scale, bias=None):
@@ -401,21 +412,52 @@ def _fused_requested(cfg: RippleConfig) -> bool:
     return _platform() == "tpu"
 
 
+def _resolve_seq_sharding(mesh: Optional[Mesh], q_shape, resolved: str,
+                          cfg: RippleConfig, pol: ReusePolicy,
+                          grid, grid_slice) -> Tuple[Optional[str], int]:
+    """(seq_axis, seq_shards): is the context-parallel ring eligible
+    (DESIGN.md §14)?  Needs a >1 'seq' mesh axis, a ring-capable backend
+    (reference or sparse), 4-D operands, a grid covering the whole
+    sequence (no text prefix — ``grid_slice`` must be None after the
+    dispatcher's full-range normalization), a policy that declares
+    ``will_seq_shard``, and T divisible by the seq degree.  Anything
+    else replicates the token axis — fall back, never error."""
+    if (mesh is None or "seq" not in mesh.axis_names or grid is None
+            or grid_slice is not None or len(q_shape) < 4
+            or resolved not in ("reference", "sparse")
+            or not pol.will_seq_shard(cfg)):
+        return None, 1
+    s = int(mesh.shape["seq"])
+    T = int(grid[0])
+    n = math.prod(int(g) for g in grid)
+    if s <= 1 or n != q_shape[-2] or T % s != 0:
+        return None, 1
+    return "seq", s
+
+
 def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
                  backend: Optional[str] = None,
                  has_bias: bool = False,
                  mesh: Optional[Mesh] = None,
-                 policy=None) -> DispatchPlan:
+                 policy=None,
+                 grid: Optional[Tuple[int, int, int]] = None,
+                 grid_slice: Optional[Tuple[int, int]] = None
+                 ) -> DispatchPlan:
     """Shape-bucketed, cached plan resolution (trace-safe: shapes only).
 
     ``mesh`` defaults to the active dispatch mesh; when one is present
     the cache keys on the *exact* leading dims (sharding eligibility is
     a divisibility property, not a bucket property) plus the mesh shape.
     ``policy`` (a registered name or ReusePolicy) defaults to
-    ``cfg.policy``; the cache keys on the policy name.
+    ``cfg.policy``; the cache keys on the policy name.  ``grid`` /
+    ``grid_slice`` feed seq-axis (ring) eligibility — callers that only
+    know shapes simply never get a ring plan.
     """
     if mesh is None:
         mesh = _ACTIVE_MESH
+    if grid_slice is not None and grid is not None \
+            and tuple(grid_slice) == (0, q_shape[-2]):
+        grid_slice = None  # full-range slice is no slice at all
     pol = get_policy(policy if policy is not None else cfg.policy)
     n = q_shape[-2]
     resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n,
@@ -423,7 +465,8 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
     key = _bucket_key(q_shape, v_shape, resolved) \
         + (pol.name, cfg.fused_mask, cfg.window, cfg.granularity)
     if mesh is not None:
-        key = key + (_mesh_key(mesh), tuple(q_shape[:-2]))
+        key = key + (_mesh_key(mesh), tuple(q_shape[:-2]),
+                     grid, grid_slice is None)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_CACHE.move_to_end(key)
@@ -435,11 +478,14 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
     b_axes, h_axis, b_shards, h_shards = (
         _resolve_sharding(mesh, q_shape) if resolved != "dense"
         else ((), None, 1, 1))
+    seq_axis, seq_shards = _resolve_seq_sharding(
+        mesh, q_shape, resolved, cfg, pol, grid, grid_slice)
     plan = DispatchPlan(backend=resolved, policy=pol.name, block_q=bq,
                         block_k=bk, fused_mask=_fused_requested(cfg),
                         bucket=key[1:3], tuned=tuned,
                         batch_axes=b_axes, head_axis=h_axis,
-                        batch_shards=b_shards, head_shards=h_shards)
+                        batch_shards=b_shards, head_shards=h_shards,
+                        seq_axis=seq_axis, seq_shards=seq_shards)
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
         _PLAN_CACHE.popitem(last=False)
@@ -575,6 +621,8 @@ def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
                       else plan.batch_axes[0])
     if plan.head_axis is not None and ndim >= 4:
         entries[1] = plan.head_axis
+    if plan.seq_axis is not None and ndim >= 3:
+        entries[ndim - 2] = plan.seq_axis
     return P(*entries)
 
 
@@ -615,6 +663,45 @@ def _sharded_pipeline(q, k, v, thetas, scale, *, plan: DispatchPlan,
     th_vec = jnp.stack([jnp.asarray(thetas[a], jnp.float32)
                         for a in ("t", "x", "y")])
     scale = jnp.asarray(scale, jnp.float32)
+
+    if plan.seq_axis is not None:
+        # Context-parallel ring attention (core.ring, DESIGN.md §14).
+        # Deferred import: ring lazily imports dense_attention back.
+        from repro.core import ring as ring_lib
+
+        if not want_cache:
+            def ring_body(qs, ks, vs, th, sc):
+                th_d = {"t": th[0], "x": th[1], "y": th[2]}
+                return ring_lib.ring_pipeline(
+                    qs, ks, vs, th_d, sc, plan=plan, grid=grid, cfg=cfg,
+                    policy=policy)
+
+            fn = shard_map(ring_body, mesh=mesh,
+                           in_specs=(spec, spec, spec, P(), P()),
+                           out_specs=spec, check_rep=False)
+            return fn(q, k, v, th_vec, scale)
+
+        rstep = jnp.asarray(step, jnp.int32)
+        # Deterministic spec construction — no eval_shape: the ring body
+        # contains collectives, which only abstract-eval inside
+        # shard_map, and the leaf structure is fixed by (plan, cfg).
+        cache_specs = ring_lib.ring_cache_specs(plan, cfg)
+
+        def ring_cached(qs, ks, vs, th, sc, st, *cache):
+            th_d = {"t": th[0], "x": th[1], "y": th[2]}
+            return ring_lib.ring_pipeline(
+                qs, ks, vs, th_d, sc, plan=plan, grid=grid, cfg=cfg,
+                policy=policy, step=st,
+                cached=cache[0] if cache else None, want_cache=True,
+                total_steps=total_steps)
+
+        in_specs = (spec, spec, spec, P(), P(), P()) + (
+            (cache_specs,) if cached is not None else ())
+        fn = shard_map(ring_cached, mesh=mesh, in_specs=in_specs,
+                       out_specs=(spec, cache_specs), check_rep=False)
+        args = (q, k, v, th_vec, scale, rstep) + (
+            (cached,) if cached is not None else ())
+        return fn(*args)
 
     if not want_cache:
         def body(qs, ks, vs, th, sc):
@@ -704,10 +791,13 @@ def attention_dispatch(
     """
     if mesh is None:
         mesh = _ACTIVE_MESH
+    if grid_slice is not None and tuple(grid_slice) == (0, q.shape[-2]):
+        grid_slice = None  # full-range slice: the whole sequence is grid
     pol = get_policy(policy if policy is not None else cfg.policy)
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     plan = resolve_plan(q.shape, v.shape, cfg, backend=backend,
-                        has_bias=bias is not None, mesh=mesh, policy=pol)
+                        has_bias=bias is not None, mesh=mesh, policy=pol,
+                        grid=grid, grid_slice=grid_slice)
     want_cache = return_decision or cached_decision is not None
     if want_cache:
         if plan.backend == "dense" or not pol.will_cache_decisions(cfg):

@@ -181,6 +181,14 @@ class ReusePolicy:
         their original signature."""
         return self.caches_decisions
 
+    def will_seq_shard(self, cfg: RippleConfig) -> bool:
+        """Does the context-parallel ring path (DESIGN.md §14) know how
+        to run this policy's decision shard-locally when the token axis
+        is sharded over a ``seq`` mesh axis?  Policies that return False
+        fall back to the replicated token axis (batch/head sharding
+        still applies) — the ring never guesses."""
+        return False
+
     # -- per-step threshold schedule ------------------------------------
 
     def thetas_for(self, cfg: RippleConfig, step, total_steps,
@@ -408,6 +416,12 @@ class RipplePolicy(ReusePolicy):
         # only the pair-collapse structural win is traded away).
         return self.emits_block_map or cfg.svg_mask
 
+    def will_seq_shard(self, cfg):
+        # Pure snapping shards cleanly (halo exchange covers the window);
+        # the +SVG combo would need the mask *and* snap paths fused on
+        # the ring, which the ring driver doesn't implement — fall back.
+        return not cfg.svg_mask
+
     def thetas_for(self, cfg, step, total_steps, thetas=None):
         if thetas is None:
             assert step is not None and total_steps is not None, (
@@ -518,6 +532,12 @@ class SVGPolicy(ReusePolicy):
     snaps_operands = False
     emits_block_map = True
     caches_decisions = True
+
+    def will_seq_shard(self, cfg):
+        # Head classification has a sharded twin (classify_heads_sharded)
+        # and the masks are row-separable, so each shard rebuilds its own
+        # bias rows exactly.
+        return True
 
     def thetas_for(self, cfg, step, total_steps, thetas=None):
         return _zero_thetas()  # no Δ-thresholds; masks are classified

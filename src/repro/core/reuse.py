@@ -186,6 +186,7 @@ def compute_reuse(
     channel_groups: Sequence[float] = (0.125, 0.4375, 0.4375),
     protect_axis: Optional[str] = None,
     want_src: bool = False,
+    t_valid: Optional[jax.Array] = None,
 ) -> ReuseResult:
     """Full TimeRipple reuse for one operand (Q or K).
 
@@ -208,6 +209,12 @@ def compute_reuse(
     single gather (DESIGN.md §13).  ``take_along_axis(x, src_idx, -2)``
     is bitwise-identical to ``snapped``: both copy the representative's
     float entries verbatim.
+
+    ``t_valid`` is a (T,) boolean (traced values allowed) gating the
+    **temporal** axis only: frames where it is False never t-snap (their
+    x/y checks still apply).  The context-parallel ring path (DESIGN.md
+    §14) uses it to disqualify windows that extend past the *global*
+    frame count when reuse runs on a halo-extended shard-local slab.
     """
     T, H, W = grid
     *lead, N, d = x.shape
@@ -237,6 +244,10 @@ def compute_reuse(
         mask, rep = axis_reuse_mask(
             x_grid, axis, thetas[axis], window, granularity, channel_groups
         )
+        if axis == "t" and t_valid is not None:
+            shp = [1] * x_grid.ndim
+            shp[_AXIS_DIM["t"] % x_grid.ndim] = T
+            mask = jnp.logical_and(mask, t_valid.reshape(shp))
         if protected is not None and axis != protect_axis:
             mask = jnp.logical_and(mask, ~protected)
         axis_masks[axis] = mask

@@ -1,0 +1,409 @@
+"""Context-parallel ring attention over the ``seq`` mesh axis (DESIGN.md §14).
+
+The batch/head sharding of §10 cannot split a *single* long/high-res
+video — exactly the request shape the paper's savings matter most for.
+This module runs the reuse pipeline with the token axis sharded
+``S``-way over a third mesh axis, inside the dispatcher's ``shard_map``:
+
+* **Decision path** — shard-local, with an explicit halo.  §10.2's
+  zero-halo contract breaks on the t axis when a shard boundary cuts a
+  reuse window, so each shard ``ppermute``-exchanges ``window − 1``
+  neighbor frames, re-runs the windowed Δ-checks on a window-aligned
+  slab of ``L_max`` frames, and keeps its own rows — bitwise equal to
+  the single-device decision (``t_valid`` masks the global tail and the
+  ring-wrap garbage windows; x/y windows live inside a frame and never
+  need halo).  When ``T/S`` is a window multiple (or t is inactive) the
+  halo is empty and the slab is the local block itself.
+
+* **Execution path**, two backends:
+
+  - ``reference`` (snap policies: ripple, equal_mse) — the exactness
+    path: the snapped K and V are ``all_gather``-ed (tiled) and each
+    shard computes its query rows against the full key axis, which is
+    *bitwise* identical to single-device.
+  - ``sparse`` (mask policies: svg) — the true ring: K/V blocks rotate
+    with ``lax.ppermute`` while the block-sparse kernel accumulates
+    online-softmax state ``(m, l, acc)`` across hops (the kernel-carry
+    convention of ``kernels/sparse``).  Per hop, the shard slices its
+    cached bias rows down to the arriving key block, tiles them into a
+    block map, and **skips the whole hop** when every tile is SKIP — the
+    elided-hop counter rides the decision cache out to engine logs and
+    BENCH records.  The rotation itself still runs every hop (downstream
+    shards need the blocks), so the communication saving is *modeled*,
+    not yet realized in wall-clock; the compute saving is real.  Hop
+    order rotates the softmax reduction per shard, so outputs match
+    single-device to ~1e-5 relative (documented in §14), not bitwise.
+
+Collectives (halo exchange, sharded head classification, the ring
+rotation) always run *outside* the decision cache's refresh
+``lax.cond`` — a cond branch must stay pure-local so one shard's
+drift-forced refresh can never desync the others (§13 extended to seq).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RippleConfig
+from repro.core import reuse as reuse_lib
+from repro.core.decision_cache import CachedDecision
+from repro.core.svg_mask import classify_heads_sharded, svg_keep_rows
+
+__all__ = ["SEQ_AXIS", "ring_cache_specs", "ring_pipeline"]
+
+SEQ_AXIS = "seq"
+
+
+# ---------------------------------------------------------------------------
+# Halo geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Geometry:
+    """Static shard-slab geometry for one (grid, window, S) combination.
+
+    ``left = window − 1`` neighbor frames cover every window a shard
+    boundary can cut; the slab is the smallest window-aligned frame
+    range containing the local block, so ``lmax = w·⌈(left + tl)/w⌉``
+    and ``right = lmax − tl`` (the slab start ``g0 − p`` with
+    ``p = g0 mod w`` shifts at most ``w − 1 = left`` frames left, so the
+    slice always fits in ``left + tl + right`` exchanged frames)."""
+
+    t_local: int
+    hw: int
+    window: int
+    left: int
+    right: int
+    lmax: int
+
+    @property
+    def fast(self) -> bool:
+        return self.left == 0 and self.right == 0
+
+
+def _geometry(grid, cfg: RippleConfig, shards: int) -> _Geometry:
+    T, H, W = grid
+    w = max(int(cfg.window), 1)
+    tl = T // shards
+    if "t" not in cfg.axes or w <= 1 or tl % w == 0:
+        return _Geometry(tl, H * W, w, 0, 0, tl)
+    left = w - 1
+    lmax = w * math.ceil((left + tl) / w)
+    return _Geometry(tl, H * W, w, left, lmax - tl, lmax)
+
+
+def _ppermute(x, shards: int, shift: int):
+    """Rotate along the ring: with ``shift=+1`` every shard receives its
+    left neighbor's buffer (source ``j`` sends to ``j+1``)."""
+    perm = [(j, (j + shift) % shards) for j in range(shards)]
+    return jax.lax.ppermute(x, SEQ_AXIS, perm)
+
+
+def _halo_slab(x, geom: _Geometry, shards: int):
+    """(..., N_local, d) tokens -> the window-aligned decision slab.
+
+    Returns ``(slab, o0)`` where ``o0`` is the local block's token
+    offset inside the slab (0 on the fast path).  Multi-hop: a window
+    larger than a shard pulls whole neighbor blocks (satellite case)."""
+    if geom.fast:
+        return x, 0
+    nl = x.shape[-2]
+    left_t = geom.left * geom.hw
+    right_t = geom.right * geom.hw
+
+    segs, cur = [], x
+    for _ in range(-(-left_t // nl)):
+        cur = _ppermute(cur, shards, +1)
+        segs.insert(0, cur)
+    lbuf = jnp.concatenate(segs, axis=-2)[..., -left_t:, :]
+
+    segs, cur = [], x
+    for _ in range(-(-right_t // nl)):
+        cur = _ppermute(cur, shards, -1)
+        segs.append(cur)
+    rbuf = jnp.concatenate(segs, axis=-2)[..., :right_t, :]
+
+    ext = jnp.concatenate([lbuf, x, rbuf], axis=-2)
+    p = _phase(geom)
+    slab = jax.lax.dynamic_slice_in_dim(
+        ext, (geom.left - p) * geom.hw, geom.lmax * geom.hw, axis=-2)
+    return slab, p * geom.hw
+
+
+def _phase(geom: _Geometry):
+    """Local block's frame offset inside the window-aligned slab."""
+    g0 = jax.lax.axis_index(SEQ_AXIS) * geom.t_local
+    return g0 % geom.window
+
+
+def _t_valid(geom: _Geometry, grid) -> Optional[jax.Array]:
+    """(lmax,) bool: slab frames whose t-window lies fully inside
+    [0, T).  Gates the global remainder tail (those frames never snap on
+    t, matching single-device) and the last shard's ring-wrapped right
+    halo.  None on the fast path — every window is then in range."""
+    if geom.fast:
+        return None
+    T = grid[0]
+    g0 = jax.lax.axis_index(SEQ_AXIS) * geom.t_local
+    j = jnp.arange(geom.lmax)
+    win_start = g0 - (g0 % geom.window) + (j // geom.window) * geom.window
+    return (win_start + geom.window) <= T
+
+
+# ---------------------------------------------------------------------------
+# Shard-local decisions
+# ---------------------------------------------------------------------------
+
+
+def _decide_src(x, geom: _Geometry, grid, thetas, cfg: RippleConfig,
+                o0, t_valid):
+    """Windowed Δ-checks on the slab; returns the *slab-coordinate*
+    snap-source map for the local rows, (..., N_local, d) int32 — the
+    cacheable half of the decision (replay = one gather, §13)."""
+    T, H, W = grid
+    r = reuse_lib.compute_reuse(
+        x, (geom.lmax, H, W), thetas, axes=tuple(cfg.axes),
+        window=cfg.window, granularity=cfg.granularity,
+        channel_groups=cfg.channel_groups, want_src=True, t_valid=t_valid)
+    nl = geom.t_local * geom.hw
+    return jax.lax.dynamic_slice_in_dim(r.src_idx, o0, nl, axis=-2)
+
+
+def _gather_src(slab, src):
+    return jnp.take_along_axis(slab, src, axis=-2)
+
+
+def _pack(stat):
+    """(B, H) shard-local statistic -> (B, H, 1) cache leaf, so the seq
+    axis has a dim to live on (global shape (B, H, S))."""
+    return stat[..., None]
+
+
+def _counters(prev: Optional[CachedDecision], stat):
+    if prev is None or prev.hits is None:
+        return jnp.zeros(stat.shape + (1,), jnp.int32), \
+            jnp.ones(stat.shape + (1,), jnp.int32)
+    return prev.hits, prev.refreshes + 1
+
+
+def _drift(q, k, cfg: RippleConfig):
+    from repro.core import decision_cache as dc
+
+    if cfg.drift_tol > 0:
+        return dc.drift_stat(q, k, cfg)
+    return jnp.zeros(q.shape[:-2], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+def _reference_ring_execute(q_s, k_s, v, scale):
+    """Exactness path for snap policies: gather the (snapped) operands
+    and run the *full-shape* dense reference on every shard, keeping the
+    local query rows.  Gathering only K/V and computing the local rows
+    would be numerically right but not bitwise — XLA's CPU gemm
+    partitioning depends on the row count (and thread budget), so a
+    shard-shaped matmul can round differently from the single-device
+    one.  Identical shapes compile to the identical program, which is
+    what the reference backend's bitwise contract demands; the decision
+    path (halo Δ-checks, per-shard caches) is what this backend shards,
+    and the sparse ring is the execution-scaling path (DESIGN.md §14).
+    """
+    from repro.core.dispatch import dense_attention
+
+    ax = q_s.ndim - 2
+    nl = q_s.shape[-2]
+    qb = jax.lax.all_gather(q_s, SEQ_AXIS, axis=ax, tiled=True)
+    kb = jax.lax.all_gather(k_s, SEQ_AXIS, axis=ax, tiled=True)
+    vb = jax.lax.all_gather(v, SEQ_AXIS, axis=ax, tiled=True)
+    full = dense_attention(qb, kb, vb, scale, None)
+    off = jax.lax.axis_index(SEQ_AXIS) * nl
+    return jax.lax.dynamic_slice_in_dim(full, off, nl, axis=ax)
+
+
+def _sparse_ring_execute(q, k, v, bias_rows, plan, shards: int):
+    """The true ring: rotate K/V blocks, accumulate online-softmax state
+    through the block-sparse kernel's carry, and skip a hop outright
+    when its block-map slice is all-SKIP.  Returns ``(out, elided)``
+    with ``elided`` the number of hops this shard skipped this call."""
+    from repro.kernels.sparse.kernel import _M_INIT
+    from repro.kernels.sparse.ops import (SKIP, block_map_from_keep,
+                                          sparse_attention_pallas)
+
+    B, H, nl, _ = q.shape
+    dv = v.shape[-1]
+    me = jax.lax.axis_index(SEQ_AXIS)
+    m = jnp.full((B, H, nl), _M_INIT, jnp.float32)
+    l = jnp.zeros((B, H, nl), jnp.float32)
+    acc = jnp.zeros((B, H, nl, dv), jnp.float32)
+    elided = jnp.zeros((), jnp.int32)
+    k_cur, v_cur = k, v
+
+    for h in range(shards):
+        src = (me - h) % shards  # which shard's block arrived this hop
+        bias_hop = jax.lax.dynamic_slice_in_dim(
+            bias_rows, src * nl, nl, axis=-1)
+        bmap = block_map_from_keep(bias_hop >= 0.0, plan.block_q,
+                                   plan.block_k)
+        elide = jnp.all(bmap == SKIP)
+
+        def run(carry, kk=k_cur, vv=v_cur, bh=bias_hop, bm=bmap):
+            _, state = sparse_attention_pallas(
+                q, kk, vv, bias=bh, block_map=bm, block_q=plan.block_q,
+                block_k=plan.block_k, carry=carry, return_state=True)
+            return state
+
+        m, l, acc = jax.lax.cond(elide, lambda c: c, run, (m, l, acc))
+        elided = elided + elide.astype(jnp.int32)
+        if h < shards - 1:
+            # The rotation is never skipped — downstream shards still
+            # need the blocks — so elision saves compute, and the comm
+            # saving stays modeled (ring_sweep reports both).
+            k_cur = _ppermute(k_cur, shards, +1)
+            v_cur = _ppermute(v_cur, shards, +1)
+
+    out = (acc / jnp.where(l > 0.0, l, 1.0)[..., None]).astype(q.dtype)
+    return out, elided
+
+
+# ---------------------------------------------------------------------------
+# Pipelines (called inside the dispatcher's shard_map, SEQ_AXIS bound)
+# ---------------------------------------------------------------------------
+
+
+def _snap_pipeline(q, k, v, thetas, scale, *, plan, grid, cfg, step,
+                   cached, want_cache, total_steps):
+    from repro.core import decision_cache as dc
+
+    geom = _geometry(grid, cfg, plan.seq_shards)
+    t_valid = _t_valid(geom, grid)
+    # Halo exchange runs unconditionally: collectives can never sit
+    # inside the refresh cond (per-shard refresh independence, §13/§14).
+    q_slab, q_o0 = _halo_slab(q, geom, plan.seq_shards) \
+        if cfg.snap_q else (None, 0)
+    k_slab, k_o0 = _halo_slab(k, geom, plan.seq_shards) \
+        if cfg.snap_k else (None, 0)
+
+    def decide():
+        q_src = (None if q_slab is None else
+                 _decide_src(q_slab, geom, grid, thetas, cfg, q_o0, t_valid))
+        k_src = (None if k_slab is None else
+                 _decide_src(k_slab, geom, grid, thetas, cfg, k_o0, t_valid))
+        return q_src, k_src
+
+    if not want_cache:
+        q_src, k_src = decide()
+        q_s = q if q_src is None else _gather_src(q_slab, q_src)
+        k_s = k if k_src is None else _gather_src(k_slab, k_src)
+        return _reference_ring_execute(q_s, k_s, v, scale)
+
+    stat = _drift(q, k, cfg)
+
+    def fresh(prev):
+        q_src, k_src = decide()
+        hits, refreshes = _counters(prev, stat)
+        return CachedDecision(q_idx=q_src, k_idx=k_src,
+                              ref_stat=_pack(stat), hits=hits,
+                              refreshes=refreshes)
+
+    if cached is None:
+        cache = fresh(None)
+    else:
+        refresh = dc.refresh_due(step, cfg, stat,
+                                 cached.ref_stat[..., 0], total_steps)
+        cache = jax.lax.cond(refresh, fresh, dc.bump_hit, cached)
+
+    # The snap itself happens once, outside the cond: both arms agree on
+    # the source map, and replaying it is the same gather either way —
+    # which is exactly why a cache hit is bitwise.
+    q_s = q if cache.q_idx is None else _gather_src(q_slab, cache.q_idx)
+    k_s = k if cache.k_idx is None else _gather_src(k_slab, cache.k_idx)
+    return _reference_ring_execute(q_s, k_s, v, scale), cache
+
+
+def _mask_pipeline(q, k, v, scale, *, plan, grid, cfg, step, cached,
+                   want_cache, total_steps):
+    from repro.core import decision_cache as dc
+
+    nl = q.shape[-2]
+    # Sharded online head classification — a collective, so it runs
+    # every step regardless of the refresh verdict.
+    is_spatial = classify_heads_sharded(q, k, grid, SEQ_AXIS)
+    off = jax.lax.axis_index(SEQ_AXIS) * nl
+
+    def bias_rows():
+        keep = svg_keep_rows(is_spatial, grid, off, nl)
+        return jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+
+    if not want_cache:
+        out, _ = _sparse_ring_execute(q, k, v, bias_rows(), plan,
+                                      plan.seq_shards)
+        return out
+
+    stat = _drift(q, k, cfg)
+
+    def fresh(prev):
+        hits, refreshes = _counters(prev, stat)
+        elided = (jnp.zeros((1,), jnp.int32) if prev is None
+                  or prev.elided is None else prev.elided)
+        return CachedDecision(bias=bias_rows(), ref_stat=_pack(stat),
+                              hits=hits, refreshes=refreshes,
+                              elided=elided)
+
+    if cached is None:
+        cache = fresh(None)
+    else:
+        refresh = dc.refresh_due(step, cfg, stat,
+                                 cached.ref_stat[..., 0], total_steps)
+        cache = jax.lax.cond(refresh, fresh, dc.bump_hit, cached)
+
+    out, elided = _sparse_ring_execute(q, k, v, cache.bias, plan,
+                                       plan.seq_shards)
+    cache = dataclasses.replace(cache, elided=cache.elided + elided[None])
+    return out, cache
+
+
+def ring_pipeline(q, k, v, thetas, scale, *, plan, grid,
+                  cfg: RippleConfig, policy, step=None, cached=None,
+                  want_cache: bool = False, total_steps=None):
+    """One context-parallel attention call on this shard's (B, H,
+    N_local, d) token slice.  Must run inside shard_map with
+    ``SEQ_AXIS`` bound.  Returns ``out`` or ``(out, CachedDecision)``.
+    """
+    if plan.backend == "sparse":
+        return _mask_pipeline(q, k, v, scale, plan=plan, grid=grid,
+                              cfg=cfg, step=step, cached=cached,
+                              want_cache=want_cache,
+                              total_steps=total_steps)
+    return _snap_pipeline(q, k, v, thetas, scale, plan=plan, grid=grid,
+                          cfg=cfg, step=step, cached=cached,
+                          want_cache=want_cache, total_steps=total_steps)
+
+
+def ring_cache_specs(plan, cfg: RippleConfig):
+    """PartitionSpecs for the ring cache's leaves, with exactly the
+    None-pattern :func:`ring_pipeline` produces — defined next to it so
+    the two can never drift.  Token-shaped leaves shard seq at dim 2;
+    packed per-shard stats/counters at their trailing dim; the elided
+    counter is one i32 per shard."""
+    from jax.sharding import PartitionSpec as P
+
+    b = (plan.batch_axes if len(plan.batch_axes) > 1
+         else plan.batch_axes[0]) if plan.batch_axes else None
+    h = plan.head_axis
+    tok = P(b, h, SEQ_AXIS, None)
+    stat = P(b, h, SEQ_AXIS)
+    if plan.backend == "sparse":
+        return CachedDecision(bias=tok, ref_stat=stat, hits=stat,
+                              refreshes=stat, elided=P(SEQ_AXIS))
+    return CachedDecision(q_idx=tok if cfg.snap_q else None,
+                          k_idx=tok if cfg.snap_k else None,
+                          ref_stat=stat, hits=stat, refreshes=stat)

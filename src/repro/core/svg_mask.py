@@ -60,6 +60,64 @@ def classify_heads(q: jax.Array, k: jax.Array, grid, sample_rows: int = 64,
     return mass_sp >= mass_tm
 
 
+def classify_heads_sharded(q: jax.Array, k: jax.Array, grid, axis_name: str,
+                           sample_rows: int = 64, scale=None) -> jax.Array:
+    """:func:`classify_heads` when the token axis is sharded over the
+    mesh axis ``axis_name`` (the context-parallel ring path, DESIGN.md
+    §14).  ``q``/``k`` are one shard's (..., N_loc, d) token slice; the
+    sampled rows are gathered and the softmax row statistics reduced
+    with ``psum``/``pmax`` collectives, so every shard returns the
+    *same* per-head verdict — equal to the single-device one up to
+    cross-shard summation order (the retained-mass margins between the
+    two candidate masks are orders of magnitude wider than that).
+
+    Must be called from inside ``shard_map`` with ``axis_name`` bound;
+    runs unconditionally every step on the ring path (collectives can
+    never sit inside the decision cache's refresh ``lax.cond``)."""
+    *lead, n_loc, d = q.shape
+    T, H, W = grid
+    n = T * H * W
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    off = jax.lax.axis_index(axis_name) * n_loc
+    rows = np.linspace(0, n - 1, min(sample_rows, n)).astype(np.int32)
+    r = jnp.asarray(rows)
+    # Assemble the sampled global query rows everywhere: each shard
+    # contributes the rows it owns, psum fills in the rest.
+    owned = jnp.logical_and(r >= off, r < off + n_loc)
+    local = jnp.clip(r - off, 0, n_loc - 1)
+    qs = jnp.where(owned[:, None], q[..., local, :], 0.0)
+    qs = jax.lax.psum(qs, axis_name)
+    logits = (jnp.einsum("...qd,...kd->...qk", qs, k) * scale) \
+        .astype(jnp.float32)                      # (..., R, N_loc)
+    m = jax.lax.pmax(jnp.max(logits, axis=-1), axis_name)
+    p = jnp.exp(logits - m[..., None])
+    denom = jax.lax.psum(jnp.sum(p, axis=-1), axis_name)   # (..., R)
+    sp = jnp.asarray(spatial_mask(grid)[rows])
+    tm = jnp.asarray(temporal_mask(grid)[rows])
+
+    def mass(full_mask):
+        cols = jax.lax.dynamic_slice(full_mask, (0, off), (len(rows), n_loc))
+        num = jax.lax.psum(jnp.sum(jnp.where(cols, p, 0.0), axis=-1),
+                           axis_name)
+        return jnp.sum(num / denom, axis=-1)
+
+    return mass(sp) >= mass(tm)
+
+
+def svg_keep_rows(is_spatial: jax.Array, grid, row_offset,
+                  n_rows: int) -> jax.Array:
+    """Shard-local slice of the classified keep-mask: the ``n_rows``
+    query rows starting at (traced) ``row_offset``, against all N key
+    columns — (..., n_rows, N) for per-head verdicts ``is_spatial``."""
+    sp = jnp.asarray(spatial_mask(grid))
+    tm = jnp.asarray(temporal_mask(grid))
+    n = sp.shape[0]
+    sp_rows = jax.lax.dynamic_slice(sp, (row_offset, 0), (n_rows, n))
+    tm_rows = jax.lax.dynamic_slice(tm, (row_offset, 0), (n_rows, n))
+    return jnp.where(is_spatial[..., None, None], sp_rows, tm_rows)
+
+
 def svg_block_mask(q: jax.Array, k: jax.Array, grid) -> jax.Array:
     """Boolean keep-mask (..., N, N) per head, SVG spatial/temporal choice."""
     is_spatial = classify_heads(q, k, grid)

@@ -50,8 +50,17 @@ SKIP, FULL, PARTIAL = 0, 1, 2
 
 def _sparse_kernel(bmap_ref, kfetch_ref, bfetch_ref,
                    q_ref, k_ref, v_ref, bias_ref,
-                   o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, nk: int):
+                   *refs, scale: float, nk: int, with_state: bool):
+    if with_state:
+        # Cross-hop accumulator convention (DESIGN.md §14): the running
+        # (m, l, acc) softmax state enters as three carry inputs and
+        # leaves as three extra outputs, so ring hops chain the online
+        # softmax exactly as consecutive k-blocks do within one call.
+        (m_in_ref, l_in_ref, acc_in_ref,
+         o_ref, m_out_ref, l_out_ref, acc_out_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -59,9 +68,14 @@ def _sparse_kernel(bmap_ref, kfetch_ref, bfetch_ref,
 
     @pl.when(ki == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, _M_INIT)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if with_state:
+            m_ref[...] = m_in_ref[...]
+            l_ref[...] = l_in_ref[...]
+            acc_ref[...] = acc_in_ref[...]
+        else:
+            m_ref[...] = jnp.full_like(m_ref, _M_INIT)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def scores():
         return jax.lax.dot_general(
@@ -97,12 +111,16 @@ def _sparse_kernel(bmap_ref, kfetch_ref, bfetch_ref,
         # l == 0: every tile of the row was skipped / fully masked.
         out = acc_ref[...] / jnp.where(l > 0.0, l, 1.0)
         o_ref[...] = out.astype(o_ref.dtype)
+        if with_state:
+            m_out_ref[...] = m_ref[...]
+            l_out_ref[...] = l_ref[...]
+            acc_out_ref[...] = acc_ref[...]
 
 
 def sparse_attention_kernel(
     q, k, v, bias, block_map, k_fetch, bias_fetch,
     *, scale: float, block_q: int = 128, block_k: int = 128,
-    interpret: bool = False,
+    interpret: bool = False, carry=None,
 ):
     """q: (BH, Nq, d), k/v: (BH, Nk, d|dv), bias: (BH, Nq, Nk) f32 or a
     (1, block_q, block_k) zero dummy when no policy bias exists.
@@ -113,7 +131,16 @@ def sparse_attention_kernel(
     VMEM; equal to ``ki`` wherever the state needs the block and to the
     last needed index elsewhere (so the pipeline elides the copy).
 
-    Returns (BH, Nq, dv).
+    Returns (BH, Nq, dv); with ``carry`` — a running-softmax
+    ``(m, l, acc)`` triple of shapes ((BH, Nq, _LANES) f32 ×2,
+    (BH, Nq, dv) f32) from a previous call — the online softmax resumes
+    from that state instead of the fresh ``(_M_INIT, 0, 0)`` and the
+    updated triple is returned alongside: ``(o, (m, l, acc))``.  This is
+    the cross-hop accumulator convention of the ring driver
+    (DESIGN.md §14): chaining calls over column slices of the key axis
+    is the same online-softmax recurrence as the kernel's own k-block
+    loop, so the final ``acc / l`` matches a single full-width call up
+    to hop-ordering rounding.
     """
     BH, Nq, d = q.shape
     Nk = k.shape[1]
@@ -123,8 +150,10 @@ def sparse_attention_kernel(
     nk = Nk // block_k
     assert block_map.shape == (BH, nq, nk), (block_map.shape, BH, nq, nk)
     dummy_bias = bias.shape[0] == 1 and bias.shape[1:] == (block_q, block_k)
+    with_state = carry is not None
 
-    kernel = functools.partial(_sparse_kernel, scale=scale, nk=nk)
+    kernel = functools.partial(_sparse_kernel, scale=scale, nk=nk,
+                               with_state=with_state)
 
     def qmap(b, qi, ki, *_):
         return (b, qi, 0)
@@ -139,28 +168,54 @@ def sparse_attention_kernel(
         def biasmap(b, qi, ki, bmap_ref, kfetch_ref, bfetch_ref):
             return (b, qi, bfetch_ref[b, qi, ki])
 
+    mspec = pl.BlockSpec((None, block_q, _LANES), qmap)
+    accspec = pl.BlockSpec((None, block_q, dv), qmap)
+    in_specs = [
+        pl.BlockSpec((None, block_q, d), qmap),
+        pl.BlockSpec((None, block_k, d), kvmap),
+        pl.BlockSpec((None, block_k, dv), kvmap),
+        pl.BlockSpec((None, block_q, block_k), biasmap),
+    ]
+    out_specs = accspec
+    out_shape = jax.ShapeDtypeStruct((BH, Nq, dv), q.dtype)
+    operands = (block_map, k_fetch, bias_fetch, q, k, v, bias)
+    if with_state:
+        m_in, l_in, acc_in = carry
+        assert m_in.shape == (BH, Nq, _LANES) and \
+            l_in.shape == (BH, Nq, _LANES) and \
+            acc_in.shape == (BH, Nq, dv), (m_in.shape, l_in.shape,
+                                           acc_in.shape)
+        in_specs = in_specs + [mspec, mspec, accspec]
+        out_specs = [out_specs, mspec, mspec, accspec]
+        f32 = jnp.float32
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((BH, Nq, _LANES), f32),
+                     jax.ShapeDtypeStruct((BH, Nq, _LANES), f32),
+                     jax.ShapeDtypeStruct((BH, Nq, dv), f32)]
+        operands = operands + (m_in.astype(f32), l_in.astype(f32),
+                               acc_in.astype(f32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(BH, nq, nk),
-        in_specs=[
-            pl.BlockSpec((None, block_q, d), qmap),
-            pl.BlockSpec((None, block_k, d), kvmap),
-            pl.BlockSpec((None, block_k, dv), kvmap),
-            pl.BlockSpec((None, block_q, block_k), biasmap),
-        ],
-        out_specs=pl.BlockSpec((None, block_q, dv), qmap),
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((block_q, _LANES), jnp.float32),
             pltpu.VMEM((block_q, _LANES), jnp.float32),
             pltpu.VMEM((block_q, dv), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    res = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((BH, Nq, dv), q.dtype),
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(block_map, k_fetch, bias_fetch, q, k, v, bias)
+    )(*operands)
+    if with_state:
+        o, m, l, acc = res
+        return o, (m, l, acc)
+    return res

@@ -23,8 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sparse.kernel import (FULL, PARTIAL, SKIP,
-                                         sparse_attention_kernel)
+from repro.kernels.sparse.kernel import (_LANES, _M_INIT, FULL, PARTIAL,
+                                         SKIP, sparse_attention_kernel)
 from repro.kernels.sparse.ref import sparse_grid
 
 __all__ = ["FULL", "PARTIAL", "SKIP", "block_map_from_keep",
@@ -84,10 +84,11 @@ def _fetch_table(needed: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
-                                             "interpret"))
+                                             "interpret", "return_state"))
 def sparse_attention_pallas(q, k, v, *, bias=None, block_map=None,
                             block_q: int = 128, block_k: int = 128,
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            carry=None, return_state: bool = False):
     """q,k,v: (B, H, N, d) -> (B, H, N, dv).
 
     ``block_map``: (..., nq, nk) int states broadcastable over (B, H),
@@ -97,6 +98,15 @@ def sparse_attention_pallas(q, k, v, *, bias=None, block_map=None,
     is additive on logits and read only inside PARTIAL tiles — FULL
     tiles must correspond to an all-zero bias region, SKIP tiles to
     all-−inf (``block_map_from_keep`` guarantees both).
+
+    Ring-hop chaining (DESIGN.md §14): with ``return_state=True`` the
+    call also returns the online-softmax state ``(m, l, acc)`` of shapes
+    ((B, H, Nq) f32 ×2, (B, H, Nq, dv) f32); feeding that triple back as
+    ``carry`` on the next call — against the *next* key slice — resumes
+    the accumulation, so a chain of calls over column slices of K equals
+    one full-width call up to summation-order rounding.  The per-call
+    ``out`` is the normalized prefix result; only the last hop's ``out``
+    (or an explicit ``acc / l``) is the final answer.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -137,7 +147,34 @@ def sparse_attention_pallas(q, k, v, *, bias=None, block_map=None,
                                   (B, H, Nq, Nk)).reshape(B * H, Nq, Nk)
         bias_f = _pad_to(_pad_to(bias_f, Nq_p, 1), Nk_p, 2)
 
-    out = sparse_attention_kernel(
+    carry_f = None
+    if carry is not None or return_state:
+        if carry is None:
+            m_c = jnp.full((B, H, Nq), _M_INIT, jnp.float32)
+            l_c = jnp.zeros((B, H, Nq), jnp.float32)
+            acc_c = jnp.zeros((B, H, Nq, dv), jnp.float32)
+        else:
+            m_c, l_c, acc_c = carry
+        # Padded query rows carry the fresh state so they stay inert.
+        m_c = jnp.pad(m_c.astype(jnp.float32), [(0, 0), (0, 0),
+                      (0, Nq_p - Nq)], constant_values=_M_INIT)
+        l_c = _pad_to(l_c.astype(jnp.float32), Nq_p, 2)
+        acc_c = _pad_to(acc_c.astype(jnp.float32), Nq_p, 2)
+        carry_f = (jnp.broadcast_to(m_c.reshape(B * H, Nq_p, 1),
+                                    (B * H, Nq_p, _LANES)),
+                   jnp.broadcast_to(l_c.reshape(B * H, Nq_p, 1),
+                                    (B * H, Nq_p, _LANES)),
+                   acc_c.reshape(B * H, Nq_p, dv))
+
+    res = sparse_attention_kernel(
         qf, kf, vf, bias_f, bmap, k_fetch, bias_fetch,
-        scale=scale, block_q=bq, block_k=bk, interpret=interpret)
-    return out.reshape(B, H, Nq_p, dv)[:, :, :Nq, :]
+        scale=scale, block_q=bq, block_k=bk, interpret=interpret,
+        carry=carry_f)
+    if carry_f is not None:
+        out, (m, l, acc) = res
+        state = (m[:, :, 0].reshape(B, H, Nq_p)[:, :, :Nq],
+                 l[:, :, 0].reshape(B, H, Nq_p)[:, :, :Nq],
+                 acc.reshape(B, H, Nq_p, dv)[:, :, :Nq, :])
+        out = out.reshape(B, H, Nq_p, dv)[:, :, :Nq, :]
+        return (out, state) if return_state else out
+    return res.reshape(B, H, Nq_p, dv)[:, :, :Nq, :]

@@ -29,21 +29,27 @@ def make_host_mesh(model_axis: int = 1):
 
 
 def parse_mesh_spec(spec: str):
-    """``--mesh DxM`` CLI flags -> a (data, model) mesh.
+    """``--mesh DxM`` / ``--mesh DxMxS`` CLI flags -> a dispatch mesh.
 
-    '8' means (data=8, model=1); '4x2' means (data=4, model=2).  Raises
-    with an actionable message when the host has too few devices (on CPU
-    set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    '8' means (data=8, model=1); '4x2' means (data=4, model=2); a third
+    component adds the context-parallel ``seq`` axis (DESIGN.md §14) —
+    '1x1x2' shards the token axis 2-way for ring attention.  Raises with
+    an actionable message when the host has too few devices (on CPU set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
     parts = spec.lower().replace("×", "x").split("x")
-    if not 1 <= len(parts) <= 2:
-        raise ValueError(f"mesh spec {spec!r}: expected 'D' or 'DxM'")
-    d, m = int(parts[0]), int(parts[1]) if len(parts) == 2 else 1
-    if d < 1 or m < 1:
+    if not 1 <= len(parts) <= 3:
+        raise ValueError(f"mesh spec {spec!r}: expected 'D', 'DxM' or "
+                         f"'DxMxS'")
+    dims = [int(p) for p in parts] + [1] * (3 - len(parts))
+    d, m, s = dims
+    if d < 1 or m < 1 or s < 1:
         raise ValueError(f"mesh spec {spec!r}: axes must be >= 1")
     avail = len(jax.devices())
-    if d * m > avail:
+    if d * m * s > avail:
         raise ValueError(
-            f"mesh {d}x{m} needs {d * m} devices but only {avail} are "
-            f"visible; on CPU set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={d * m}")
+            f"mesh {d}x{m}x{s} needs {d * m * s} devices but only {avail} "
+            f"are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d * m * s}")
+    if len(parts) == 3:
+        return jax.make_mesh((d, m, s), ("data", "model", "seq"))
     return jax.make_mesh((d, m), ("data", "model"))

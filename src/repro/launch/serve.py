@@ -5,9 +5,11 @@ with TimeRipple on, optionally sharded over a device mesh.
 a mixed-shape request stream (several (resolution, steps) buckets),
 logs the resolved attention-dispatch plan per bucket, and reports
 latency.  ``--shape NAME`` pins single-shape traffic instead;
-``--mesh DxM`` (e.g. ``--mesh 4x2``) installs a (data, model) mesh so
-the ripple/reuse-mask pipeline runs under shard_map (DESIGN.md §10) —
-on CPU prefix with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+``--mesh DxMxS`` (e.g. ``--mesh 4x2`` or ``--mesh 1x1x2``) installs a
+(data, model[, seq]) mesh so the ripple/reuse-mask pipeline runs under
+shard_map (DESIGN.md §10); a third component shards the token axis for
+context-parallel ring attention (DESIGN.md §14) — on CPU prefix with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -98,8 +100,13 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                                          noise.shape[0])
             lat, final = ddim_sample(denoise, noise, ddpm, steps,
                                      decision_state=dstate)
-            return lat, {"cache_hits": final.hits.sum(),
-                         "cache_refreshes": final.refreshes.sum()}
+            aux = {"cache_hits": final.hits.sum(),
+                   "cache_refreshes": final.refreshes.sum()}
+            if final.elided is not None:
+                # Ring-path telemetry (DESIGN.md §14): total ring hops
+                # the block map let every seq shard skip this request.
+                aux["ring_elided_hops"] = final.elided.sum()
+            return lat, aux
 
         def denoise(x, t, step):
             return _denoise_call(
@@ -145,9 +152,12 @@ def main(argv=None):
                     help="single-shape traffic from this named shape; "
                          "default: a mixed-shape request stream")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default=None, metavar="DxM",
-                    help="(data, model) mesh, e.g. 8 or 4x2; shards the "
-                         "attention dispatch under shard_map")
+    ap.add_argument("--mesh", default=None, metavar="DxMxS",
+                    help="(data, model[, seq]) mesh, e.g. 8, 4x2 or "
+                         "1x1x2; shards the attention dispatch under "
+                         "shard_map.  A third component shards the token "
+                         "axis for context-parallel ring attention "
+                         "(DESIGN.md §14)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-compiled", type=int, default=8,

@@ -38,15 +38,31 @@ from repro.utils.logging import get_logger
 
 log = get_logger("serve")
 
-# (latent_shape, steps, policy, reuse_every); legacy single-sampler
-# engines use steps=-1 so requests with differing ``steps`` still share
-# the one compiled entry; policy is the reuse-policy name (None = the
-# engine / sampler default), so requests under different sparsity
-# strategies never share a compiled sampler; reuse_every is the
-# decision-cache cadence (DESIGN.md §13; None = the sampler default) —
-# it is baked into the compiled sampler's refresh cond, so mixed-cadence
-# traffic must never share one compiled entry either.
-BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int]]
+# (latent_shape, steps, policy, reuse_every, seq_shards); legacy
+# single-sampler engines use steps=-1 so requests with differing
+# ``steps`` still share the one compiled entry; policy is the
+# reuse-policy name (None = the engine / sampler default), so requests
+# under different sparsity strategies never share a compiled sampler;
+# reuse_every is the decision-cache cadence (DESIGN.md §13; None = the
+# sampler default) — it is baked into the compiled sampler's refresh
+# cond, so mixed-cadence traffic must never share one compiled entry
+# either; seq_shards is the context-parallel degree of the dispatch
+# mesh at bucket time (DESIGN.md §14) — a sampler compiled under a ring
+# mesh runs a different program, so long-video requests route to the
+# context-parallel replica shape and never share a compiled entry with
+# unsharded traffic.
+BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int], int]
+
+
+def _seq_shards() -> int:
+    """Seq-shard degree of the active dispatch mesh (1 = no context
+    parallelism)."""
+    from repro.core import dispatch as dispatch_lib
+
+    mesh = dispatch_lib.active_dispatch_mesh()
+    if mesh is not None and "seq" in mesh.axis_names:
+        return int(mesh.shape["seq"])
+    return 1
 
 
 def _positional_arity(fn: Optional[Callable]) -> int:
@@ -239,7 +255,8 @@ class DiffusionEngine:
         return (shape, -1 if self._legacy else req.steps,
                 req.policy or self.default_policy,
                 req.reuse_every if req.reuse_every is not None
-                else self.default_reuse_every)
+                else self.default_reuse_every,
+                _seq_shards())
 
     def _next_bucket(self) -> Optional[BucketKey]:
         """Hottest (deepest) bucket first — unless some bucket's head
@@ -284,7 +301,7 @@ class DiffusionEngine:
         survives eviction."""
         fn = self._compiled.get(key)
         if fn is None:
-            shape, steps, pol, reuse = key
+            shape, steps, pol, reuse = key[:4]
             args = (shape, steps, pol, reuse)[:min(self._factory_arity, 4)]
             fn = self._factory(*args)
             self._compiled[key] = fn
@@ -328,6 +345,12 @@ class DiffusionEngine:
                         "bucket %s decision cache: %d hits / %d refreshes "
                         "(hit rate %.2f)", key, hits, refr,
                         hits / max(hits + refr, 1))
+                if "ring_elided_hops" in aux:
+                    # Context-parallel telemetry (DESIGN.md §14): ring
+                    # hops the block map let the seq shards skip.
+                    log.info(
+                        "bucket %s ring: %d elided hop(s)", key,
+                        int(jax.device_get(aux["ring_elided_hops"])))
             lat = np.asarray(jax.device_get(lat))
             err = None
         except Exception as e:  # noqa: BLE001 — fail the batch, not the engine

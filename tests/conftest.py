@@ -21,6 +21,18 @@ import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+# The multi-device tier must fail loudly, not silently skip: if the
+# forced-device-count guard above did not engage (an XLA_FLAGS collision
+# already pinned a smaller count, or the flag was ignored), every
+# require_devices() test would skip and CI's tier1-multidevice job would
+# go green while testing nothing.
+if os.environ.get("REPRO_MULTIDEVICE", "") not in ("", "0") \
+        and len(jax.devices()) < 8:
+    raise RuntimeError(
+        f"REPRO_MULTIDEVICE is set but jax sees only "
+        f"{len(jax.devices())} device(s) — the 8-virtual-device guard "
+        f"did not engage (XLA_FLAGS={os.environ.get('XLA_FLAGS', '')!r})")
+
 
 @pytest.fixture
 def multidevice_env():

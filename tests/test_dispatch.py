@@ -128,35 +128,6 @@ class TestBackendEquivalence:
             float(partial_score_savings(pad_q, pad_k)))
 
 
-class TestShimDeprecation:
-    """core.ripple_attention survives only as an out-of-tree shim: no
-    in-repo module imports it, and its one-time warning spells out the
-    exact attention_dispatch replacement call."""
-
-    def test_core_package_does_not_reexport_shim(self):
-        import repro.core as core
-        assert "ripple_attention" not in vars(core) or \
-            not callable(vars(core).get("ripple_attention"))
-
-    def test_shim_warns_with_replacement_signature(self):
-        from repro.core import ripple_attention as shim
-        q, k, v = _qkv(1)
-        shim._deprecation_warned = False
-        with pytest.warns(DeprecationWarning,
-                          match=r"attention_dispatch\(q, k, v, grid=grid"):
-            out = shim.ripple_attention(q, k, v, grid=GRID, cfg=CFG,
-                                        step=jnp.asarray(5), total_steps=10)
-        ref = attention_dispatch(q, k, v, grid=GRID, cfg=CFG,
-                                 step=jnp.asarray(5), total_steps=10,
-                                 backend="reference")
-        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
-        # the message names the resolved backend for these arguments
-        shim._deprecation_warned = False
-        with pytest.warns(DeprecationWarning, match=r"backend='reference'"):
-            shim.ripple_attention(q, k, v, grid=GRID, cfg=CFG,
-                                  step=jnp.asarray(5), total_steps=10)
-
-
 class TestFusedMask:
     """The fused Pallas Δ-check/snap kernel is bit-exact vs the host."""
 

@@ -196,8 +196,9 @@ class TestMixedTrafficConcurrency:
                               max_wait_s=0.01, max_compiled=2)
         eng.start()
         rid = 0
-        # bucket keys carry the policy name and reuse cadence
-        hot = ((2, 2), 2, None, None)
+        # bucket keys carry the policy name, reuse cadence, and the
+        # dispatch mesh's seq-shard degree (1 = no ring)
+        hot = ((2, 2), 2, None, None, 1)
         for round_ in range(3):
             for shape, steps in ((hot[0], hot[1]), ((4, 4), 2), ((8, 8), 2)):
                 eng.submit(GenRequest(request_id=rid, txt=_txt(rid),

@@ -5,9 +5,11 @@ shapes must fall back to replicated execution rather than erroring.
 
 Mesh-parametrized tests skip when the backend has too few devices (the
 CI multi-device job runs them under the forced 8-virtual-device CPU
-backend); the subprocess test at the bottom guarantees the 8-way parity
-check executes on every run of the suite regardless of the parent
-process's device count.
+backend); the subprocess tests at the bottom guarantee the 8-way parity
+checks — batch/head meshes and the context-parallel ring meshes
+(DESIGN.md §14, in-process tier in tests/test_ring_attention.py) —
+execute on every run of the suite regardless of the parent process's
+device count.
 """
 
 import os
@@ -273,3 +275,93 @@ def test_forced_8_device_parity_subprocess(multidevice_env):
                        cwd=os.path.dirname(os.path.dirname(__file__)))
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "sharded parity OK on 8 devices" in r.stdout
+
+
+def test_forced_8_device_ring_subprocess(multidevice_env):
+    """Always-on context-parallel tier (DESIGN.md §14): under a forced
+    8-virtual-device CPU backend, the ring path on a 2x2x2 (batch,
+    heads, seq) mesh and a pure 1x1x8 seq mesh must (a) match the
+    single-device dispatch — bitwise for the snap policies, within the
+    documented svg tolerance — (b) elide ring hops for svg, and (c)
+    replay the per-shard cache leaves bitwise across a refresh."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config.base import RippleConfig
+        from repro.core import decision_cache as dc
+        from repro.core import dispatch
+        from repro.core.dispatch import (attention_dispatch, dispatch_mesh,
+                                         resolve_plan)
+
+        cfg = RippleConfig(enabled=True, theta_min=0.2, theta_max=0.5,
+                           i_min=2, i_max=6)
+
+        def qkv(seed, n):
+            ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+            return tuple(jax.random.normal(k, (2, 2, n, 16)) for k in ks)
+
+        def run(q, k, v, grid, pol, be, c):
+            return np.asarray(attention_dispatch(
+                q, k, v, grid=grid, cfg=c, step=jnp.asarray(5),
+                total_steps=10, policy=pol, backend=be))
+
+        for mesh_shape, grid in (((2, 2, 2), (4, 8, 8)),
+                                 ((1, 1, 8), (8, 8, 8))):
+            n = grid[0] * grid[1] * grid[2]
+            S = mesh_shape[2]
+            mesh = jax.make_mesh(mesh_shape, ("data", "model", "seq"))
+            for pol, be, tol in (("ripple", "reference", 0.0),
+                                 ("equal_mse", "reference", 0.0),
+                                 ("svg", None, 2e-5)):
+                q, k, v = qkv(1, n)
+                dispatch.clear_plan_cache()
+                ref = run(q, k, v, grid, pol, be, cfg)
+                with dispatch_mesh(mesh):
+                    dispatch.clear_plan_cache()
+                    plan = resolve_plan(q.shape, v.shape, cfg, backend=be,
+                                        policy=pol, grid=grid)
+                    assert plan.seq_shards == S, (mesh_shape, pol,
+                                                  plan.summary())
+                    out = run(q, k, v, grid, pol, be, cfg)
+                if tol:
+                    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+                else:
+                    np.testing.assert_array_equal(out, ref)
+
+        # svg ring telemetry + cache replay on the pure seq mesh
+        grid, S = (8, 8, 8), 8
+        n = 512
+        c2 = dataclasses.replace(cfg, reuse_every=2)
+        q, k, v = qkv(2, n)
+        mesh = jax.make_mesh((1, 1, S), ("data", "model", "seq"))
+        outs, caches = {}, {}
+        with dispatch_mesh(mesh):
+            for every in (2, 1):
+                c = dataclasses.replace(cfg, reuse_every=every)
+                dispatch.clear_plan_cache()
+                state = dc.initial_state(q.shape, grid=grid, cfg=c,
+                                         policy="svg", backend="sparse")
+                outs[every], caches[every] = [], []
+                for s in range(3):
+                    out, state = attention_dispatch(
+                        q, k, v, grid=grid, cfg=c, step=jnp.asarray(s),
+                        total_steps=8, policy="svg",
+                        cached_decision=state, return_decision=True)
+                    outs[every].append(np.asarray(out))
+                    caches[every].append(np.asarray(state.bias))
+        elided = np.asarray(state.elided)
+        assert elided.shape == (S,) and elided.sum() > 0, elided
+        # step 1 is a hit at cadence 2, a refresh at cadence 1 — with
+        # identical inputs the outputs and the per-shard bias leaves
+        # must replay bitwise, across the step-2 refresh too
+        for s in range(3):
+            np.testing.assert_array_equal(outs[2][s], outs[1][s])
+            np.testing.assert_array_equal(caches[2][s], caches[1][s])
+        print("ring parity OK on", len(jax.devices()), "devices;",
+              "elided", elided.tolist())
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=multidevice_env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ring parity OK on 8 devices" in r.stdout
