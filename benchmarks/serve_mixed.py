@@ -1,33 +1,51 @@
-"""Mixed-shape serving benchmark — the bucketed continuous-batching
-engine vs the seed-style single-bucket engine.
+"""Mixed-shape serving benchmark — continuous batching, SLO scheduling,
+streaming TTFF, and the multi-replica router (DESIGN.md §10.4, §15).
 
-Traffic: a deterministic round-robin stream over three (resolution,
-steps) buckets on the miniature vDiT.  The bucketed engine serves the
-whole stream from one queue, draining the hottest bucket first; the
-baseline mimics the seed engine by standing up one engine per shape and
-serving the shapes sequentially (the seed engine could only batch one
-(resolution, steps) combination at a time).
+Three sections, all on the miniature vDiT over a deterministic
+round-robin stream across three (resolution, steps) buckets:
 
-Both engines are warmed with one full pass (compiles excluded), then
-timed in steady state.  CPU wall time is relative only (one serial
-device serves every bucket, so head-of-line blocking across buckets
-dominates the shared-queue latency; on a mesh the buckets' sharded
-samplers spread over devices) — the structural headline is the
-utilization proxy and that mixed traffic needs no per-shape engines.
+1. **bucketed vs single** — the bucketed continuous-batching engine vs
+   the seed-style one-engine-per-shape baseline.  The structural
+   headline is the device-utilization proxy (Σ batch compute walltime /
+   stream walltime) and that mixed traffic needs no per-shape engines.
+2. **scheduler policies** — the same deadline-stamped overload trace
+   served under ``hottest`` (pre-SLO drain order) and ``edf``
+   (deadline-aware, DESIGN.md §15.1).  Requests stream chunked latents
+   (``--stream-every``), so **time-to-first-frame** is measured per
+   request next to completion latency; one probe request carries an
+   already-expired deadline so admission control provably sheds it at
+   the door (§15.2) and the shed path stays exercised.
+3. **router** (``--router-replicas N``) — the front-door router over N
+   engine replicas (§15.4) on the same deadline-stamped trace.
+
+Both engines in section 1 are warmed with one full pass (compiles
+excluded), then timed in steady state; sections 2–3 warm the same way,
+which also seeds the admission estimator.  CPU wall time is relative
+only (one serial device serves every bucket).
 
 Reported rows (CSV: name,us_per_call,derived):
   serve_mixed[bucketed_p50/p95]  — per-request latency percentiles (us);
-                                   derived = device-utilization proxy
-                                   (Σ batch compute walltime / stream
-                                   walltime; higher is better)
+                                   derived = utilization proxy
   serve_mixed[single_p50/p95]    — same for the sequential baseline
   serve_mixed[speedup]           — stream walltime ratio (baseline /
                                    bucketed); derived = bucketed stream
                                    walltime in seconds
+  serve_mixed[hottest_p50/p95]   — scheduler-policy latency (us);
+  serve_mixed[edf_p50/p95]         derived = ttff_ms=..;shed_count=..;
+                                   met=..;missed=.. for that policy
+  serve_mixed[router_p50/p95]    — router fleet latency (us); derived
+                                   adds replicas=..;requeued=..
+
+``--json PATH`` additionally writes a BENCH-style record of the rows
+(the same schema ``benchmarks/run.py`` emits), so CI can assert the
+TTFF and shed fields without scraping stdout.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -62,12 +80,47 @@ def _drive(engine, traffic):
     return np.asarray(lat), wall, sum(busy.values())
 
 
-def main() -> None:
-    arch = get_smoke_config("vdit-paper")
-    shapes = mixed_gen_shapes(arch, smoke=True)
-    params = init_params(model_fns(arch), jax.random.PRNGKey(0))
-    traffic = mixed_request_stream(arch, shapes, REQUESTS)
+def _drive_slo(front, traffic, deadline_ms, *, shed_probe=None):
+    """Deadline-stamped pass: every request gets ``now + deadline_ms``
+    at submit; ``shed_probe`` (a spare GenRequest) is submitted with an
+    already-expired deadline so admission provably sheds it.  Returns
+    (latencies, ttffs, met, missed, shed)."""
+    from repro.serving.slo import ShedError
 
+    shed = 0
+    if shed_probe is not None:
+        shed_probe.deadline_s = time.time() - 1.0
+        try:
+            front.submit(shed_probe)
+        except ShedError:
+            shed += 1
+    submit_t = {}
+    for _, req in traffic:
+        req.deadline_s = time.time() + deadline_ms / 1e3
+        submit_t[req.request_id] = time.time()
+        front.submit(req)
+    lat, ttff, met, missed = [], [], 0, 0
+    for _, req in traffic:
+        r = front.result(req.request_id, timeout=600)
+        lat.append(time.time() - submit_t[req.request_id])
+        ttff.append(r.ttff_s)
+        if r.deadline_met:
+            met += 1
+        else:
+            missed += 1
+    return np.asarray(lat), np.asarray(ttff), met, missed, shed
+
+
+def _policy_rows(tag, lat, ttff, met, missed, shed, extra=""):
+    derived = (f"ttff_ms={np.percentile(ttff, 50) * 1e3:.1f};"
+               f"shed_count={shed};met={met};missed={missed}{extra}")
+    return [f"serve_mixed[{tag}_p50],{np.percentile(lat, 50) * 1e6:.0f},"
+            f"{derived}",
+            f"serve_mixed[{tag}_p95],{np.percentile(lat, 95) * 1e6:.0f},"
+            f"{derived}"]
+
+
+def _bucketed_vs_single(arch, shapes, params, traffic, rows):
     from repro.serving.engine import DiffusionEngine
 
     # Bucketed continuous batching: one engine, one queue, all shapes.
@@ -97,17 +150,121 @@ def main() -> None:
 
     b_util = b_busy / max(b_wall, 1e-9)
     s_util = s_busy / max(s_wall, 1e-9)
-    print(f"serve_mixed[bucketed_p50],{np.percentile(b_lat, 50) * 1e6:.0f},"
-          f"{b_util:.3f}")
-    print(f"serve_mixed[bucketed_p95],{np.percentile(b_lat, 95) * 1e6:.0f},"
-          f"{b_util:.3f}")
-    print(f"serve_mixed[single_p50],{np.percentile(s_lat, 50) * 1e6:.0f},"
-          f"{s_util:.3f}")
-    print(f"serve_mixed[single_p95],{np.percentile(s_lat, 95) * 1e6:.0f},"
-          f"{s_util:.3f}")
-    print(f"serve_mixed[speedup],{s_wall / max(b_wall, 1e-9):.2f},"
-          f"{b_wall:.2f}")
+    rows += [
+        f"serve_mixed[bucketed_p50],{np.percentile(b_lat, 50) * 1e6:.0f},"
+        f"{b_util:.3f}",
+        f"serve_mixed[bucketed_p95],{np.percentile(b_lat, 95) * 1e6:.0f},"
+        f"{b_util:.3f}",
+        f"serve_mixed[single_p50],{np.percentile(s_lat, 50) * 1e6:.0f},"
+        f"{s_util:.3f}",
+        f"serve_mixed[single_p95],{np.percentile(s_lat, 95) * 1e6:.0f},"
+        f"{s_util:.3f}",
+        f"serve_mixed[speedup],{s_wall / max(b_wall, 1e-9):.2f},"
+        f"{b_wall:.2f}",
+    ]
+
+
+def _scheduler_section(arch, shapes, params, args, rows):
+    from repro.serving.engine import DiffusionEngine
+
+    factory, _ = make_sampler_factory(arch, shapes, params)
+    for sched in ("hottest", "edf"):
+        traffic = mixed_request_stream(arch, shapes, args.requests,
+                                       stream_every=args.stream_every)
+        probe = mixed_request_stream(arch, shapes, 1, seed=777,
+                                     stream_every=args.stream_every)[0][1]
+        probe.request_id = 10_000
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=4,
+                              max_wait_s=0.02, scheduler=sched)
+        eng.start()
+        _drive(eng, traffic)  # warm compiles + seeds the estimator
+        lat, ttff, met, missed, shed = _drive_slo(
+            eng, traffic, args.deadline_ms, shed_probe=probe)
+        eng.stop()
+        rows += _policy_rows(sched, lat, ttff, met, missed, shed)
+
+
+def _router_section(arch, shapes, params, args, rows):
+    from repro.serving.engine import DiffusionEngine
+    from repro.serving.router import Router
+
+    factory, _ = make_sampler_factory(arch, shapes, params)
+    router = Router([
+        DiffusionEngine(sampler_factory=factory, max_batch=4,
+                        max_wait_s=0.02)
+        for _ in range(args.router_replicas)])
+    router.start()
+    traffic = mixed_request_stream(arch, shapes, args.requests,
+                                   stream_every=args.stream_every)
+    # two warm passes so every replica the balancer touches has
+    # compiled samplers before the timed pass
+    _drive(router, traffic)
+    _drive(router, traffic)
+    probe = mixed_request_stream(arch, shapes, 1, seed=778,
+                                 stream_every=args.stream_every)[0][1]
+    probe.request_id = 10_001
+    lat, ttff, met, missed, shed = _drive_slo(
+        router, traffic, args.deadline_ms, shed_probe=probe)
+    m = router.metrics()
+    router.stop()
+    # ``shed`` (the probe, counted at submit) already equals the
+    # router's fleet-wide shed counter — don't double-count it.
+    rows += _policy_rows(
+        "router", lat, ttff, met, missed, shed,
+        extra=f";replicas={args.router_replicas};"
+              f"requeued={m['router_requeued']}")
+
+
+def main(argv=()) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=REQUESTS)
+    ap.add_argument("--deadline-ms", type=float, default=2000.0,
+                    help="relative SLO stamped on every request at "
+                         "submit in the scheduler/router sections")
+    ap.add_argument("--stream-every", type=int, default=1, metavar="K",
+                    help="chunked streaming cadence for the SLO "
+                         "sections (TTFF is measured per chunk)")
+    ap.add_argument("--router-replicas", type=int, default=0, metavar="N",
+                    help="also run the Router section over N engine "
+                         "replicas (0 = skip)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH-style record of the rows")
+    args = ap.parse_args(list(argv))
+
+    arch = get_smoke_config("vdit-paper")
+    shapes = mixed_gen_shapes(arch, smoke=True)
+    params = init_params(model_fns(arch), jax.random.PRNGKey(0))
+    traffic = mixed_request_stream(arch, shapes, args.requests)
+
+    t0 = time.perf_counter()
+    rows = []
+    _bucketed_vs_single(arch, shapes, params, traffic, rows)
+    _scheduler_section(arch, shapes, params, args, rows)
+    if args.router_replicas > 0:
+        _router_section(arch, shapes, params, args, rows)
+
+    for row in rows:
+        print(row)
+
+    if args.json:
+        from benchmarks.run import _parse_rows
+
+        record = {
+            "schema": "repro-bench/1",
+            "created_unix": round(time.time(), 3),
+            "args": {"requests": args.requests,
+                     "deadline_ms": args.deadline_ms,
+                     "stream_every": args.stream_every,
+                     "router_replicas": args.router_replicas},
+            "walltime_s": round(time.perf_counter() - t0, 3),
+            "benchmarks": _parse_rows("\n".join(rows)),
+            "failures": [],
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -34,14 +34,30 @@ def ddim_sample(
     eta: float = 0.0,
     rng: Optional[jax.Array] = None,
     decision_state=None,
+    step_offset=0,
+    total_steps: Optional[int] = None,
 ):
     """DDIM sampler. denoise_fn(x, t_int (B,), step_idx) -> eps.
 
     With ``decision_state`` the model's decision cache rides the scan
     carry (``denoise_fn(x, t, step, state) -> (eps, state)``) and the
-    sampler returns ``(x, final_state)``."""
+    sampler returns ``(x, final_state)``.
+
+    Chunked execution (streaming delivery, DESIGN.md §15.3): pass
+    ``total_steps=T`` (the full schedule length) and run the scan in
+    slices — ``step_offset`` steps already done, ``num_steps`` to run
+    now — feeding each chunk's output ``x`` (and decision state) into
+    the next chunk's input.  The per-step math is identical to the
+    monolithic call: the timestep table is built from ``total_steps``
+    and the body indexes it by absolute step, so chaining chunks
+    reproduces the single-scan result exactly.  ``step_offset`` may be
+    a traced int32 scalar, letting one compiled chunk serve every
+    offset.  The deterministic path (``rng=None``, the serving default)
+    carries no cross-chunk RNG; chunked stochastic sampling (``eta >
+    0``) needs the caller to split a fresh key per chunk."""
+    total = num_steps if total_steps is None else total_steps
     T = schedule.num_train_steps
-    ts = jnp.linspace(T - 1, 0, num_steps).astype(jnp.int32)
+    ts = jnp.linspace(T - 1, 0, total).astype(jnp.int32)
     alpha_bars = schedule.alpha_bars()
     B = x_T.shape[0]
     bshape = (-1,) + (1,) * (x_T.ndim - 1)
@@ -49,8 +65,8 @@ def ddim_sample(
     def body(carry, si):
         x, rng, dstate = carry
         t = ts[si]
-        t_prev = jnp.where(si + 1 < num_steps, ts[jnp.minimum(si + 1,
-                                                              num_steps - 1)], -1)
+        t_prev = jnp.where(si + 1 < total, ts[jnp.minimum(si + 1,
+                                                          total - 1)], -1)
         ab_t = alpha_bars[t]
         ab_prev = jnp.where(t_prev >= 0, alpha_bars[jnp.maximum(t_prev, 0)], 1.0)
         if dstate is None:
@@ -72,7 +88,7 @@ def ddim_sample(
     (x, _, dstate), _ = jax.lax.scan(
         body, (x_T, rng if rng is not None else jax.random.PRNGKey(0),
                decision_state),
-        jnp.arange(num_steps))
+        jnp.arange(num_steps) + step_offset)
     if decision_state is not None:
         return x, dstate
     return x
@@ -85,15 +101,20 @@ def euler_flow_sample(
     *,
     schedule: Optional[RectifiedFlowSchedule] = None,
     decision_state=None,
+    step_offset=0,
+    total_steps: Optional[int] = None,
 ):
     """Euler ODE integration of rectified flow from t=1 (noise) to t=0.
     denoise_fn(x, t_cont (B,), step_idx) -> velocity (noise - x0).
 
     With ``decision_state`` the model's decision cache rides the scan
     carry (``denoise_fn(x, t, step, state) -> (v, state)``) and the
-    sampler returns ``(x, final_state)``."""
+    sampler returns ``(x, final_state)``.  ``step_offset`` /
+    ``total_steps`` slice the integration for chunked streaming exactly
+    as in :func:`ddim_sample`."""
+    total = num_steps if total_steps is None else total_steps
     B = x_T.shape[0]
-    ts = jnp.linspace(1.0, 0.0, num_steps + 1)
+    ts = jnp.linspace(1.0, 0.0, total + 1)
 
     def body(carry, si):
         x, dstate = carry
@@ -105,7 +126,7 @@ def euler_flow_sample(
         return (x + (t_next - t) * v, dstate), None
 
     (x, dstate), _ = jax.lax.scan(body, (x_T, decision_state),
-                                  jnp.arange(num_steps))
+                                  jnp.arange(num_steps) + step_offset)
     if decision_state is not None:
         return x, dstate
     return x

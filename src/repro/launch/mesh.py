@@ -21,6 +21,40 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def init_distributed(coordinator_address=None, num_processes=None,
+                     process_id=None) -> bool:
+    """Multi-host ``jax.distributed`` init for the serving fleet
+    (DESIGN.md §15.4), gated behind the launcher's ``--distributed``
+    flag.
+
+    The Levanter idiom (SNIPPETS.md §1): initialize the cross-host
+    runtime exactly once, *before* any call that touches jax device
+    state, then build meshes over ``jax.devices()`` — which now spans
+    every host — and let ``multihost_utils`` / shard_map handle the
+    rest.  Arguments default to None so single-binary cloud launchers
+    (GKE/TPU pods) can rely on jax's environment auto-detection; on
+    bare hosts pass all three explicitly.  Returns True when the
+    runtime was initialized, False when it already was (idempotent —
+    a router restart must not re-init).
+    """
+    global _distributed_initialized
+    if _distributed_initialized or jax.process_count() > 1:
+        return False  # already initialized by an earlier caller
+    kwargs = {}
+    if coordinator_address is not None:
+        kwargs["coordinator_address"] = coordinator_address
+    if num_processes is not None:
+        kwargs["num_processes"] = num_processes
+    if process_id is not None:
+        kwargs["process_id"] = process_id
+    jax.distributed.initialize(**kwargs)
+    _distributed_initialized = True
+    return True
+
+
+_distributed_initialized = False
+
+
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import importlib
 import time
 
@@ -36,13 +37,14 @@ from repro.launch.workloads import (_denoise_call, attention_plan,
 from repro.distributed.sharding import NULL_CTX
 from repro.models.params import init_params
 from repro.serving.engine import DiffusionEngine
+from repro.serving.slo import ShedError
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
 
 
 def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
-                  reuse_every=None):
+                  reuse_every=None, stream_every=None):
     """Returns sample_fn(noise, txt, rngs) -> latents (or ``(latents,
     aux)`` with decision-cache telemetry) and the latent shape.
     ``rngs`` is the engine's (B, 2) per-request key batch: the initial
@@ -53,7 +55,16 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
     ``reuse_every`` its decision-cache cadence (DESIGN.md §13) — with a
     cadence > 1 (or the drift guard on) on a cache-capable vdit config,
     the per-layer decision state is threaded through the sampler's scan
-    and the reuse decision is only recomputed on refresh steps."""
+    and the reuse decision is only recomputed on refresh steps.
+
+    ``stream_every=K`` returns a *generator* sample_fn instead: the
+    denoising scan runs in jitted K-step chunks (the samplers'
+    ``step_offset``/``total_steps`` slicing, bitwise-identical math to
+    the monolithic scan) and each chunk's latents are yielded as they
+    land, so the engine can deliver intermediate frames and measure
+    time-to-first-frame (DESIGN.md §15.3).  The decision-cache state
+    crosses chunks through the generator's loop carry, so the cadence
+    and drift guard behave exactly as in one scan."""
     if policy:
         arch = dataclasses.replace(
             arch, ripple=dataclasses.replace(arch.ripple, policy=policy))
@@ -84,6 +95,54 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
         if fam == "unet":
             return {"ctx": txt}
         return {"txt": txt}
+
+    if stream_every:
+        K = max(int(stream_every), 1)
+
+        @functools.partial(jax.jit, static_argnames=("count",))
+        def chunk_fn(x, txt, rngs, step0, dstate, *, count):
+            cond = make_cond(txt, rngs)
+            if thread_cache:
+                def denoise(x, t, step, ds):
+                    out, ds = _denoise_call(
+                        arch, params, x, t, cond, step, steps, NULL_CTX,
+                        use_ripple=use_ripple, dstate=ds)
+                    return out.astype(x.dtype), ds
+                return ddim_sample(denoise, x, ddpm, count,
+                                   decision_state=dstate,
+                                   step_offset=step0, total_steps=steps)
+
+            def denoise(x, t, step):
+                return _denoise_call(
+                    arch, params, x, t, cond, step, steps, NULL_CTX,
+                    use_ripple=use_ripple).astype(x.dtype)
+
+            if fam == "mmdit":
+                return euler_flow_sample(denoise, x, count,
+                                         step_offset=step0,
+                                         total_steps=steps), None
+            return ddim_sample(denoise, x, ddpm, count, step_offset=step0,
+                               total_steps=steps), None
+
+        def sample_fn(noise, txt, rngs):
+            dstate = (vdit_decision_state(arch, shape.img_res,
+                                          noise.shape[0])
+                      if thread_cache else None)
+            x = noise
+            for s0 in range(0, steps, K):
+                count = min(K, steps - s0)
+                x, dstate = chunk_fn(x, txt, rngs,
+                                     jnp.asarray(s0, jnp.int32), dstate,
+                                     count=count)
+                aux = {}
+                if dstate is not None:
+                    aux = {"cache_hits": dstate.hits.sum(),
+                           "cache_refreshes": dstate.refreshes.sum()}
+                    if dstate.elided is not None:
+                        aux["ring_elided_hops"] = dstate.elided.sum()
+                yield x, aux
+
+        return sample_fn, lat_shape
 
     @jax.jit
     def sample_fn(noise, txt, rngs):
@@ -123,19 +182,22 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
 def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
                          mesh=None):
     """(engine sampler_factory, plan_fn) over a set of generate cells,
-    keyed by the engine's (latent_shape, steps, policy, reuse_every)
-    bucket identity.  The engine hands both callables the bucket's
-    reuse-policy name (None = the arch config's ``ripple.policy``) and
-    the factory additionally its decision-cache cadence (None = the
-    config's ``ripple.reuse_every``)."""
+    keyed by the engine's (latent_shape, steps, policy, reuse_every,
+    stream_every) bucket identity.  The engine hands both callables the
+    bucket's reuse-policy name (None = the arch config's
+    ``ripple.policy``) and the factory additionally its decision-cache
+    cadence (None = the config's ``ripple.reuse_every``) and streaming
+    cadence (None = monolithic delivery, DESIGN.md §15.3)."""
     by_bucket = {}
     for sp in shapes:
         by_bucket[(tuple(latent_shape_for(arch, sp)), sp.steps)] = sp
 
-    def factory(latent_shape, steps, policy=None, reuse_every=None):
+    def factory(latent_shape, steps, policy=None, reuse_every=None,
+                stream_every=None):
         sp = by_bucket[(tuple(latent_shape), steps)]
         fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple,
-                              policy=policy, reuse_every=reuse_every)
+                              policy=policy, reuse_every=reuse_every,
+                              stream_every=stream_every)
         return fn
 
     def plan_fn(latent_shape, steps, policy=None):
@@ -162,6 +224,31 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-compiled", type=int, default=8,
                     help="bounded LRU of per-bucket compiled samplers")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="serve through a Router over N in-process "
+                         "engine replicas (DESIGN.md §15.4): least-"
+                         "loaded balancing, failover requeue")
+    ap.add_argument("--scheduler", default="edf",
+                    choices=("edf", "hottest"),
+                    help="bucket drain policy (DESIGN.md §15.1): "
+                         "deadline-aware EDF (default) or the pre-SLO "
+                         "hottest-bucket-first")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="stamp every request with a deadline of now+MS "
+                         "at submit; infeasible requests are shed at "
+                         "the door (DESIGN.md §15.2)")
+    ap.add_argument("--stream-every", type=int, default=None, metavar="K",
+                    help="chunked streaming delivery: yield decoded "
+                         "latents every K denoising steps and report "
+                         "time-to-first-frame (DESIGN.md §15.3)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed before touching "
+                         "devices (multi-host fleet, DESIGN.md §15.4); "
+                         "reads --coordinator/--num-processes/"
+                         "--process-id")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     ap.add_argument("--no-ripple", action="store_true")
     ap.add_argument("--policy", default=None,
                     help="reuse-policy name for every request (built-ins: "
@@ -191,6 +278,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
+
+    if args.distributed:
+        from repro.launch.mesh import init_distributed
+
+        init_distributed(coordinator_address=args.coordinator,
+                         num_processes=args.num_processes,
+                         process_id=args.process_id)
 
     if args.policy_module:
         importlib.import_module(args.policy_module)
@@ -227,27 +321,52 @@ def main(argv=None):
     factory, plan_fn = make_sampler_factory(
         arch, shapes, params, use_ripple=not args.no_ripple, mesh=mesh)
 
-    engine = DiffusionEngine(sampler_factory=factory,
-                             max_batch=args.max_batch,
-                             max_compiled=args.max_compiled,
-                             plan_fn=plan_fn,
-                             default_policy=args.policy,
-                             default_reuse_every=args.reuse_every)
-    engine.start()
+    def make_engine():
+        return DiffusionEngine(sampler_factory=factory,
+                               max_batch=args.max_batch,
+                               max_compiled=args.max_compiled,
+                               plan_fn=plan_fn,
+                               default_policy=args.policy,
+                               default_reuse_every=args.reuse_every,
+                               scheduler=args.scheduler)
+
+    if args.replicas > 1:
+        from repro.serving.router import Router
+
+        front = Router([make_engine() for _ in range(args.replicas)])
+    else:
+        front = make_engine()
+    front.start()
     traffic = mixed_request_stream(arch, shapes, args.requests,
                                    seed=args.seed, policy=args.policy,
-                                   reuse_every=args.reuse_every)
+                                   reuse_every=args.reuse_every,
+                                   stream_every=args.stream_every)
     t0 = time.time()
-    for _, req in traffic:
-        engine.submit(req)
+    shed = 0
+    submitted = []
     for sp, req in traffic:
-        r = engine.result(req.request_id)
-        log.info("request %d (%s, %d steps) done in %.2fs; latents %s",
+        if args.deadline_ms is not None:
+            req.deadline_s = time.time() + args.deadline_ms / 1e3
+        try:
+            front.submit(req)
+        except ShedError as e:
+            shed += 1
+            log.warning("%s", e)
+            continue
+        submitted.append((sp, req))
+    for sp, req in submitted:
+        r = front.result(req.request_id)
+        log.info("request %d (%s, %d steps) done in %.2fs "
+                 "(ttff %.3fs%s); latents %s",
                  req.request_id, sp.name, sp.steps, r.walltime_s,
+                 r.ttff_s,
+                 "" if r.deadline_met is None
+                 else f", deadline {'met' if r.deadline_met else 'MISSED'}",
                  r.latents.shape)
-    engine.stop()
-    log.info("served %d requests over %d bucket(s) in %.2fs total",
-             args.requests, len(shapes), time.time() - t0)
+    front.stop()
+    log.info("served %d/%d requests (%d shed) over %d bucket(s) "
+             "in %.2fs total", len(submitted), args.requests, shed,
+             len(shapes), time.time() - t0)
 
 
 if __name__ == "__main__":

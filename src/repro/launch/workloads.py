@@ -532,12 +532,16 @@ def mixed_gen_shapes(arch: ArchConfig, *, smoke: bool = False,
 
 def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
                          seed: int = 0, policy: Optional[str] = None,
-                         reuse_every: Optional[int] = None):
+                         reuse_every: Optional[int] = None,
+                         stream_every: Optional[int] = None):
     """Round-robin (ShapeSpec, GenRequest) traffic over ``shapes`` with
     deterministic per-request text embeddings and seeds.  ``policy``
     stamps every request with that reuse-policy name, ``reuse_every``
-    with that decision-cache cadence (each its own engine bucket
-    dimension)."""
+    with that decision-cache cadence, ``stream_every`` with that
+    chunked-streaming cadence (each its own engine bucket dimension).
+    Deadlines are *not* stamped here — an SLO is relative to submit
+    time, so callers stamp ``deadline_s`` when they actually submit
+    (``launch.serve``, ``benchmarks.serve_mixed``)."""
     from repro.serving.engine import GenRequest
 
     m = arch.model
@@ -551,7 +555,7 @@ def mixed_request_stream(arch: ArchConfig, shapes, num_requests: int,
         out.append((sp, GenRequest(
             request_id=i, txt=txt, steps=sp.steps, seed=seed + i,
             latent_shape=latent_shape_for(arch, sp), policy=policy,
-            reuse_every=reuse_every)))
+            reuse_every=reuse_every, stream_every=stream_every)))
     return out
 
 

@@ -2,20 +2,34 @@
 
 DiffusionEngine: shape-bucketed continuous batching for text-to-image /
 video generation.  Requests are keyed into a **bucket** by
-``(latent_shape, steps)``; the batcher drains whichever bucket is
-hottest (deepest queue) so heterogeneous traffic never pads or mixes
-shapes inside one sampler invocation.  Each bucket owns a jitted
-(optionally mesh-sharded) sampler obtained from ``sampler_factory`` and
-held in a bounded LRU of compiled entries — the hottest bucket's sampler
-always survives eviction.  Per-request PRNG keys are threaded through
-``sample_fn`` as a full ``(B, 2)`` key batch (vmap inside the sampler),
-so requests in one batch never share sampler randomness.  TimeRipple's
-reuse schedule is stateless per denoising step (no KV-style cache,
-paper Tbl. 2), which is what makes this continuous batching safe: a
-bucket switch carries zero eviction cost.  Attention inside the sampler
-routes through ``core.dispatch.attention_dispatch`` (DESIGN.md §8, §10);
-``plan_fn`` lets the launcher log the resolved
+``(latent_shape, steps, policy, reuse_every, seq_shards, txt_shape,
+stream_every)``; the batcher drains buckets under an SLO-aware policy
+(DESIGN.md §15): starvation aging first, then earliest-feasible-deadline
+over deadline-carrying heads (EDF), then hottest (deepest) bucket for
+deadline-less traffic — so heterogeneous traffic never pads or mixes
+shapes inside one sampler invocation and tight SLOs are not stuck
+behind deep hot buckets.  Admission control sheds requests at submit
+time when they *provably* cannot meet their deadline
+(:func:`repro.serving.slo.admission_decision`); shed requests cost zero
+compute.  Each bucket owns a jitted (optionally mesh-sharded) sampler
+obtained from ``sampler_factory`` and held in a bounded LRU of compiled
+entries — the hottest bucket's sampler always survives eviction.
+Per-request PRNG keys are threaded through ``sample_fn`` as a full
+``(B, 2)`` key batch (vmap inside the sampler), so requests in one
+batch never share sampler randomness.  TimeRipple's reuse schedule is
+stateless per denoising step (no KV-style cache, paper Tbl. 2), which
+is what makes this continuous batching safe: a bucket switch carries
+zero eviction cost.  Attention inside the sampler routes through
+``core.dispatch.attention_dispatch`` (DESIGN.md §8, §10); ``plan_fn``
+lets the launcher log the resolved
 :class:`~repro.core.dispatch.DispatchPlan` per bucket at first compile.
+
+Streaming (DESIGN.md §15.3): a sampler factory that honours
+``stream_every`` returns a *generator* sample_fn yielding intermediate
+latents every K denoising steps; the engine publishes each chunk to
+:meth:`DiffusionEngine.stream` subscribers as it lands and records
+time-to-first-frame (``GenResult.ttff_s``, measured from submit) as a
+first-class latency metric next to completion time.
 
 LMEngine: KV-cache prefill + decode loop (used by the decode_32k /
 long_500k shape cells and the LM serving example).
@@ -28,30 +42,38 @@ import inspect
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import slo as slo_lib
+from repro.serving.slo import ServiceEstimator, ShedError
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
 
-# (latent_shape, steps, policy, reuse_every, seq_shards); legacy
-# single-sampler engines use steps=-1 so requests with differing
-# ``steps`` still share the one compiled entry; policy is the
-# reuse-policy name (None = the engine / sampler default), so requests
-# under different sparsity strategies never share a compiled sampler;
-# reuse_every is the decision-cache cadence (DESIGN.md §13; None = the
-# sampler default) — it is baked into the compiled sampler's refresh
-# cond, so mixed-cadence traffic must never share one compiled entry
-# either; seq_shards is the context-parallel degree of the dispatch
-# mesh at bucket time (DESIGN.md §14) — a sampler compiled under a ring
-# mesh runs a different program, so long-video requests route to the
-# context-parallel replica shape and never share a compiled entry with
-# unsharded traffic.
-BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int], int]
+# (latent_shape, steps, policy, reuse_every, seq_shards, txt_shape,
+# stream_every); legacy single-sampler engines use steps=-1 so requests
+# with differing ``steps`` still share the one compiled entry; policy is
+# the reuse-policy name (None = the engine / sampler default), so
+# requests under different sparsity strategies never share a compiled
+# sampler; reuse_every is the decision-cache cadence (DESIGN.md §13;
+# None = the sampler default) — it is baked into the compiled sampler's
+# refresh cond, so mixed-cadence traffic must never share one compiled
+# entry either; seq_shards is the context-parallel degree of the
+# dispatch mesh at *submit* time (DESIGN.md §14) — a sampler compiled
+# under a ring mesh runs a different program, so long-video requests
+# route to the context-parallel replica shape and never share a
+# compiled entry with unsharded traffic (and the mesh must not change
+# while traffic is queued, §15.4); txt_shape is the text-embedding
+# shape — two requests with different prompt lengths L can never stack
+# into one ``(B, L, D)`` batch, so L is bucket identity, not a
+# stack-time crash; stream_every is the chunked-delivery cadence
+# (None = monolithic) — it changes the compiled chunk program.
+BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int], int,
+                  Tuple[int, ...], Optional[int]]
 
 
 def _seq_shards() -> int:
@@ -68,11 +90,12 @@ def _seq_shards() -> int:
 def _positional_arity(fn: Optional[Callable]) -> int:
     """How many positional arguments ``fn`` accepts.  Legacy
     two-argument factories / plan_fns keep working unchanged;
-    policy-aware ones take a third, cadence-aware ones a fourth.  A
-    ``*args`` factory counts as 3 — exactly what such factories have
-    received since the policy seam landed — so pre-cadence var-positional
-    factories keep unpacking (shape, steps, policy); declare a fourth
-    named parameter to opt into the cadence."""
+    policy-aware ones take a third, cadence-aware ones a fourth,
+    streaming-aware ones a fifth.  A ``*args`` factory counts as 3 —
+    exactly what such factories have received since the policy seam
+    landed — so pre-cadence var-positional factories keep unpacking
+    (shape, steps, policy); declare further named parameters to opt
+    into the cadence / streaming arguments."""
     if fn is None:
         return 0
     try:
@@ -106,6 +129,14 @@ class GenRequest:
     # DESIGN.md §13); None -> the engine default.  Part of the bucket
     # identity — the cadence is compiled into the sampler's refresh cond.
     reuse_every: Optional[int] = None
+    # Absolute wall-clock deadline (time.time() seconds; DESIGN.md §15).
+    # None -> no SLO: never shed, scheduled behind deadline traffic by
+    # depth.  Callers with relative SLOs stamp time.time() + slo_ms/1e3.
+    deadline_s: Optional[float] = None
+    # Chunked streaming cadence: deliver intermediate latents every K
+    # denoising steps through DiffusionEngine.stream (§15.3).  None ->
+    # monolithic delivery.  Part of the bucket identity.
+    stream_every: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -115,23 +146,35 @@ class GenResult:
     walltime_s: float
     error: Optional[str] = None
     batch_index: int = -1  # which sampler invocation served this request
+    # Time-to-first-frame, measured from submit: first streamed chunk
+    # for streaming buckets, completion for monolithic ones (§15.3).
+    ttff_s: float = -1.0
+    # Deadline outcome (None = the request carried no deadline).
+    deadline_met: Optional[bool] = None
 
 
 class DiffusionEngine:
     """Continuous-batching engine over bucketed samplers.
 
-    ``sampler_factory(latent_shape, steps[, policy[, reuse_every]]) ->
-    sample_fn`` builds (and jits) the sampler for one bucket;
-    ``sample_fn(latents0, txt, rngs)`` takes a ``(B, 2)`` uint32 batch
-    of per-request PRNG keys and returns latents or ``(latents, aux)``
-    with decision-cache telemetry.  Factories (and ``plan_fn``) that
-    accept a third positional argument receive the bucket's reuse-policy
-    name (``GenRequest.policy`` / ``default_policy``); a fourth receives
-    the decision-cache cadence (``GenRequest.reuse_every`` /
-    ``default_reuse_every``, DESIGN.md §13).  Two-argument factories
-    keep working.  The legacy single-sampler form
-    ``DiffusionEngine(sample_fn, latent_shape)`` is still accepted:
-    every request then lands in one default bucket.
+    ``sampler_factory(latent_shape, steps[, policy[, reuse_every[,
+    stream_every]]]) -> sample_fn`` builds (and jits) the sampler for
+    one bucket; ``sample_fn(latents0, txt, rngs)`` takes a ``(B, 2)``
+    uint32 batch of per-request PRNG keys and returns latents or
+    ``(latents, aux)`` with decision-cache telemetry — or, for
+    streaming buckets, a *generator* yielding those per chunk.
+    Factories (and ``plan_fn``) that accept a third positional argument
+    receive the bucket's reuse-policy name (``GenRequest.policy`` /
+    ``default_policy``); a fourth receives the decision-cache cadence
+    (``GenRequest.reuse_every`` / ``default_reuse_every``, DESIGN.md
+    §13); a fifth the streaming cadence (``GenRequest.stream_every``).
+    Two-argument factories keep working.  The legacy single-sampler
+    form ``DiffusionEngine(sample_fn, latent_shape)`` is still
+    accepted: every request then lands in one default bucket.
+
+    ``scheduler`` picks the drain policy (``"edf"`` default,
+    ``"hottest"`` for the pre-SLO behaviour); ``admission_control``
+    sheds provably-infeasible requests at submit with
+    :class:`~repro.serving.slo.ShedError` (DESIGN.md §15.2).
     """
 
     def __init__(self, sample_fn: Optional[Callable] = None,
@@ -142,7 +185,13 @@ class DiffusionEngine:
                  attn_plan: Optional[Any] = None,
                  plan_fn: Optional[Callable] = None,
                  default_policy: Optional[str] = None,
-                 default_reuse_every: Optional[int] = None):
+                 default_reuse_every: Optional[int] = None,
+                 scheduler: str = "edf",
+                 admission_control: bool = True,
+                 error_ttl_s: float = 60.0,
+                 estimator: Optional[ServiceEstimator] = None):
+        if scheduler not in ("edf", "hottest"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         if sampler_factory is None:
             if sample_fn is None:
                 raise ValueError("need sample_fn or sampler_factory")
@@ -151,6 +200,7 @@ class DiffusionEngine:
         self._factory_arity = _positional_arity(sampler_factory)
         self._factory_takes_policy = self._factory_arity >= 3
         self._factory_takes_reuse = self._factory_arity >= 4
+        self._factory_takes_stream = self._factory_arity >= 5
         self._plan_fn_takes_policy = _takes_policy(plan_fn)
         self._legacy = sample_fn is not None
         if default_policy is not None and not self._factory_takes_policy:
@@ -168,13 +218,28 @@ class DiffusionEngine:
         self.max_wait_s = max_wait_s
         self.max_compiled = max_compiled
         self.starve_after_s = starve_after_s
+        self.scheduler = scheduler
+        self.admission_control = admission_control
+        self.error_ttl_s = error_ttl_s
+        self.estimator = estimator if estimator is not None \
+            else ServiceEstimator()
         self.attn_plan = attn_plan  # DispatchPlan metadata (or None)
         self.plan_fn = plan_fn      # (latent_shape, steps) -> DispatchPlan
-        # bucket deques hold (enqueue_time, request) for starvation aging
+        # bucket deques hold (enqueue_time, request) for starvation
+        # aging, deadline lookup, and TTFF accounting
         self._buckets: Dict[BucketKey, deque] = {}
         self._compiled: "OrderedDict[BucketKey, Callable]" = OrderedDict()
         self._results: Dict[int, GenResult] = {}
+        # errored results stay retrievable until their TTL so a caller
+        # retrying after TimeoutError sees the original batch error —
+        # rid -> eviction time (DESIGN.md §15.2)
+        self._error_expiry: Dict[int, float] = {}
+        # streaming chunks: rid -> [np latents per delivered chunk]
+        self._partials: Dict[int, List[np.ndarray]] = {}
         self._batches_served = 0
+        self.shed_count = 0
+        self.deadlines_met = 0
+        self.deadlines_missed = 0
         self._lock = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -201,13 +266,26 @@ class DiffusionEngine:
                     for _, r in dq:
                         self._results[r.request_id] = GenResult(
                             r.request_id, None, 0.0, error="engine stopped")
+                        self._error_expiry[r.request_id] = (
+                            time.time() + self.error_ttl_s)
                 self._buckets.clear()
             self._lock.notify_all()
         if self._thread:
             self._thread.join()
             self._thread = None
 
+    def healthy(self) -> bool:
+        """Is the batcher thread alive and accepting work?"""
+        with self._lock:
+            stopped = self._stop
+        return (not stopped and self._thread is not None
+                and self._thread.is_alive())
+
     def submit(self, req: GenRequest):
+        """Enqueue one request.  Raises
+        :class:`~repro.serving.slo.ShedError` when admission control
+        proves the request's deadline cannot be met under the current
+        queue depth (shed at the door — zero compute spent)."""
         if req.policy is not None and not self._factory_takes_policy:
             # Silently serving the default strategy while the bucket key
             # pretends otherwise would be worse than refusing.
@@ -220,30 +298,110 @@ class DiffusionEngine:
                 f"request {req.request_id} sets "
                 f"reuse_every={req.reuse_every!r} but this engine's "
                 "sampler factory does not take a reuse_every argument")
+        if req.stream_every is not None and not self._factory_takes_stream:
+            raise ValueError(
+                f"request {req.request_id} sets "
+                f"stream_every={req.stream_every!r} but this engine's "
+                "sampler factory does not take a stream_every argument")
         key = self._bucket_key(req)
+        now = time.time()
         with self._lock:
             if self._stop:
                 raise RuntimeError("engine is stopped")
-            self._buckets.setdefault(key, deque()).append((time.time(), req))
+            if self.admission_control and req.deadline_s is not None:
+                dq = self._buckets.get(key)
+                reason = slo_lib.admission_decision(
+                    req.deadline_s, now, len(dq) if dq else 0,
+                    self.max_batch, self.estimator.lower_bound(key))
+                if reason is not None:
+                    self.shed_count += 1
+                    raise ShedError(
+                        f"request {req.request_id} shed: {reason}")
+            self._buckets.setdefault(key, deque()).append((now, req))
             self._lock.notify_all()
 
     def result(self, request_id: int, timeout: float = 300.0) -> GenResult:
         deadline = time.time() + timeout
         with self._lock:
+            self._evict_expired_errors_locked()
             while request_id not in self._results:
-                if not self._lock.wait(timeout=deadline - time.time()):
+                remaining = deadline - time.time()
+                # Clamp: a spurious wakeup near the deadline used to
+                # hand Condition.wait a negative timeout.  Re-check the
+                # dict after every wakeup so a result landing exactly at
+                # the deadline is returned, not reported as a timeout.
+                if remaining <= 0:
                     raise TimeoutError(f"request {request_id}")
-            res = self._results.pop(request_id)
+                self._lock.wait(timeout=remaining)
+            res = self._results[request_id]
+            if res.error is None:
+                self._results.pop(request_id)
+            else:
+                # Keep errored results retrievable until their TTL so a
+                # caller that catches TimeoutError and retries gets the
+                # original batch error, not a misleading second timeout.
+                self._error_expiry.setdefault(
+                    request_id, time.time() + self.error_ttl_s)
+            self._partials.pop(request_id, None)
         if res.error is not None:
             raise RuntimeError(
                 f"request {request_id} failed: {res.error}")
         return res
 
+    def peek_result(self, request_id: int) -> Optional[GenResult]:
+        """Non-blocking, non-consuming result lookup (router failover
+        uses this to tell served from lost requests, §15.4)."""
+        with self._lock:
+            return self._results.get(request_id)
+
+    def stream(self, request_id: int,
+               timeout: float = 300.0) -> Iterator[np.ndarray]:
+        """Yield intermediate latents for a streaming request as chunks
+        land (one array per delivered chunk, in order), terminating when
+        the final result is available — fetch it with :meth:`result`.
+        Raises TimeoutError if no progress arrives within ``timeout``
+        of the previous chunk."""
+        idx = 0
+        while True:
+            chunk = None
+            deadline = time.time() + timeout
+            with self._lock:
+                while True:
+                    chunks = self._partials.get(request_id, ())
+                    if len(chunks) > idx:
+                        chunk = chunks[idx]
+                        idx += 1
+                        break
+                    if request_id in self._results:
+                        return
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"request {request_id} stream stalled")
+                    self._lock.wait(timeout=remaining)
+            yield chunk  # outside the lock
+
     def pending(self) -> int:
         with self._lock:
             return sum(len(dq) for dq in self._buckets.values())
 
+    def metrics(self) -> Dict[str, int]:
+        """Serving counters (DESIGN.md §15): batches served, admission
+        sheds, deadline outcomes."""
+        with self._lock:
+            return {"batches_served": self._batches_served,
+                    "shed_count": self.shed_count,
+                    "deadlines_met": self.deadlines_met,
+                    "deadlines_missed": self.deadlines_missed}
+
     # -- batching loop ----------------------------------------------------------
+
+    def _evict_expired_errors_locked(self):
+        now = time.time()
+        for rid in [r for r, exp in self._error_expiry.items() if exp <= now]:
+            self._error_expiry.pop(rid, None)
+            self._results.pop(rid, None)
+            self._partials.pop(rid, None)
 
     def _bucket_key(self, req: GenRequest) -> BucketKey:
         shape = tuple(req.latent_shape) if req.latent_shape is not None \
@@ -256,25 +414,26 @@ class DiffusionEngine:
                 req.policy or self.default_policy,
                 req.reuse_every if req.reuse_every is not None
                 else self.default_reuse_every,
-                _seq_shards())
+                _seq_shards(),
+                tuple(np.shape(req.txt)),
+                req.stream_every)
 
     def _next_bucket(self) -> Optional[BucketKey]:
-        """Hottest (deepest) bucket first — unless some bucket's head
-        request has waited past ``starve_after_s``, in which case the
-        oldest head wins (aging prevents cold-bucket starvation under
-        sustained hot-bucket traffic)."""
-        live = {k: dq for k, dq in self._buckets.items() if dq}
-        if not live:
-            return None
-        oldest = min(live, key=lambda k: live[k][0][0])
-        if time.time() - live[oldest][0][0] > self.starve_after_s:
-            return oldest
-        return max(live, key=lambda k: len(live[k]))
+        """SLO-aware drain order (DESIGN.md §15.1, logic in
+        :func:`repro.serving.slo.choose_bucket`): starvation aging, then
+        earliest-feasible-deadline, then hottest (deepest) bucket."""
+        heads = {k: (dq[0][0], dq[0][1].deadline_s, len(dq))
+                 for k, dq in self._buckets.items() if dq}
+        return slo_lib.choose_bucket(
+            heads, time.time(), scheduler=self.scheduler,
+            starve_after_s=self.starve_after_s, estimator=self.estimator)
 
     def _take_batch(self):
         """Block for traffic, pick a bucket (see :meth:`_next_bucket`),
-        linger briefly for batch-mates from the *same* bucket.  Returns
-        (key, batch) or (None, None) once stopped and fully drained."""
+        linger briefly for batch-mates from the *same* bucket — the
+        linger is event-driven (woken by ``submit``'s notify), never a
+        poll loop.  Returns (key, batch of (enqueue_time, request)) or
+        (None, None) once stopped and fully drained."""
         with self._lock:
             while True:
                 key = self._next_bucket()
@@ -283,17 +442,18 @@ class DiffusionEngine:
                 if self._stop:
                     return None, None
                 self._lock.wait(timeout=0.2)
-            batch = [self._buckets[key].popleft()[1]]
-        deadline = time.time() + self.max_wait_s
-        while len(batch) < self.max_batch:
-            with self._lock:
+            batch = [self._buckets[key].popleft()]
+            deadline = time.time() + self.max_wait_s
+            while len(batch) < self.max_batch and not self._stop:
                 dq = self._buckets.get(key)
                 while dq and len(batch) < self.max_batch:
-                    batch.append(dq.popleft()[1])
-            if len(batch) >= self.max_batch or self._stop \
-                    or time.time() >= deadline:
-                break
-            time.sleep(0.005)
+                    batch.append(dq.popleft())
+                if len(batch) >= self.max_batch:
+                    break
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    break
+                self._lock.wait(timeout=remaining)
         return key, batch
 
     def _sampler(self, key: BucketKey) -> Callable:
@@ -302,7 +462,9 @@ class DiffusionEngine:
         fn = self._compiled.get(key)
         if fn is None:
             shape, steps, pol, reuse = key[:4]
-            args = (shape, steps, pol, reuse)[:min(self._factory_arity, 4)]
+            stream = key[6]
+            args = (shape, steps, pol, reuse,
+                    stream)[:min(self._factory_arity, 5)]
             fn = self._factory(*args)
             self._compiled[key] = fn
             if self.plan_fn is not None:
@@ -322,48 +484,98 @@ class DiffusionEngine:
             log.info("evicted compiled sampler for bucket %s", evicted)
         return fn
 
-    def _serve(self, key: BucketKey, batch: List[GenRequest]):
+    def _publish_chunk(self, batch, lat_np: np.ndarray, ttff: Dict[int, float]):
+        """Deliver one streamed chunk to every request's subscribers and
+        stamp TTFF on first delivery."""
+        now = time.time()
+        with self._lock:
+            for i, (t_enq, r) in enumerate(batch):
+                if r.request_id not in ttff:
+                    ttff[r.request_id] = now - t_enq
+                self._partials.setdefault(r.request_id, []).append(lat_np[i])
+            self._lock.notify_all()
+
+    @staticmethod
+    def _split_out(out) -> Tuple[Any, Optional[dict]]:
+        """(latents, aux) vs bare latents."""
+        if isinstance(out, (tuple, list)) and len(out) == 2:
+            return out[0], out[1]
+        return out, None
+
+    def _log_aux(self, key: BucketKey, aux: Optional[dict]):
+        """Cache-aware samplers return decision-cache telemetry
+        (DESIGN.md §13) — log the hit rate so the amortization is
+        observable in serving, not just benches."""
+        if not aux:
+            return
+        hits = int(jax.device_get(aux.get("cache_hits", 0)))
+        refr = int(jax.device_get(aux.get("cache_refreshes", 0)))
+        if hits + refr:
+            log.info(
+                "bucket %s decision cache: %d hits / %d refreshes "
+                "(hit rate %.2f)", key, hits, refr,
+                hits / max(hits + refr, 1))
+        if "ring_elided_hops" in aux:
+            # Context-parallel telemetry (DESIGN.md §14): ring hops the
+            # block map let the seq shards skip.
+            log.info("bucket %s ring: %d elided hop(s)", key,
+                     int(jax.device_get(aux["ring_elided_hops"])))
+
+    def _serve(self, key: BucketKey, batch: List[Tuple[float, GenRequest]]):
         t0 = time.time()
         shape = key[0]
+        ttff: Dict[int, float] = {}
         try:
             fn = self._sampler(key)
-            txt = jnp.stack([jnp.asarray(r.txt) for r in batch])
-            rngs = jnp.stack([jax.random.PRNGKey(r.seed) for r in batch])
+            txt = jnp.stack([jnp.asarray(r.txt) for _, r in batch])
+            rngs = jnp.stack([jax.random.PRNGKey(r.seed) for _, r in batch])
             noise = jax.vmap(lambda k: jax.random.normal(k, shape))(rngs)
             # The full (B, 2) key batch goes to the sampler — every
             # request keeps its own randomness inside one batch.
-            lat = fn(noise, txt, rngs)
-            # Cache-aware samplers return (latents, aux) with decision-
-            # cache telemetry (DESIGN.md §13) — log the hit rate so the
-            # amortization is observable in serving, not just benches.
-            if isinstance(lat, (tuple, list)) and len(lat) == 2:
-                lat, aux = lat
-                hits = int(jax.device_get(aux.get("cache_hits", 0)))
-                refr = int(jax.device_get(aux.get("cache_refreshes", 0)))
-                if hits + refr:
-                    log.info(
-                        "bucket %s decision cache: %d hits / %d refreshes "
-                        "(hit rate %.2f)", key, hits, refr,
-                        hits / max(hits + refr, 1))
-                if "ring_elided_hops" in aux:
-                    # Context-parallel telemetry (DESIGN.md §14): ring
-                    # hops the block map let the seq shards skip.
-                    log.info(
-                        "bucket %s ring: %d elided hop(s)", key,
-                        int(jax.device_get(aux["ring_elided_hops"])))
-            lat = np.asarray(jax.device_get(lat))
+            out = fn(noise, txt, rngs)
+            if inspect.isgenerator(out):
+                # Streaming bucket (§15.3): each yielded chunk is
+                # published to stream() subscribers as it lands; the
+                # last chunk is the final latents.
+                lat = aux = None
+                for chunk in out:
+                    lat, aux = self._split_out(chunk)
+                    lat = np.asarray(jax.device_get(lat))
+                    self._publish_chunk(batch, lat, ttff)
+                if lat is None:
+                    raise RuntimeError("streaming sampler yielded nothing")
+            else:
+                lat, aux = self._split_out(out)
+                lat = np.asarray(jax.device_get(lat))
+            self._log_aux(key, aux)
             err = None
         except Exception as e:  # noqa: BLE001 — fail the batch, not the engine
             log.exception("bucket %s batch failed", key)
             lat, err = None, repr(e)
         dt = time.time() - t0
+        now = time.time()
+        if err is None:
+            self.estimator.observe(key, dt)
         with self._lock:
             bi = self._batches_served
             self._batches_served += 1
-            for i, r in enumerate(batch):
+            for i, (t_enq, r) in enumerate(batch):
+                met = None
+                if r.deadline_s is not None:
+                    met = err is None and now <= r.deadline_s
+                    if met:
+                        self.deadlines_met += 1
+                    else:
+                        self.deadlines_missed += 1
                 self._results[r.request_id] = GenResult(
                     r.request_id, None if err else lat[i], dt, error=err,
-                    batch_index=bi)
+                    batch_index=bi,
+                    ttff_s=ttff.get(r.request_id,
+                                    -1.0 if err else now - t_enq),
+                    deadline_met=met)
+                if err is not None:
+                    self._error_expiry[r.request_id] = (
+                        time.time() + self.error_ttl_s)
             self._lock.notify_all()
         log.info("served bucket %s batch of %d in %.2fs", key, len(batch),
                  dt)
@@ -388,8 +600,19 @@ class LMEngine:
     def generate(self, tokens: jax.Array, num_new: int,
                  temperature: float = 0.0, rng=None) -> jax.Array:
         """tokens: (B, S) prompt -> (B, num_new) continuations (greedy or
-        temperature sampling)."""
+        temperature sampling).  Temperature sampling requires an
+        explicit ``rng`` key; ``prompt + num_new`` must fit the engine's
+        ``max_len`` KV budget."""
         B, S = tokens.shape
+        if S + num_new > self.max_len:
+            raise ValueError(
+                f"prompt ({S}) + num_new ({num_new}) = {S + num_new} "
+                f"exceeds max_len={self.max_len}; the KV cache was "
+                f"allocated for max_len positions")
+        if temperature > 0 and rng is None:
+            raise ValueError(
+                "temperature > 0 requires an explicit rng key "
+                "(jax.random.split(None) is not a key)")
         logits, cache = self.prefill_fn(tokens)
         out = []
         index = jnp.asarray(S, jnp.int32)

@@ -1,0 +1,240 @@
+"""Front-door router over N DiffusionEngine replicas (DESIGN.md §15.4).
+
+One process can hold several engine replicas (each wrapping its own
+sampler factory — on a real fleet each replica owns a device slice;
+under ``jax.distributed`` each host runs one router in front of its
+local replicas, see :func:`repro.launch.mesh.init_distributed`).  The
+router is the admission point the ROADMAP's millions-of-users shape
+needs in front of the engines:
+
+  * **load balancing** — submit routes to the healthy replica with the
+    shallowest queue (queue-depth accounting via ``engine.pending()``
+    plus the router's own in-flight ledger, so bursts don't all land on
+    the replica whose queue the OS scheduler drained first);
+  * **shed propagation** — a replica's admission control may shed
+    (:class:`~repro.serving.slo.ShedError`); the router then tries the
+    other replicas (a request infeasible on a deep queue may be
+    feasible on a shallow one) and only sheds fleet-wide when every
+    healthy replica refuses;
+  * **failover** — :meth:`fail_replica` (or a dead engine discovered at
+    submit) drains the failed replica and *requeues* every request it
+    had accepted but not successfully served onto the survivors, so a
+    replica loss costs retries, not lost requests.
+
+The router keeps the original :class:`~repro.serving.engine.GenRequest`
+for every in-flight request — requeue is replay, which is safe because
+generation is deterministic in (seed, txt, bucket): a request served
+twice returns the same latents.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import DiffusionEngine, GenRequest, GenResult
+from repro.serving.slo import ShedError
+from repro.utils.logging import get_logger
+
+log = get_logger("serve.router")
+
+__all__ = ["Router"]
+
+
+class Router:
+    """Load-balancing front door over ``replicas`` (started/stopped as a
+    group).  All public methods are thread-safe."""
+
+    def __init__(self, replicas: List[DiffusionEngine]):
+        if not replicas:
+            raise ValueError("need at least one engine replica")
+        self._replicas = list(replicas)
+        self._healthy = [True] * len(replicas)
+        # rid -> replica index currently responsible for the request
+        self._assigned: Dict[int, int] = {}
+        # rid -> original request, kept until result() hands it out so
+        # failover can requeue verbatim
+        self._requests: Dict[int, GenRequest] = {}
+        self._inflight = [0] * len(replicas)
+        self.shed_count = 0
+        self.requeued_count = 0
+        self._lock = threading.Lock()
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self):
+        for eng in self._replicas:
+            eng.start()
+
+    def stop(self, drain: bool = True):
+        for i, eng in enumerate(self._replicas):
+            if self._healthy[i]:
+                eng.stop(drain=drain)
+
+    def healthy_replicas(self) -> List[int]:
+        with self._lock:
+            return [i for i, h in enumerate(self._healthy)
+                    if h and self._replicas[i].healthy()]
+
+    def depths(self) -> Dict[int, int]:
+        """Per-replica load: queued + router-tracked in-flight."""
+        with self._lock:
+            return {i: self._replicas[i].pending() + self._inflight[i]
+                    for i, h in enumerate(self._healthy) if h}
+
+    # -- request path ---------------------------------------------------------
+
+    def submit(self, req: GenRequest) -> int:
+        """Route to the shallowest healthy replica; returns the replica
+        index.  Raises :class:`ShedError` only when *every* healthy
+        replica sheds the request, RuntimeError when none is healthy."""
+        last_shed: Optional[ShedError] = None
+        for idx in self._by_depth():
+            try:
+                self._replicas[idx].submit(req)
+            except ShedError as e:
+                last_shed = e
+                continue
+            except RuntimeError:
+                # replica died between the health check and the submit —
+                # mark it down and keep trying survivors
+                self._mark_down(idx)
+                continue
+            with self._lock:
+                self._assigned[req.request_id] = idx
+                self._requests[req.request_id] = req
+                self._inflight[idx] += 1
+            return idx
+        if last_shed is not None:
+            with self._lock:
+                self.shed_count += 1
+            raise last_shed
+        raise RuntimeError("no healthy replica accepted the request")
+
+    def result(self, request_id: int, timeout: float = 300.0) -> GenResult:
+        """Wait for the request's result, following it across failovers:
+        if the responsible replica dies (its engine errors the request
+        with "engine stopped"), the request is requeued to a survivor
+        and the wait continues against the new assignment."""
+        deadline = time.time() + timeout
+        while True:
+            with self._lock:
+                idx = self._assigned.get(request_id)
+            if idx is None:
+                raise KeyError(f"request {request_id} was never routed "
+                               "(or its result was already consumed)")
+            remaining = deadline - time.time()
+            if remaining <= 0:
+                raise TimeoutError(f"request {request_id}")
+            try:
+                res = self._replicas[idx].result(request_id,
+                                                 timeout=remaining)
+            except RuntimeError as e:
+                if "engine stopped" in str(e):
+                    # the replica died under this request: requeue to a
+                    # survivor and keep waiting — unless no survivor
+                    # would take it, then surface the original error
+                    self._requeue_one(request_id, dead=idx)
+                    with self._lock:
+                        moved = self._assigned.get(request_id) != idx
+                    if moved:
+                        continue
+                self._forget(request_id, idx)
+                raise
+            self._forget(request_id, idx)
+            return res
+
+    def stream(self, request_id: int,
+               timeout: float = 300.0) -> Iterator[np.ndarray]:
+        """Pass-through to the responsible replica's chunk stream."""
+        with self._lock:
+            idx = self._assigned.get(request_id)
+        if idx is None:
+            raise KeyError(f"request {request_id} was never routed")
+        return self._replicas[idx].stream(request_id, timeout=timeout)
+
+    # -- failover -------------------------------------------------------------
+
+    def fail_replica(self, idx: int):
+        """Take replica ``idx`` out of rotation: stop it without drain
+        (in-flight batch still completes; queued requests error), then
+        requeue everything it had accepted but not successfully served
+        onto the survivors."""
+        with self._lock:
+            was_healthy = self._healthy[idx]
+            self._healthy[idx] = False
+        if was_healthy:
+            self._replicas[idx].stop(drain=False)
+        moved = 0
+        for rid in self._assigned_to(idx):
+            res = self._replicas[idx].peek_result(rid)
+            if res is not None and res.error is None:
+                continue  # served before the failure; result() will find it
+            self._requeue_one(rid, dead=idx)
+            moved += 1
+        log.info("replica %d failed: requeued %d request(s) onto %s",
+                 idx, moved, self.healthy_replicas())
+
+    def metrics(self) -> Dict[str, int]:
+        m = {"router_shed_count": self.shed_count,
+             "router_requeued": self.requeued_count}
+        for i, eng in enumerate(self._replicas):
+            for k, v in eng.metrics().items():
+                m[f"replica{i}_{k}"] = v
+        return m
+
+    # -- internals ------------------------------------------------------------
+
+    def _by_depth(self) -> List[int]:
+        depths = self.depths()
+        alive = [i for i in depths if self._replicas[i].healthy()]
+        return sorted(alive, key=lambda i: depths[i])
+
+    def _assigned_to(self, idx: int) -> List[int]:
+        with self._lock:
+            return [rid for rid, i in self._assigned.items() if i == idx]
+
+    def _mark_down(self, idx: int):
+        with self._lock:
+            was = self._healthy[idx]
+            self._healthy[idx] = False
+        if was:
+            log.warning("replica %d is down; draining its requests", idx)
+            for rid in self._assigned_to(idx):
+                res = self._replicas[idx].peek_result(rid)
+                if res is None or res.error is not None:
+                    self._requeue_one(rid, dead=idx)
+
+    def _requeue_one(self, request_id: int, dead: int):
+        with self._lock:
+            req = self._requests.get(request_id)
+            if req is None or self._assigned.get(request_id) != dead:
+                return  # already moved or consumed
+            self._inflight[dead] = max(self._inflight[dead] - 1, 0)
+        for idx in self._by_depth():
+            if idx == dead:
+                continue
+            try:
+                self._replicas[idx].submit(req)
+            except (ShedError, RuntimeError):
+                continue
+            with self._lock:
+                self._assigned[request_id] = idx
+                self._inflight[idx] += 1
+                self.requeued_count += 1
+            log.info("request %d requeued from replica %d to %d",
+                     request_id, dead, idx)
+            return
+        # no survivor took it: leave the assignment pointing at the dead
+        # replica so result() surfaces the original error
+        log.error("request %d could not be requeued off replica %d",
+                  request_id, dead)
+
+    def _forget(self, request_id: int, idx: int):
+        with self._lock:
+            self._assigned.pop(request_id, None)
+            self._requests.pop(request_id, None)
+            self._inflight[idx] = max(self._inflight[idx] - 1, 0)

@@ -1,6 +1,9 @@
 """Continuous-batching engine tests: per-request RNG threading, mixed
 (resolution, steps) traffic from concurrent submitters, bucket purity,
-the compiled-sampler LRU, and clean drain on stop()."""
+the compiled-sampler LRU, clean drain on stop(), and the PR-7 bugfix
+regressions (mixed prompt lengths, errored-result retrievability,
+LMEngine argument validation, event-driven linger, chunked
+streaming)."""
 
 import threading
 import time
@@ -10,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.engine import DiffusionEngine, GenRequest
+from repro.serving.engine import DiffusionEngine, GenRequest, LMEngine
 
 
 def _txt(val, tokens=1, dim=1):
@@ -196,9 +199,10 @@ class TestMixedTrafficConcurrency:
                               max_wait_s=0.01, max_compiled=2)
         eng.start()
         rid = 0
-        # bucket keys carry the policy name, reuse cadence, and the
-        # dispatch mesh's seq-shard degree (1 = no ring)
-        hot = ((2, 2), 2, None, None, 1)
+        # bucket keys carry the policy name, reuse cadence, the
+        # dispatch mesh's seq-shard degree (1 = no ring), the text-
+        # embedding shape, and the streaming cadence (None = monolithic)
+        hot = ((2, 2), 2, None, None, 1, (1, 1), None)
         for round_ in range(3):
             for shape, steps in ((hot[0], hot[1]), ((4, 4), 2), ((8, 8), 2)):
                 eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
@@ -252,4 +256,215 @@ class TestStopSemantics:
         eng.submit(GenRequest(request_id=0, txt=_txt(0)))
         with pytest.raises(RuntimeError, match="boom"):
             eng.result(0, timeout=30)
+        eng.stop()
+
+
+class TestMixedPromptLengths:
+    def test_mixed_txt_shapes_do_not_crash_the_batch(self):
+        """Regression: two requests with the same latent shape but
+        different prompt lengths L used to land in one bucket, and
+        ``jnp.stack([r.txt ...])`` failed the whole batch at stack
+        time.  The text-embedding shape is bucket identity now, so both
+        requests are served (in separate, shape-pure batches)."""
+        served_txt_shapes = []
+
+        def sample_fn(noise, txt, rngs):
+            served_txt_shapes.append(txt.shape[1:])
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(4,), max_batch=4,
+                              max_wait_s=0.2)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0, tokens=2)))
+        eng.submit(GenRequest(request_id=1, txt=_txt(1, tokens=3)))
+        r0 = eng.result(0, timeout=30)
+        r1 = eng.result(1, timeout=30)
+        eng.stop()
+        assert r0.latents.shape == (4,) and r1.latents.shape == (4,)
+        assert sorted(served_txt_shapes) == [(2, 1), (3, 1)]
+
+    def test_same_txt_shape_still_shares_a_batch(self):
+        batches = []
+
+        def sample_fn(noise, txt, rngs):
+            batches.append(noise.shape[0])
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(4,), max_batch=4,
+                              max_wait_s=0.5)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0, tokens=2)))
+        eng.submit(GenRequest(request_id=1, txt=_txt(1, tokens=2)))
+        eng.result(0, timeout=30)
+        eng.result(1, timeout=30)
+        eng.stop()
+        assert 2 in batches
+
+
+class TestErroredResultRetrievable:
+    def test_retry_after_error_sees_original_error_not_timeout(self):
+        """Regression: ``result()`` used to *pop* an errored result
+        before raising, so a caller that caught the error (or a
+        TimeoutError) and retried got a misleading TimeoutError instead
+        of the original batch error."""
+        def sample_fn(noise, txt, rngs):
+            raise ValueError("boom-original")
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        for _ in range(3):  # every retry sees the original batch error
+            with pytest.raises(RuntimeError, match="boom-original"):
+                eng.result(0, timeout=30)
+        eng.stop()
+
+    def test_errored_result_evicted_after_ttl(self):
+        def sample_fn(noise, txt, rngs):
+            raise ValueError("boom")
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01, error_ttl_s=0.1)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        with pytest.raises(RuntimeError, match="boom"):
+            eng.result(0, timeout=30)
+        eng.stop()
+        time.sleep(0.15)
+        with pytest.raises(TimeoutError):
+            eng.result(0, timeout=0.05)
+
+    def test_result_timeout_is_clamped_nonnegative(self):
+        """A result() deadline in the past must raise TimeoutError
+        cleanly (the old code handed Condition.wait a negative
+        timeout)."""
+        eng = DiffusionEngine(lambda n, t, r: n, latent_shape=(2,))
+        eng.start()
+        with pytest.raises(TimeoutError):
+            eng.result(123, timeout=-0.5)
+        with pytest.raises(TimeoutError):
+            eng.result(123, timeout=0.0)
+        eng.stop()
+
+
+class TestLMEngineValidation:
+    def _engine(self, max_len=8):
+        V = 5
+
+        def prefill(tokens):
+            B, S = tokens.shape
+            return jnp.zeros((B, S, V)), {}
+
+        def decode(tok, cache, idx):
+            return jnp.zeros((tok.shape[0], 1, V)), cache
+
+        return LMEngine(prefill, decode, max_len=max_len)
+
+    def test_temperature_without_rng_raises(self):
+        """Regression: temperature > 0 with the default rng=None used to
+        crash inside jax.random.split(None)."""
+        eng = self._engine()
+        toks = jnp.zeros((1, 2), jnp.int32)
+        with pytest.raises(ValueError, match="rng"):
+            eng.generate(toks, num_new=2, temperature=0.7)
+
+    def test_temperature_with_rng_works(self):
+        eng = self._engine()
+        toks = jnp.zeros((1, 2), jnp.int32)
+        out = eng.generate(toks, num_new=2, temperature=0.7,
+                           rng=jax.random.PRNGKey(0))
+        assert out.shape == (1, 2)
+
+    def test_max_len_enforced(self):
+        """Regression: max_len was stored but never enforced — prompt +
+        num_new could silently exceed the KV-cache allocation."""
+        eng = self._engine(max_len=8)
+        toks = jnp.zeros((1, 6), jnp.int32)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.generate(toks, num_new=3)
+        assert eng.generate(toks, num_new=2).shape == (1, 2)
+
+
+class TestEventDrivenLinger:
+    def test_linger_does_not_busy_poll(self, monkeypatch):
+        """Regression: _take_batch's linger loop busy-polled with
+        time.sleep(0.005).  Batch-mate arrival must wake it through the
+        condition variable instead — the batcher thread never calls
+        time.sleep."""
+        sleep_threads = []
+        real_sleep = time.sleep
+
+        def spy(seconds):
+            sleep_threads.append(threading.current_thread())
+            real_sleep(seconds)
+
+        monkeypatch.setattr(time, "sleep", spy)
+        batches = []
+
+        def sample_fn(noise, txt, rngs):
+            batches.append(noise.shape[0])
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=2,
+                              max_wait_s=1.0)
+        eng.start()
+        batcher = eng._thread
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        real_sleep(0.05)  # batcher is now lingering for a batch-mate
+        t0 = time.time()
+        eng.submit(GenRequest(request_id=1, txt=_txt(1)))
+        eng.result(0, timeout=30)
+        eng.result(1, timeout=30)
+        waited = time.time() - t0
+        eng.stop()
+        assert 2 in batches          # the linger really batched them
+        assert batcher not in sleep_threads  # and never slept to poll
+        # arrival filled the batch => the linger ended well before its
+        # 1s budget (event-driven, not deadline-driven)
+        assert waited < 0.8
+
+
+class TestStreamingDelivery:
+    @staticmethod
+    def _factory(latent_shape, steps, policy=None, reuse_every=None,
+                 stream_every=None):
+        if stream_every is None:
+            return lambda noise, txt, rngs: noise
+
+        def gen_fn(noise, txt, rngs):
+            for k in range(1, 4):  # 3 chunks, last one is final
+                time.sleep(0.03)
+                yield noise + k, {"chunk": k}
+
+        return gen_fn
+
+    def test_stream_yields_chunks_then_result(self):
+        eng = DiffusionEngine(sampler_factory=self._factory,
+                              latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), stream_every=1))
+        chunks = list(eng.stream(0, timeout=30))
+        r = eng.result(0, timeout=30)
+        eng.stop()
+        assert len(chunks) == 3
+        np.testing.assert_allclose(chunks[-1], r.latents)
+        assert not np.allclose(chunks[0], chunks[-1])
+
+    def test_ttff_beats_completion(self):
+        eng = DiffusionEngine(sampler_factory=self._factory,
+                              latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), stream_every=1))
+        r = eng.result(0, timeout=30)
+        eng.stop()
+        assert 0 <= r.ttff_s < r.walltime_s  # first frame landed early
+
+    def test_stream_every_requires_capable_factory(self):
+        eng = DiffusionEngine(lambda n, t, r: n, latent_shape=(2,))
+        eng.start()
+        with pytest.raises(ValueError, match="stream_every"):
+            eng.submit(GenRequest(request_id=0, txt=_txt(0),
+                                  stream_every=2))
         eng.stop()
