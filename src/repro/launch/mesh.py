@@ -36,9 +36,16 @@ def init_distributed(coordinator_address=None, num_processes=None,
     bare hosts pass all three explicitly.  Returns True when the
     runtime was initialized, False when it already was (idempotent —
     a router restart must not re-init).
+
+    The already-initialized probe must not touch jax device state:
+    ``jax.process_count()`` initializes the local XLA backend, after
+    which ``jax.distributed.initialize()`` unconditionally raises
+    ("must be called before any JAX computations are executed").  So we
+    ask the distributed runtime's own global state whether a client
+    exists instead.
     """
     global _distributed_initialized
-    if _distributed_initialized or jax.process_count() > 1:
+    if _distributed_initialized or _distributed_client_active():
         return False  # already initialized by an earlier caller
     kwargs = {}
     if coordinator_address is not None:
@@ -47,12 +54,37 @@ def init_distributed(coordinator_address=None, num_processes=None,
         kwargs["num_processes"] = num_processes
     if process_id is not None:
         kwargs["process_id"] = process_id
-    jax.distributed.initialize(**kwargs)
+    try:
+        jax.distributed.initialize(**kwargs)
+    except RuntimeError as e:
+        # Another component (launcher, test harness) beat us to it —
+        # treat as the idempotent case rather than crashing the server.
+        # jax <=0.4 phrases this "should only be called once", newer
+        # versions "already initialized".
+        if ("should only be called once" in str(e)
+                or "already initialized" in str(e)):
+            _distributed_initialized = True
+            return False
+        raise
     _distributed_initialized = True
     return True
 
 
 _distributed_initialized = False
+
+
+def _distributed_client_active() -> bool:
+    """Is the jax.distributed client already up?  Reads the runtime's
+    global state directly — unlike ``jax.process_count()`` this never
+    initializes the local backend (private API, so fail open: jax
+    versions without it fall through to ``initialize()``'s own
+    already-initialized error, handled above)."""
+    try:
+        from jax._src import distributed as _dist
+
+        return _dist.global_state.client is not None
+    except Exception:  # noqa: BLE001 — private-API drift must not crash init
+        return False
 
 
 def make_host_mesh(model_axis: int = 1):

@@ -234,6 +234,12 @@ class DiffusionEngine:
         # retrying after TimeoutError sees the original batch error —
         # rid -> eviction time (DESIGN.md §15.2)
         self._error_expiry: Dict[int, float] = {}
+        # Tombstones for successes consumed by result(): rid -> eviction
+        # time.  A stream() consumer still iterating when result() pops
+        # the record needs a termination signal — without it the stream
+        # hangs until TimeoutError.  Partials stay readable until the
+        # tombstone expires.
+        self._finished_expiry: Dict[int, float] = {}
         # streaming chunks: rid -> [np latents per delivered chunk]
         self._partials: Dict[int, List[np.ndarray]] = {}
         self._batches_served = 0
@@ -336,13 +342,18 @@ class DiffusionEngine:
             res = self._results[request_id]
             if res.error is None:
                 self._results.pop(request_id)
+                # Tombstone the consumed success (and keep its partials)
+                # until the TTL so a stream() consumer that has not yet
+                # finished iterating terminates cleanly instead of
+                # hanging until TimeoutError.
+                self._finished_expiry.setdefault(
+                    request_id, time.time() + self.error_ttl_s)
             else:
                 # Keep errored results retrievable until their TTL so a
                 # caller that catches TimeoutError and retries gets the
                 # original batch error, not a misleading second timeout.
                 self._error_expiry.setdefault(
                     request_id, time.time() + self.error_ttl_s)
-            self._partials.pop(request_id, None)
         if res.error is not None:
             raise RuntimeError(
                 f"request {request_id} failed: {res.error}")
@@ -372,7 +383,8 @@ class DiffusionEngine:
                         chunk = chunks[idx]
                         idx += 1
                         break
-                    if request_id in self._results:
+                    if (request_id in self._results
+                            or request_id in self._finished_expiry):
                         return
                     remaining = deadline - time.time()
                     if remaining <= 0:
@@ -401,6 +413,10 @@ class DiffusionEngine:
         for rid in [r for r, exp in self._error_expiry.items() if exp <= now]:
             self._error_expiry.pop(rid, None)
             self._results.pop(rid, None)
+            self._partials.pop(rid, None)
+        for rid in [r for r, exp in self._finished_expiry.items()
+                    if exp <= now]:
+            self._finished_expiry.pop(rid, None)
             self._partials.pop(rid, None)
 
     def _bucket_key(self, req: GenRequest) -> BucketKey:

@@ -19,7 +19,9 @@ needs in front of the engines:
   * **failover** — :meth:`fail_replica` (or a dead engine discovered at
     submit) drains the failed replica and *requeues* every request it
     had accepted but not successfully served onto the survivors, so a
-    replica loss costs retries, not lost requests.
+    replica loss costs retries, not lost requests; blocked
+    :meth:`result` waits and :meth:`stream` consumers both follow the
+    request to its new replica.
 
 The router keeps the original :class:`~repro.serving.engine.GenRequest`
 for every in-flight request — requeue is replay, which is safe because
@@ -62,17 +64,33 @@ class Router:
         self.shed_count = 0
         self.requeued_count = 0
         self._lock = threading.Lock()
+        # Serializes requeue decisions: result() waiters, stream
+        # consumers, and fail_replica()/_mark_down all race to move a
+        # request off a dead replica; without this two of them can
+        # submit the same request twice.  Always acquired before
+        # self._lock, never while holding it.
+        self._failover_lock = threading.Lock()
 
     # -- lifecycle ------------------------------------------------------------
 
     def start(self):
+        with self._lock:
+            self._healthy = [True] * len(self._replicas)
         for eng in self._replicas:
             eng.start()
 
     def stop(self, drain: bool = True):
-        for i, eng in enumerate(self._replicas):
-            if self._healthy[i]:
-                eng.stop(drain=drain)
+        # Claim every still-healthy replica under the lock (marking it
+        # down) so a concurrent fail_replica()/_mark_down cannot stop
+        # the same engine twice or stop a just-downed replica with
+        # drain=True; the engine.stop calls themselves stay outside the
+        # lock so submitters are never blocked behind a drain.
+        with self._lock:
+            to_stop = [i for i, h in enumerate(self._healthy) if h]
+            for i in to_stop:
+                self._healthy[i] = False
+        for i in to_stop:
+            self._replicas[i].stop(drain=drain)
 
     def healthy_replicas(self) -> List[int]:
         with self._lock:
@@ -118,7 +136,13 @@ class Router:
         """Wait for the request's result, following it across failovers:
         if the responsible replica dies (its engine errors the request
         with "engine stopped"), the request is requeued to a survivor
-        and the wait continues against the new assignment."""
+        and the wait continues against the new assignment.
+
+        On TimeoutError the ledger entry is kept — deliberately — so
+        the caller can retry ``result()`` and still reach the request.
+        A caller that gives up for good must call :meth:`forget` to
+        release the entry, otherwise the replica's in-flight count
+        stays inflated and skews least-loaded routing."""
         deadline = time.time() + timeout
         while True:
             with self._lock:
@@ -142,19 +166,74 @@ class Router:
                         moved = self._assigned.get(request_id) != idx
                     if moved:
                         continue
-                self._forget(request_id, idx)
+                self.forget(request_id)
                 raise
-            self._forget(request_id, idx)
+            self.forget(request_id)
             return res
 
     def stream(self, request_id: int,
                timeout: float = 300.0) -> Iterator[np.ndarray]:
-        """Pass-through to the responsible replica's chunk stream."""
+        """Chunk stream for the request, following it across failovers:
+        each time the replica's stream ends (cleanly or with an error)
+        while the assignment has moved to a survivor, the stream is
+        replayed against the new replica — replay is deterministic
+        (module docstring), so already-delivered chunks are skipped and
+        the consumer sees one contiguous chunk sequence."""
         with self._lock:
-            idx = self._assigned.get(request_id)
-        if idx is None:
-            raise KeyError(f"request {request_id} was never routed")
-        return self._replicas[idx].stream(request_id, timeout=timeout)
+            if request_id not in self._assigned:
+                raise KeyError(f"request {request_id} was never routed")
+
+        def _chunks():
+            delivered = 0
+            while True:
+                with self._lock:
+                    idx = self._assigned.get(request_id)
+                if idx is None:
+                    return  # result already consumed; nothing to stream
+                moved = False
+                try:
+                    seen = 0
+                    for chunk in self._replicas[idx].stream(
+                            request_id, timeout=timeout):
+                        seen += 1
+                        if seen <= delivered:
+                            continue  # replayed chunk from before failover
+                        delivered += 1
+                        yield chunk
+                except (RuntimeError, TimeoutError):
+                    # Stalled replica: if the request moved (failover
+                    # requeued it), chase it; otherwise surface.
+                    with self._lock:
+                        moved = self._assigned.get(request_id) \
+                            not in (None, idx)
+                    if not moved:
+                        raise
+                if not moved:
+                    # Clean termination — but the terminating record may
+                    # be a dead engine's "engine stopped" error (the
+                    # consumer can wake before fail_replica's own
+                    # requeue loop runs), so requeue like result() does
+                    # and only finish if the request truly stays here.
+                    rec = self._replicas[idx].peek_result(request_id)
+                    if (rec is not None and rec.error is not None
+                            and "engine stopped" in rec.error):
+                        self._requeue_one(request_id, dead=idx)
+                    with self._lock:
+                        if self._assigned.get(request_id) in (None, idx):
+                            return
+
+        return _chunks()
+
+    def forget(self, request_id: int):
+        """Release the ledger entry for a request the caller has
+        abandoned (e.g. after giving up on a ``result()`` timeout).
+        Idempotent; without this the assigned replica's in-flight count
+        stays inflated and skews least-loaded routing."""
+        with self._lock:
+            idx = self._assigned.pop(request_id, None)
+            self._requests.pop(request_id, None)
+            if idx is not None:
+                self._inflight[idx] = max(self._inflight[idx] - 1, 0)
 
     # -- failover -------------------------------------------------------------
 
@@ -209,32 +288,27 @@ class Router:
                     self._requeue_one(rid, dead=idx)
 
     def _requeue_one(self, request_id: int, dead: int):
-        with self._lock:
-            req = self._requests.get(request_id)
-            if req is None or self._assigned.get(request_id) != dead:
-                return  # already moved or consumed
-            self._inflight[dead] = max(self._inflight[dead] - 1, 0)
-        for idx in self._by_depth():
-            if idx == dead:
-                continue
-            try:
-                self._replicas[idx].submit(req)
-            except (ShedError, RuntimeError):
-                continue
+        with self._failover_lock:
             with self._lock:
-                self._assigned[request_id] = idx
-                self._inflight[idx] += 1
-                self.requeued_count += 1
-            log.info("request %d requeued from replica %d to %d",
-                     request_id, dead, idx)
-            return
-        # no survivor took it: leave the assignment pointing at the dead
-        # replica so result() surfaces the original error
-        log.error("request %d could not be requeued off replica %d",
-                  request_id, dead)
-
-    def _forget(self, request_id: int, idx: int):
-        with self._lock:
-            self._assigned.pop(request_id, None)
-            self._requests.pop(request_id, None)
-            self._inflight[idx] = max(self._inflight[idx] - 1, 0)
+                req = self._requests.get(request_id)
+                if req is None or self._assigned.get(request_id) != dead:
+                    return  # already moved or consumed
+                self._inflight[dead] = max(self._inflight[dead] - 1, 0)
+            for idx in self._by_depth():
+                if idx == dead:
+                    continue
+                try:
+                    self._replicas[idx].submit(req)
+                except (ShedError, RuntimeError):
+                    continue
+                with self._lock:
+                    self._assigned[request_id] = idx
+                    self._inflight[idx] += 1
+                    self.requeued_count += 1
+                log.info("request %d requeued from replica %d to %d",
+                         request_id, dead, idx)
+                return
+            # no survivor took it: leave the assignment pointing at the
+            # dead replica so result() surfaces the original error
+            log.error("request %d could not be requeued off replica %d",
+                      request_id, dead)

@@ -232,3 +232,75 @@ class TestGradientCompression:
         start = float(jnp.mean(y ** 2))
         assert compressed < start * 1e-2          # converged 100x+
         assert compressed < max(exact, 1e-3) * 10  # within 10x of exact
+
+
+class TestDistributedInit:
+    """REVIEW regression: the init guard used to probe
+    jax.process_count(), which initializes the local XLA backend, after
+    which jax.distributed.initialize() unconditionally raises — every
+    ``serve.py --distributed`` launch crashed at startup."""
+
+    def test_real_init_succeeds_in_fresh_process(self):
+        """End-to-end: a fresh process must be able to bring up the
+        single-process distributed runtime through init_distributed
+        and see the guard stay idempotent afterwards."""
+        _run_sub("""
+            import jax
+            from repro.launch.mesh import init_distributed
+            assert init_distributed(
+                coordinator_address="localhost:12421",
+                num_processes=1, process_id=0) is True
+            assert jax.process_count() == 1
+            assert init_distributed() is False  # idempotent re-entry
+            print("OK")
+        """, devices=1)
+
+    def test_active_client_short_circuits_without_initialize(self,
+                                                             monkeypatch):
+        from repro.launch import mesh
+
+        monkeypatch.setattr(mesh, "_distributed_initialized", False)
+        monkeypatch.setattr(mesh, "_distributed_client_active",
+                            lambda: True)
+
+        def boom(**kw):
+            raise AssertionError("initialize() must not be called when "
+                                 "a client is already active")
+
+        monkeypatch.setattr(jax.distributed, "initialize", boom)
+        assert mesh.init_distributed() is False
+
+    def test_double_init_error_is_treated_as_idempotent(self, monkeypatch):
+        from repro.launch import mesh
+
+        monkeypatch.setattr(mesh, "_distributed_initialized", False)
+        monkeypatch.setattr(mesh, "_distributed_client_active",
+                            lambda: False)
+
+        def already(**kw):
+            raise RuntimeError(
+                "distributed.initialize should only be called once.")
+
+        monkeypatch.setattr(jax.distributed, "initialize", already)
+        assert mesh.init_distributed() is False
+        assert mesh._distributed_initialized is True
+
+    def test_backend_already_up_still_raises(self, monkeypatch):
+        """The 'must be called before any JAX computations' error is a
+        genuine misuse (caller ran jax work first) — it must surface,
+        not be swallowed as idempotency."""
+        from repro.launch import mesh
+
+        monkeypatch.setattr(mesh, "_distributed_initialized", False)
+        monkeypatch.setattr(mesh, "_distributed_client_active",
+                            lambda: False)
+
+        def too_late(**kw):
+            raise RuntimeError(
+                "jax.distributed.initialize() must be called before "
+                "any JAX computations are executed.")
+
+        monkeypatch.setattr(jax.distributed, "initialize", too_late)
+        with pytest.raises(RuntimeError, match="must be called before"):
+            mesh.init_distributed()
+        assert mesh._distributed_initialized is False

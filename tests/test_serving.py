@@ -461,6 +461,22 @@ class TestStreamingDelivery:
         eng.stop()
         assert 0 <= r.ttff_s < r.walltime_s  # first frame landed early
 
+    def test_stream_terminates_after_result_consumed(self):
+        """REVIEW regression: result() popping the record (and the
+        partials) used to leave a stream consumer with no termination
+        signal — it hung until TimeoutError.  The finished tombstone
+        keeps the chunks readable and ends the stream cleanly."""
+        eng = DiffusionEngine(sampler_factory=self._factory,
+                              latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), stream_every=1))
+        r = eng.result(0, timeout=30)            # consumes the record
+        chunks = list(eng.stream(0, timeout=2))  # must not hang
+        eng.stop()
+        assert len(chunks) == 3
+        np.testing.assert_allclose(chunks[-1], r.latents)
+
     def test_stream_every_requires_capable_factory(self):
         eng = DiffusionEngine(lambda n, t, r: n, latent_shape=(2,))
         eng.start()

@@ -360,3 +360,107 @@ class TestRouter:
         router.stop()
         assert len(chunks) == 2
         np.testing.assert_allclose(chunks[-1], r.latents)
+
+    def test_stream_follows_failover(self):
+        """REVIEW regression: a stream used to bind to the submit-time
+        replica forever, so a consumer blocked on the dying replica
+        never saw the chunks the survivor produced.  The consumer must
+        follow the request and still receive every chunk."""
+        def factory(latent_shape, steps, policy=None, reuse_every=None,
+                    stream_every=None):
+            if stream_every is None:
+                def fn(noise, txt, rngs):
+                    time.sleep(0.25)
+                    return noise
+
+                return fn
+
+            def gen_fn(noise, txt, rngs):
+                for k in range(1, 4):
+                    time.sleep(0.02)
+                    yield noise + k, None
+
+            return gen_fn
+
+        router = Router([DiffusionEngine(sampler_factory=factory,
+                                         latent_shape=(2,), max_batch=1,
+                                         max_wait_s=0.0)
+                         for _ in range(2)])
+        router.start()
+        # one slow blocker per replica so the streaming request sits
+        # *queued* on its replica when that replica dies
+        router.submit(GenRequest(request_id=0, txt=_txt(0)))
+        router.submit(GenRequest(request_id=1, txt=_txt(1)))
+        victim = router.submit(GenRequest(request_id=2, txt=_txt(2),
+                                          stream_every=1))
+        got = []
+
+        def consume():
+            for c in router.stream(2, timeout=30):
+                got.append(c)
+
+        t = threading.Thread(target=consume)
+        t.start()
+        time.sleep(0.05)  # consumer is now blocked on the victim
+        router.fail_replica(victim)
+        t.join(timeout=60)
+        res = router.result(2, timeout=60)
+        for rid in (0, 1):
+            router.result(rid, timeout=60)
+        router.stop()
+        assert not t.is_alive()
+        assert len(got) == 3
+        np.testing.assert_allclose(got[-1], res.latents)
+
+    def test_forget_releases_ledger_after_timeout(self):
+        """REVIEW: a caller that gives up on a result() timeout keeps
+        its ledger entry (so a retry still works) and must release it
+        with forget() — otherwise the in-flight count stays inflated
+        and skews least-loaded routing."""
+        router = Router([self._replica(service_s=0.5)])
+        router.start()
+        idx = router.submit(GenRequest(request_id=0, txt=_txt(0),
+                                       latent_shape=(2,)))
+        with pytest.raises(TimeoutError):
+            router.result(0, timeout=0.01)
+        # the entry survives the timeout: result() is retryable
+        assert router.depths()[idx] >= 1
+        router.forget(0)
+        router.forget(0)  # idempotent
+        assert router.depths()[idx] == 0
+        with pytest.raises(KeyError):
+            router.result(0, timeout=1)
+        router.stop()
+
+    def test_stop_claims_each_replica_exactly_once(self):
+        """REVIEW: stop() used to read _healthy outside the lock, so a
+        concurrent fail_replica could stop the same engine twice (or a
+        just-downed replica got stopped again with drain=True).  Both
+        paths now claim the replica under the lock first."""
+        router = Router([self._replica() for _ in range(2)])
+        router.start()
+        stops = []
+        for i, eng in enumerate(router._replicas):
+            orig = eng.stop
+
+            def spy(drain=True, _i=i, _orig=orig):
+                stops.append((_i, drain))
+                _orig(drain=drain)
+
+            eng.stop = spy
+        router.stop()
+        router.fail_replica(0)  # already claimed: must not stop again
+        router.stop()           # idempotent
+        assert stops == [(0, True), (1, True)]
+
+    def test_restart_restores_replica_health(self):
+        router = Router([self._replica()])
+        router.start()
+        router.stop()
+        assert router.healthy_replicas() == []
+        router.start()
+        assert router.healthy_replicas() == [0]
+        router.submit(GenRequest(request_id=0, txt=_txt(0),
+                                 latent_shape=(2,)))
+        assert router.result(0, timeout=30).latents.shape == (2,)
+        router.stop()
