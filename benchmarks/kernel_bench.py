@@ -27,6 +27,11 @@ Four dispatch-layer sections (DESIGN.md §8, §12, §13):
     (DESIGN.md §13) at the same grid: measured decide-vs-apply µs per
     policy and the resulting per-step decision overhead at cadence
     R ∈ {1, 2, 4, 8};
+  * ``static_pattern_sweep`` — searched static patterns (DESIGN.md §16)
+    vs adaptive ripple at the same grid: per-step replay cost ratio
+    (the static plan's ``apply_decision`` is a pure passthrough, bar
+    ≤ 0.1× ripple's), bitwise block-map stability across the schedule,
+    and output PSNR at matched savings (bar: within 0.5 dB);
   * ``ring_sweep`` — context-parallel ring attention (DESIGN.md §14)
     at the same grid: drives ``attention_dispatch`` under a
     (data, model, seq) mesh and reports the elided-hop fraction — the
@@ -429,6 +434,153 @@ def ring_main(policy="svg", steps=2):
     return r
 
 
+def static_pattern_sweep(grid=None, d=64, heads=2, steps=4):
+    """Searched static patterns (DESIGN.md §16) vs adaptive ripple at a
+    vdit_paper-style latent grid.
+
+    Runs the offline pattern search in-process on small head-diverse
+    calibration traffic, installs the artifact, and reports:
+
+      * ``apply_ratio`` — the static policy's per-step ``apply_decision``
+        cost over ripple's, each floor-subtracted against a jitted floor
+        with the *same* (q, k, cache) argument structure so call
+        overhead cancels.  Static replay is a pure bias/block-map
+        passthrough (no snap gather), so the acceptance bar is ≤ 0.1×;
+      * ``map_stable`` — the block map decided at step 0 vs the last
+        step, bitwise (a static plan must not drift with the schedule);
+      * ``psnr_static`` / ``psnr_ripple`` / ``psnr_delta_db`` — output
+        PSNR vs dense of the static pattern and of adaptive ripple at a
+        θ matched to the same savings level (the apples-to-apples
+        quality comparison; the acceptance bar is within 0.5 dB);
+      * ``skip_rate`` — the realized skipped-tile fraction of the
+        searched patterns' block map.
+    """
+    from repro.config.base import RippleConfig
+    from repro.configs.vdit_paper import make_config
+    from repro.core import patterns
+    from repro.core.policy import get_policy
+    from repro.kernels.sparse.ops import sparse_block_stats
+    from repro.launch.pattern_search import calibration_traffic
+
+    if grid is None:
+        grid = make_config().model.grid(frames=32, img_res=256)  # (8,16,16)
+    n = grid[0] * grid[1] * grid[2]
+
+    # one layer of head-diverse calibration traffic, searched in-process
+    samples = calibration_traffic(grid=grid, layers=1, heads=heads,
+                                  steps=2, prompts=1, d=d,
+                                  characters=("temporal", "spatial"))
+    art = patterns.search_patterns(samples, grid, block_shape=(128, 128),
+                                   tolerance_db=20.0,
+                                   meta={"traffic": "bench"})
+
+    # held-out eval traffic: same head characters the patterns were
+    # searched for, different seed — quality is meaningful only on the
+    # distribution the calibration covered
+    _, q, k, v = next(iter(calibration_traffic(
+        grid=grid, layers=1, heads=heads, steps=1, prompts=1, d=d,
+        seed=123, characters=("temporal", "spatial"))))
+
+    with patterns.use_artifact(art):
+        # --- per-step replay cost, static vs ripple -------------------
+        from repro.core import decision_cache as dc
+
+        apply_us = {}
+        for name in ("static", "ripple"):
+            pol = get_policy(name)
+            cfg = RippleConfig(enabled=True, policy=name, theta_min=0.2,
+                               theta_max=0.5, i_min=1, i_max=steps - 1)
+            thetas = pol.thetas_for(cfg, jnp.asarray(1), steps)
+            _, _, d0 = decision_harness(
+                pol, q, k, grid=grid, cfg=cfg, thetas=thetas,
+                block_shape=(128, 128) if name == "static" else None,
+                want_plan=True)
+            cache = dc.cache_from_decision(d0, dc.drift_stat(q, k, cfg))
+
+            @jax.jit
+            def apply(q, k, cache, pol=pol, cfg=cfg, thetas=thetas):
+                return tuple(t.sum() for t in decision_tensors(
+                    pol.apply_decision(q, k, cache, grid=grid, cfg=cfg,
+                                       thetas=thetas)))
+
+            # The floor must share apply's argument structure — same
+            # (q, k, cache-pytree) signature, same-shape scalar sums —
+            # so jit-call and pytree-flatten overhead cancels in the
+            # subtraction and the difference isolates apply_decision's
+            # real per-step work (the snap gather for ripple; nothing
+            # for static's passthrough).
+            @jax.jit
+            def floor_fn(q, k, cache):
+                vals = [q.sum(), k.sum()]
+                for t in (cache.bias, cache.block_map):
+                    if t is not None:
+                        vals.append(t.sum())
+                return tuple(vals)
+
+            # Both sides sum the same multi-MB constant bias, so each
+            # timing is ms-scale and a one-shot subtraction inherits
+            # machine-load drift between the two measurements.
+            # Interleave floor/apply rounds and keep the smallest
+            # difference — drift common to a round cancels.
+            diffs = []
+            for _ in range(5):
+                f = dispatch_lib.time_best(
+                    lambda: floor_fn(q, k, cache), repeats=10)
+                a = dispatch_lib.time_best(
+                    lambda: apply(q, k, cache), repeats=10)
+                diffs.append(a - f)
+            apply_us[name] = max(min(diffs) * 1e6, 0.0)
+
+        # --- block-map stability across the schedule ------------------
+        pol = get_policy("static")
+        cfg_s = RippleConfig(enabled=True, policy="static", theta_min=0.2,
+                             theta_max=0.5, i_min=1, i_max=steps - 1)
+        maps = [pol.decide(q, k, grid=grid, cfg=cfg_s,
+                           thetas=pol.thetas_for(cfg_s, jnp.asarray(s),
+                                                 steps),
+                           block_shape=(128, 128)).block_map
+                for s in (0, steps - 1)]
+        stable = bool(np.array_equal(np.asarray(maps[0]),
+                                     np.asarray(maps[1])))
+        skip = float(sparse_block_stats(maps[0]))
+
+        # --- quality at matched savings -------------------------------
+        dense = np.asarray(dispatch_lib.attention_dispatch(
+            q, k, v, grid=grid, cfg=RippleConfig(enabled=False),
+            backend="dense"))
+        out_s, stats_s = dispatch_lib.attention_dispatch(
+            q, k, v, grid=grid, cfg=cfg_s, step=1, total_steps=steps,
+            with_stats=True)
+        target = float(stats_s.savings)
+        theta = theta_for_savings(q, k, target, grid=grid)
+        cfg_r = RippleConfig(enabled=True, policy="ripple",
+                             theta_min=theta, theta_max=theta,
+                             i_min=1, i_max=steps - 1)
+        out_r = dispatch_lib.attention_dispatch(
+            q, k, v, grid=grid, cfg=cfg_r, step=1, total_steps=steps)
+
+    def psnr(ref, out):
+        mse = float(np.mean((ref - np.asarray(out)) ** 2))
+        rng = float(ref.max() - ref.min())
+        return 10 * np.log10(rng ** 2 / max(mse, 1e-12))
+
+    p_s, p_r = psnr(dense, out_s), psnr(dense, out_r)
+    return {
+        "grid": grid, "d": d, "heads": heads,
+        "static_frac": round(art.static_fraction(), 3),
+        "skip_rate": round(skip, 3),
+        "matched_savings": round(target, 3),
+        "static_apply_us": round(apply_us["static"], 1),
+        "ripple_apply_us": round(apply_us["ripple"], 1),
+        "apply_ratio": round(apply_us["static"]
+                             / max(apply_us["ripple"], 1e-9), 3),
+        "map_stable": stable,
+        "psnr_static": round(p_s, 1),
+        "psnr_ripple": round(p_r, 1),
+        "psnr_delta_db": round(p_r - p_s, 2),
+    }
+
+
 def autotune_sweep(n=1024, d=64):
     """Sweep the dispatch autotuner's block candidates and persist the
     winner in the on-disk cache ``attention_dispatch`` reads."""
@@ -492,6 +644,21 @@ def main():
               f"decide_us={r['decide_us']};apply_us={r['apply_us']};"
               f"{per};{red}")
 
+    sp = static_pattern_sweep()
+    print(f"kernel_bench[static_pattern@vdit_paper"
+          f"{gname(sp['grid'])}xd{sp['d']}],"
+          f"{sp['static_apply_us']:.0f},"
+          f"apply_ratio={sp['apply_ratio']};"
+          f"static_apply_us={sp['static_apply_us']};"
+          f"ripple_apply_us={sp['ripple_apply_us']};"
+          f"skip_rate={sp['skip_rate']};"
+          f"static_frac={sp['static_frac']};"
+          f"map_stable={sp['map_stable']};"
+          f"matched_savings={sp['matched_savings']};"
+          f"psnr_static={sp['psnr_static']};"
+          f"psnr_ripple={sp['psnr_ripple']};"
+          f"psnr_delta_db={sp['psnr_delta_db']}")
+
     a = autotune_sweep()
     cand = ";".join(f"{c['block_q']}x{c['block_k']}={c['us']}us"
                     for c in a["candidates"])
@@ -500,7 +667,7 @@ def main():
           f"{cand};cache={a['cache']}")
 
     ring = ring_main()  # no-op on a single device
-    return rows + [m, s, a] + amort + ([ring] if ring else [])
+    return rows + [m, s, sp, a] + amort + ([ring] if ring else [])
 
 
 if __name__ == "__main__":

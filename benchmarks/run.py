@@ -5,11 +5,14 @@ wall time of the whole benchmark computation on this CPU container
 (relative only); ``derived`` is the headline metric reproduced from the
 paper.  Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
 
-``--policy NAME [--steps N]`` runs only the reuse-policy sweep
-(benchmarks/policy_sweep.py) for that registered policy at a tiny grid —
-the CI smoke invocations are ``--policy dense --steps 2`` and
-``--policy svg --steps 2`` (the latter keeps the svg→sparse backend
-path compiling).  ``--reuse-every R`` additionally scans the steps
+``--policy NAME[,NAME...] [--steps N]`` runs only the reuse-policy
+sweep (benchmarks/policy_sweep.py) for those registered policies at a
+tiny grid — the CI smoke invocations are ``--policy dense --steps 2``
+and ``--policy svg --steps 2`` (the latter keeps the svg→sparse backend
+path compiling).  ``--grid TxHxW`` overrides the sweep's token grid —
+the default (2, 4, 4) is a single 128-block tile, so structural tile
+skips need a bigger grid (the static-pattern CI smoke runs
+``--policy static --grid 4x8x8``).  ``--reuse-every R`` additionally scans the steps
 carrying the cross-step decision cache (DESIGN.md §13) and reports its
 hit counters and reuse-PSNR rows.  ``--mesh DxMxS`` installs a dispatch
 mesh first; with a seq degree > 1 the run becomes the context-parallel
@@ -24,6 +27,11 @@ sparse backend's skip rate and the decision-cache hit counts) so the
 perf trajectory is tracked across PRs; CI uploads it as an artifact.
 ``--json PATH`` overrides the default ``BENCH_<policy|full>[_rR].json``
 name; ``--json ''`` disables the record.
+
+``--baseline PATH`` compares the fresh record against a committed one
+(``benchmarks/baselines/BENCH_seed.json``) and prints ``#``-prefixed
+per-benchmark walltime/derived deltas — parser-safe, so the comparison
+rides along any invocation without perturbing the CSV contract.
 """
 
 from __future__ import annotations
@@ -86,7 +94,7 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
         "created_unix": round(time.time(), 3),
         "args": {"quick": args.quick, "policy": args.policy,
                  "steps": args.steps, "reuse_every": args.reuse_every,
-                 "mesh": args.mesh},
+                 "mesh": args.mesh, "grid": getattr(args, "grid", None)},
         "walltime_s": round(walltime_s, 3),
         "benchmarks": rows,
         "failures": [{"module": m, "error": e} for m, e in failures],
@@ -98,7 +106,7 @@ def _write_record(path: str, args, rows, failures, walltime_s: float):
 
 
 def _default_json_path(args, ring: bool = False) -> str:
-    name = args.policy or "full"
+    name = (args.policy or "full").replace(",", "-")
     if args.reuse_every and args.reuse_every > 1:
         name += f"_r{args.reuse_every}"
     if ring:
@@ -106,13 +114,55 @@ def _default_json_path(args, ring: bool = False) -> str:
     return f"BENCH_{name}.json"
 
 
+def _print_baseline_deltas(path: str, rows) -> None:
+    """``#``-prefixed walltime/derived deltas vs a committed baseline
+    record.  Tolerant of missing/renamed benchmarks — CPU-container
+    walltimes are relative, so the deltas inform, they don't gate."""
+    try:
+        with open(path) as f:
+            base = json.load(f)
+        base_rows = {r["name"]: r for r in base.get("benchmarks", [])}
+    except (OSError, ValueError, TypeError, KeyError) as e:
+        print(f"# baseline {path}: unreadable ({e!r})", file=sys.stderr)
+        return
+    if not base_rows:
+        print(f"# baseline {path}: no benchmark rows", file=sys.stderr)
+        return
+    matched = 0
+    for r in rows:
+        b = base_rows.get(r["name"])
+        if b is None:
+            continue
+        matched += 1
+        b_us, us = float(b["us_per_call"]), r["us_per_call"]
+        # a sub-µs baseline (rounds to 0 in the record) has no
+        # meaningful relative delta
+        pct = (f"{100.0 * (us - b_us) / b_us:+.0f}%" if b_us >= 1.0
+               else "n/a")
+        line = f"# delta[{r['name']}]: us {b_us:.0f} -> {us:.0f} ({pct})"
+        if isinstance(r["derived"], float) \
+                and isinstance(b.get("derived"), float):
+            line += f"; derived {b['derived']:g} -> {r['derived']:g}"
+        print(line)
+    print(f"# baseline {path}: {matched}/{len(rows)} rows matched "
+          f"({len(base_rows)} in baseline)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow Tbl. 2 savings benchmark")
     ap.add_argument("--policy", default=None,
-                    help="run only the policy sweep, for this registered "
-                         "reuse policy, at a tiny smoke grid")
+                    help="run only the policy sweep, for these comma-"
+                         "separated registered reuse policies, at a tiny "
+                         "smoke grid")
+    ap.add_argument("--grid", default=None, metavar="TxHxW",
+                    help="token grid for the --policy sweep (default "
+                         "2x4x4; tile skips need a bigger grid, e.g. "
+                         "4x8x8)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare the fresh record against this committed "
+                         "BENCH_*.json and print #-prefixed deltas")
     ap.add_argument("--steps", type=int, default=None,
                     help="denoising-step count for the policy sweep")
     ap.add_argument("--reuse-every", type=int, default=None, metavar="R",
@@ -158,8 +208,14 @@ def main() -> None:
         elif args.policy is not None:
             from benchmarks import policy_sweep
 
-            policy_sweep.main(policies=[args.policy],
-                              steps=args.steps or 2, grid=(2, 4, 4),
+            grid = (2, 4, 4)
+            if args.grid:
+                parts = args.grid.lower().split("x")
+                if len(parts) != 3 or not all(p.isdigit() for p in parts):
+                    raise SystemExit(f"--grid wants TxHxW, got {args.grid!r}")
+                grid = tuple(int(p) for p in parts)
+            policy_sweep.main(policies=args.policy.split(","),
+                              steps=args.steps or 2, grid=grid,
                               reuse_every=args.reuse_every)
         else:
             from benchmarks import (fig7_mse, fig9_steps, fig11_window,
@@ -184,9 +240,12 @@ def main() -> None:
                     traceback.print_exc()
                     failures.append((mod.__name__, repr(e)))
 
+    rows = _parse_rows("".join(tee.chunks))
     if json_path:
-        _write_record(json_path, args, _parse_rows("".join(tee.chunks)),
-                      failures, time.perf_counter() - t0)
+        _write_record(json_path, args, rows, failures,
+                      time.perf_counter() - t0)
+    if args.baseline:
+        _print_baseline_deltas(args.baseline, rows)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         raise SystemExit(1)

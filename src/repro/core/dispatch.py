@@ -59,6 +59,7 @@ import json
 import math
 import os
 import time
+import warnings
 from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -242,15 +243,48 @@ def clear_plan_cache():
     _PLAN_CACHE.clear()
 
 
+# Versioned schema marker written into the autotune cache file.  Files
+# without the marker are accepted as legacy; a *mismatched* marker (or
+# corrupt/truncated JSON, or entries missing the block fields) warns
+# and regenerates instead of raising — a bad cache file must never
+# take down a launcher.
+_AUTOTUNE_SCHEMA = "repro-autotune/1"
+
+
+def _read_disk_cache(p: str) -> Dict[str, dict]:
+    try:
+        with open(p) as f:
+            raw = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        warnings.warn(f"autotune cache {p!r} is corrupt ({e}); "
+                      f"regenerating it", RuntimeWarning, stacklevel=3)
+        return {}
+    if not isinstance(raw, dict):
+        warnings.warn(f"autotune cache {p!r} is not a JSON object; "
+                      f"regenerating it", RuntimeWarning, stacklevel=3)
+        return {}
+    schema = raw.pop("__schema__", _AUTOTUNE_SCHEMA)
+    if schema != _AUTOTUNE_SCHEMA:
+        warnings.warn(f"autotune cache {p!r} has schema {schema!r} != "
+                      f"{_AUTOTUNE_SCHEMA!r}; regenerating it",
+                      RuntimeWarning, stacklevel=3)
+        return {}
+    bad = [k for k, v in raw.items()
+           if not (isinstance(v, dict) and "block_q" in v
+                   and "block_k" in v)]
+    if bad:
+        warnings.warn(f"autotune cache {p!r}: dropping malformed "
+                      f"entries {bad}", RuntimeWarning, stacklevel=3)
+    return {k: v for k, v in raw.items() if k not in bad}
+
+
 def _load_disk_cache(path: Optional[str] = None) -> Dict[str, dict]:
     global _DISK_CACHE, _DISK_CACHE_PATH
     p = path or autotune_cache_path()
     if _DISK_CACHE is None or p != _DISK_CACHE_PATH:
-        try:
-            with open(p) as f:
-                _DISK_CACHE = json.load(f)
-        except (OSError, ValueError):
-            _DISK_CACHE = {}
+        _DISK_CACHE = _read_disk_cache(p)
         _DISK_CACHE_PATH = p
     return _DISK_CACHE
 
@@ -262,7 +296,8 @@ def _store_disk(key: str, entry: dict, path: Optional[str] = None):
     os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
     tmp = p + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(cache, f, indent=1, sort_keys=True)
+        json.dump({"__schema__": _AUTOTUNE_SCHEMA, **cache}, f, indent=1,
+                  sort_keys=True)
     os.replace(tmp, p)
 
 
@@ -462,8 +497,14 @@ def resolve_plan(q_shape, v_shape, cfg: RippleConfig,
     n = q_shape[-2]
     resolved = resolve_backend(cfg, backend, has_bias=has_bias, n_tokens=n,
                                policy=pol)
+    # plan_token mixes in external decision state the policy bakes into
+    # compiled constants (the pattern artifact's content hash) so an
+    # artifact swap can never replay a stale plan; getattr keeps
+    # pre-token duck-typed policies working.
+    tok = getattr(pol, "plan_token", None)
     key = _bucket_key(q_shape, v_shape, resolved) \
-        + (pol.name, cfg.fused_mask, cfg.window, cfg.granularity)
+        + (pol.name, cfg.fused_mask, cfg.window, cfg.granularity,
+           tok(cfg) if callable(tok) else None)
     if mesh is not None:
         key = key + (_mesh_key(mesh), tuple(q_shape[:-2]),
                      grid, grid_slice is None)
@@ -585,10 +626,12 @@ def _run_pipeline_cached(q, k, v, thetas, scale, *, plan: DispatchPlan,
     from repro.core import decision_cache as dc
 
     extra = _decide_extra(plan, policy, cfg)
+    plan_once = getattr(policy, "plan_once", False)
     # The drift statistic is only worth its O(N·c) pass when the guard
-    # can act on it; with the guard off the carry keeps a zero stat so
-    # the pytree structure (and cadence behaviour) is identical.
-    if cfg.drift_tol > 0:
+    # can act on it; with the guard off — or for plan-once policies,
+    # whose decision is a trajectory constant — the carry keeps a zero
+    # stat so the pytree structure (and cadence behaviour) is identical.
+    if cfg.drift_tol > 0 and not plan_once:
         stat = dc.drift_stat(q, k, cfg)
     else:
         stat = jnp.zeros(q.shape[:-2], jnp.float32)
@@ -607,8 +650,14 @@ def _run_pipeline_cached(q, k, v, thetas, scale, *, plan: DispatchPlan,
                                       thetas=thetas, grid_slice=grid_slice)
             return d, dc.bump_hit(prev)
 
-        refresh = dc.refresh_due(step, cfg, stat, cached.ref_stat,
-                                 total_steps)
+        if plan_once:
+            # Refresh cadence of never: the step-0 plan is replayed for
+            # the whole trajectory (no reuse_every, no drift, no
+            # final-step re-decide) — DESIGN.md §16.
+            refresh = jnp.equal(jnp.asarray(step, jnp.int32), 0)
+        else:
+            refresh = dc.refresh_due(step, cfg, stat, cached.ref_stat,
+                                     total_steps)
         d, new_cache = jax.lax.cond(refresh, fresh, reuse, cached)
     return _execute_backend(d, v, scale, plan=plan, cfg=cfg), d, new_cache
 

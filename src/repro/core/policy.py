@@ -159,6 +159,11 @@ class ReusePolicy:
     is_dense: bool = False
     emits_block_map: bool = False
     caches_decisions: bool = False
+    # Cache-capable policies whose decision is a *constant* of the
+    # trajectory (offline-searched masks, core/patterns.py): the
+    # decision cache refreshes at step 0 only — no drift stat, no
+    # reuse_every cadence, no final-step re-decide (DESIGN.md §16).
+    plan_once: bool = False
 
     def will_emit_bias(self, cfg: RippleConfig) -> bool:
         """Will :meth:`decide` attach a logit bias under this config?
@@ -188,6 +193,15 @@ class ReusePolicy:
         fall back to the replicated token axis (batch/head sharding
         still applies) — the ring never guesses."""
         return False
+
+    def plan_token(self, cfg: Optional[RippleConfig] = None):
+        """Hashable token identifying external state the decision bakes
+        in as compile-time constants (e.g. the pattern artifact's
+        content-hash version, DESIGN.md §16).  The dispatch plan cache
+        and the serving bucket key mix it in, so swapping the external
+        state can never replay a stale compiled plan.  None when the
+        policy has no such state."""
+        return None
 
     # -- per-step threshold schedule ------------------------------------
 
@@ -633,3 +647,8 @@ register_policy(RipplePolicy())
 register_policy(SVGPolicy())
 register_policy(EqualMSEPolicy())
 register_policy(DensePolicy())
+
+# The pattern-search policies (``static``, ``rainfusion``) live in
+# core/patterns.py and register themselves on import; importing here
+# makes every registry consumer see them without a separate import.
+from repro.core import patterns as _patterns  # noqa: E402,F401

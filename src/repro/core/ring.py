@@ -330,25 +330,37 @@ def _snap_pipeline(q, k, v, thetas, scale, *, plan, grid, cfg, step,
 
 
 def _mask_pipeline(q, k, v, scale, *, plan, grid, cfg, step, cached,
-                   want_cache, total_steps):
+                   want_cache, total_steps, policy=None):
     from repro.core import decision_cache as dc
 
     nl = q.shape[-2]
-    # Sharded online head classification — a collective, so it runs
-    # every step regardless of the refresh verdict.
-    is_spatial = classify_heads_sharded(q, k, grid, SEQ_AXIS)
     off = jax.lax.axis_index(SEQ_AXIS) * nl
+    plan_once = getattr(policy, "plan_once", False)
+    hook = getattr(policy, "ring_bias_rows", None)
+    if hook is not None:
+        # Constant-mask policies (core/patterns.py) render their own
+        # shard-local rows — position-determined, no collectives, and
+        # per-hop all-SKIP elision falls straight out of the constant
+        # map in _sparse_ring_execute.
+        def bias_rows():
+            return hook(q, k, grid=grid, cfg=cfg, row_offset=off,
+                        n_rows=nl)
+    else:
+        # Sharded online head classification (svg) — a collective, so
+        # it runs every step regardless of the refresh verdict.
+        is_spatial = classify_heads_sharded(q, k, grid, SEQ_AXIS)
 
-    def bias_rows():
-        keep = svg_keep_rows(is_spatial, grid, off, nl)
-        return jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
+        def bias_rows():
+            keep = svg_keep_rows(is_spatial, grid, off, nl)
+            return jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)
 
     if not want_cache:
         out, _ = _sparse_ring_execute(q, k, v, bias_rows(), plan,
                                       plan.seq_shards)
         return out
 
-    stat = _drift(q, k, cfg)
+    stat = jnp.zeros(q.shape[:-2], jnp.float32) if plan_once \
+        else _drift(q, k, cfg)
 
     def fresh(prev):
         hits, refreshes = _counters(prev, stat)
@@ -360,6 +372,11 @@ def _mask_pipeline(q, k, v, scale, *, plan, grid, cfg, step, cached,
 
     if cached is None:
         cache = fresh(None)
+    elif plan_once:
+        # Refresh cadence of never (DESIGN.md §16): replay the step-0
+        # constant rows for the whole trajectory.
+        refresh = jnp.equal(jnp.asarray(step, jnp.int32), 0)
+        cache = jax.lax.cond(refresh, fresh, dc.bump_hit, cached)
     else:
         refresh = dc.refresh_due(step, cfg, stat,
                                  cached.ref_stat[..., 0], total_steps)
@@ -382,7 +399,7 @@ def ring_pipeline(q, k, v, thetas, scale, *, plan, grid,
         return _mask_pipeline(q, k, v, scale, plan=plan, grid=grid,
                               cfg=cfg, step=step, cached=cached,
                               want_cache=want_cache,
-                              total_steps=total_steps)
+                              total_steps=total_steps, policy=policy)
     return _snap_pipeline(q, k, v, thetas, scale, plan=plan, grid=grid,
                           cfg=cfg, step=step, cached=cached,
                           want_cache=want_cache, total_steps=total_steps)

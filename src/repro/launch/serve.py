@@ -275,6 +275,13 @@ def main(argv=None):
                              "pallas", "sparse"),
                     help="override RippleConfig.backend for the dispatch "
                          "layer (default: the arch config's setting)")
+    ap.add_argument("--pattern-artifact", default=None, metavar="PATH",
+                    help="install a searched pattern artifact "
+                         "(launch/pattern_search.py) for the static / "
+                         "rainfusion policies; errors if the file is "
+                         "missing or corrupt.  Default: the "
+                         "REPRO_PATTERN_ARTIFACT env var / user cache "
+                         "(loaded lazily, missing file tolerated)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
@@ -288,6 +295,13 @@ def main(argv=None):
 
     if args.policy_module:
         importlib.import_module(args.policy_module)
+    if args.pattern_artifact is not None:
+        from repro.core import patterns
+
+        art = patterns.install_artifact(args.pattern_artifact)
+        log.info("pattern artifact %s: %d heads, %.0f%% static",
+                 art.version, len(art.heads),
+                 100.0 * art.static_fraction())
     if args.policy is not None and args.policy not in list_policies():
         ap.error(f"unknown policy {args.policy!r}; registered: "
                  f"{list_policies()} (use --policy-module to register "

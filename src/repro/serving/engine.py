@@ -71,9 +71,14 @@ log = get_logger("serve")
 # shape — two requests with different prompt lengths L can never stack
 # into one ``(B, L, D)`` batch, so L is bucket identity, not a
 # stack-time crash; stream_every is the chunked-delivery cadence
-# (None = monolithic) — it changes the compiled chunk program.
+# (None = monolithic) — it changes the compiled chunk program; the
+# trailing pattern token is the bucket policy's ``plan_token`` (the
+# pattern artifact's content-hash version, DESIGN.md §16) — a
+# ``static``/``rainfusion`` sampler bakes the artifact's constant masks
+# into its compiled program, so traffic after an artifact swap must
+# never share the stale compiled entry.
 BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int], int,
-                  Tuple[int, ...], Optional[int]]
+                  Tuple[int, ...], Optional[int], Optional[str]]
 
 
 def _seq_shards() -> int:
@@ -85,6 +90,22 @@ def _seq_shards() -> int:
     if mesh is not None and "seq" in mesh.axis_names:
         return int(mesh.shape["seq"])
     return 1
+
+
+def _pattern_token(policy_name: Optional[str]) -> Optional[str]:
+    """The bucket policy's plan token (pattern-artifact version), so an
+    artifact swap between requests invalidates compiled samplers instead
+    of silently replaying a stale constant plan."""
+    from repro.core.policy import get_policy
+
+    if not policy_name:
+        return None
+    try:
+        pol = get_policy(policy_name)
+    except KeyError:
+        return None
+    tok = getattr(pol, "plan_token", None)
+    return tok(None) if callable(tok) else None
 
 
 def _positional_arity(fn: Optional[Callable]) -> int:
@@ -432,7 +453,8 @@ class DiffusionEngine:
                 else self.default_reuse_every,
                 _seq_shards(),
                 tuple(np.shape(req.txt)),
-                req.stream_every)
+                req.stream_every,
+                _pattern_token(req.policy or self.default_policy))
 
     def _next_bucket(self) -> Optional[BucketKey]:
         """SLO-aware drain order (DESIGN.md §15.1, logic in

@@ -201,8 +201,9 @@ class TestMixedTrafficConcurrency:
         rid = 0
         # bucket keys carry the policy name, reuse cadence, the
         # dispatch mesh's seq-shard degree (1 = no ring), the text-
-        # embedding shape, and the streaming cadence (None = monolithic)
-        hot = ((2, 2), 2, None, None, 1, (1, 1), None)
+        # embedding shape, the streaming cadence (None = monolithic),
+        # and the policy's plan token (pattern-artifact version)
+        hot = ((2, 2), 2, None, None, 1, (1, 1), None, None)
         for round_ in range(3):
             for shape, steps in ((hot[0], hot[1]), ((4, 4), 2), ((8, 8), 2)):
                 eng.submit(GenRequest(request_id=rid, txt=_txt(rid),
