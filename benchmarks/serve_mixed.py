@@ -35,6 +35,14 @@ Reported rows (CSV: name,us_per_call,derived):
                                    met=..;missed=.. for that policy
   serve_mixed[router_p50/p95]    — router fleet latency (us); derived
                                    adds replicas=..;requeued=..
+  serve_mixed[guard_off_p50/p95] — sentinel-off vs sentinel-on latency
+  serve_mixed[guard_on_p50/p95]    (us); derived = overhead_pct=..
+  serve_mixed[guardrail_overhead]— p50 overhead percent (DESIGN.md §17)
+  serve_mixed[chaos_completed]   — chaos drill only (``--inject-faults``
+                                   or ``$REPRO_FAULTS``): completions;
+                                   derived = degraded/failover counters.
+                                   The ``--json`` record then carries a
+                                   full ``chaos`` object.
 
 ``--json PATH`` additionally writes a BENCH-style record of the rows
 (the same schema ``benchmarks/run.py`` emits), so CI can assert the
@@ -45,6 +53,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -215,6 +224,104 @@ def _router_section(arch, shapes, params, args, rows):
               f"requeued={m['router_requeued']}")
 
 
+def _guardrail_section(arch, shapes, params, traffic, rows):
+    """Sentinel overhead (DESIGN.md §17): the same steady-state stream
+    with the in-graph guardrail sentinels off vs on.  The acceptance bar
+    is <2% on p50 — the sentinels are elementwise passes next to the
+    attention math."""
+    from repro.serving.engine import DiffusionEngine
+
+    stats = {}
+    for tag, sent in (("guard_off", False), ("guard_on", True)):
+        factory, _ = make_sampler_factory(arch, shapes, params,
+                                          sentinel=sent)
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=4,
+                              max_wait_s=0.02,
+                              guardrail=True if sent else None)
+        eng.start()
+        _drive(eng, traffic)  # warm
+        # best-of-2 measured passes: scheduling noise on a serial CPU
+        # device dwarfs the sentinels' cost, and the min is the stable
+        # statistic for an overhead comparison
+        passes = [_drive(eng, traffic)[0] for _ in range(2)]
+        eng.stop()
+        stats[tag] = min(passes, key=lambda l: np.percentile(l, 50))
+    p50_off = np.percentile(stats["guard_off"], 50)
+    p50_on = np.percentile(stats["guard_on"], 50)
+    overhead = (p50_on - p50_off) / max(p50_off, 1e-9)
+    derived = f"overhead_pct={overhead * 100:.2f}"
+    for tag in ("guard_off", "guard_on"):
+        lat = stats[tag]
+        rows += [
+            f"serve_mixed[{tag}_p50],{np.percentile(lat, 50) * 1e6:.0f},"
+            f"{derived}",
+            f"serve_mixed[{tag}_p95],{np.percentile(lat, 95) * 1e6:.0f},"
+            f"{derived}",
+        ]
+    rows += [f"serve_mixed[guardrail_overhead],{overhead * 100:.2f},"
+             f"p50_off_us={p50_off * 1e6:.0f};p50_on_us={p50_on * 1e6:.0f}"]
+
+
+def _chaos_section(arch, shapes, params, args):
+    """Chaos drill (DESIGN.md §17.3): serve the stream through a
+    2+-replica router with the guardrail ladder shared across replicas
+    and the requested faults armed; kill the deepest replica right
+    after submit (its first batch is still compiling, so queued
+    requests demonstrably fail over).  Every request must still
+    complete.  Runs *instead of* the perf sections — armed faults would
+    corrupt their numbers."""
+    from repro.core.guardrail import DegradationLadder
+    from repro.serving import faults as fault_lib
+    from repro.serving.engine import DiffusionEngine
+    from repro.serving.router import Router
+
+    fault_lib.install_faults(args.inject_faults)
+    fault = fault_lib.active_faults()
+    ladder = DegradationLadder()
+    factory, _ = make_sampler_factory(arch, shapes, params, sentinel=True)
+    replicas = max(args.router_replicas, 2)
+    router = Router(
+        [DiffusionEngine(sampler_factory=factory, max_batch=4,
+                         max_wait_s=0.02, guardrail=ladder)
+         for _ in range(replicas)],
+        probe_interval_s=0.25)
+    router.start()
+    traffic = mixed_request_stream(arch, shapes, args.requests)
+    for _, req in traffic:
+        router.submit(req)
+    if (fault is not None and fault.spec("kill_replica") is not None
+            and fault.take("kill_replica") is not None):
+        depths = router.depths()
+        idx = max(depths, key=depths.get)
+        print(f"# chaos: killing replica {idx} (depth {depths[idx]})",
+              file=sys.stderr)
+        router.fail_replica(idx)
+    completed = degraded = 0
+    errors = []
+    for _, req in traffic:
+        try:
+            r = router.result(req.request_id, timeout=600)
+            completed += 1
+            degraded += int(r.degraded)
+        except Exception as e:  # noqa: BLE001 — the drill reports, not raises
+            errors.append(f"{req.request_id}: {e!r}")
+    m = router.metrics()
+    router.stop()
+    counters = dict(fault.counters()) if fault is not None else {}
+    fault_lib.clear_faults()
+    lm = ladder.metrics()
+    return {
+        "requests": len(traffic),
+        "completed": completed,
+        "degraded_count": degraded,
+        "failover_count": m["router_requeued"],
+        "dense_fallbacks": lm["dense_fallbacks"],
+        "ladder": lm,
+        "fault_counters": counters,
+        "errors": errors,
+    }
+
+
 def main(argv=()) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=REQUESTS)
@@ -229,7 +336,13 @@ def main(argv=()) -> None:
                          "replicas (0 = skip)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH-style record of the rows")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="fault spec (see repro.serving.faults); also "
+                         "read from $REPRO_FAULTS.  When set, the chaos "
+                         "drill runs instead of the perf sections")
     args = ap.parse_args(list(argv))
+    if args.inject_faults is None:
+        args.inject_faults = os.environ.get("REPRO_FAULTS", "").strip() or None
 
     arch = get_smoke_config("vdit-paper")
     shapes = mixed_gen_shapes(arch, smoke=True)
@@ -238,10 +351,19 @@ def main(argv=()) -> None:
 
     t0 = time.perf_counter()
     rows = []
-    _bucketed_vs_single(arch, shapes, params, traffic, rows)
-    _scheduler_section(arch, shapes, params, args, rows)
-    if args.router_replicas > 0:
-        _router_section(arch, shapes, params, args, rows)
+    chaos = None
+    if args.inject_faults:
+        chaos = _chaos_section(arch, shapes, params, args)
+        rows += [f"serve_mixed[chaos_completed],{chaos['completed']},"
+                 f"degraded={chaos['degraded_count']};"
+                 f"failover={chaos['failover_count']};"
+                 f"requests={chaos['requests']}"]
+    else:
+        _bucketed_vs_single(arch, shapes, params, traffic, rows)
+        _scheduler_section(arch, shapes, params, args, rows)
+        _guardrail_section(arch, shapes, params, traffic, rows)
+        if args.router_replicas > 0:
+            _router_section(arch, shapes, params, args, rows)
 
     for row in rows:
         print(row)
@@ -255,11 +377,14 @@ def main(argv=()) -> None:
             "args": {"requests": args.requests,
                      "deadline_ms": args.deadline_ms,
                      "stream_every": args.stream_every,
-                     "router_replicas": args.router_replicas},
+                     "router_replicas": args.router_replicas,
+                     "inject_faults": args.inject_faults},
             "walltime_s": round(time.perf_counter() - t0, 3),
             "benchmarks": _parse_rows("\n".join(rows)),
             "failures": [],
         }
+        if chaos is not None:
+            record["chaos"] = chaos
         with open(args.json, "w") as f:
             json.dump(record, f, indent=1, sort_keys=True)
             f.write("\n")

@@ -97,6 +97,14 @@ class RippleConfig:
     drift_tol: float = 0.0
     # How many channels the drift statistic samples (stride-subsampled).
     drift_channels: int = 8
+    # Runtime quality sentinels (core/guardrail, DESIGN.md §17): count
+    # non-finite attention-output entries into the decision-cache carry
+    # so the serving engine's degradation ladder can trip on them.
+    sentinel: bool = False
+    # Dense drift probe cadence: every K denoising steps re-compute one
+    # (batch, head) slice densely and max-accumulate the relative error
+    # into the carry.  0 disables the probe (non-finite sentinel only).
+    sentinel_probe_every: int = 0
     # Experimental 1-D reuse on LM sequence windows. Off by default and
     # not part of the reproduction claims.
     enable_1d: bool = False

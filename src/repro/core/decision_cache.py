@@ -69,12 +69,18 @@ class CachedDecision:
     # path populates it; everywhere else it stays None so existing
     # cache structures are untouched.
     elided: Optional[jax.Array] = None
+    # Guardrail sentinels (DESIGN.md §17): running non-finite count of
+    # the attention outputs and max dense-probe relative error, both
+    # lead-shaped like ``hits``.  Populated only when ``cfg.sentinel``
+    # is on; None otherwise, same contract as ``elided``.
+    nonfinite: Optional[jax.Array] = None  # i32 lead-shaped
+    probe_err: Optional[jax.Array] = None  # f32 lead-shaped
 
 
 jax.tree_util.register_dataclass(
     CachedDecision,
     data_fields=["q_idx", "k_idx", "bias", "block_map", "ref_stat",
-                 "hits", "refreshes", "elided"],
+                 "hits", "refreshes", "elided", "nonfinite", "probe_err"],
     meta_fields=[])
 
 
@@ -155,7 +161,11 @@ def cache_from_decision(decision: ReuseDecision, stat: jax.Array,
     return CachedDecision(
         q_idx=decision.q_src, k_idx=decision.k_src, bias=decision.bias,
         block_map=decision.block_map, ref_stat=stat, hits=hits,
-        refreshes=refreshes)
+        refreshes=refreshes,
+        # Sentinel leaves accumulate *across* refreshes — both lax.cond
+        # arms must carry them so the pytree structures match.
+        nonfinite=None if prev is None else prev.nonfinite,
+        probe_err=None if prev is None else prev.probe_err)
 
 
 def bump_hit(cached: CachedDecision) -> CachedDecision:

@@ -594,6 +594,27 @@ def _execute_backend(d: ReuseDecision, v, scale, *, plan: DispatchPlan,
     return dense_attention(d.q, d.k, v, scale, d.bias)
 
 
+def _inject_attn_nan(out, step):
+    """Chaos-harness hook (``serving.faults``, DESIGN.md §17.3): when an
+    ``attn_nan`` fault is armed at trace time, flip this call's output
+    to NaN at the spec'd denoising step.  Only the sparse pipelines call
+    this — the dispatcher's dense path never does — so a degraded
+    bucket's dense recompile clears the fault, the way a real
+    sparse-kernel bug would."""
+    if step is None:
+        return out
+    from repro.serving import faults as fault_lib
+
+    fault = fault_lib.active_faults()
+    spec = fault.spec("attn_nan") if fault is not None else None
+    if spec is None:
+        return out
+    fault.note_fired("attn_nan")
+    at = jnp.asarray(int(spec.param("step", 0)), jnp.int32)
+    return jnp.where(jnp.equal(jnp.asarray(step, jnp.int32), at),
+                     jnp.full_like(out, jnp.nan), out)
+
+
 def _run_pipeline(q, k, v, thetas, scale, bias, *, plan: DispatchPlan,
                   grid, cfg: RippleConfig, grid_slice,
                   policy: ReusePolicy):
@@ -659,7 +680,17 @@ def _run_pipeline_cached(q, k, v, thetas, scale, *, plan: DispatchPlan,
             refresh = dc.refresh_due(step, cfg, stat, cached.ref_stat,
                                      total_steps)
         d, new_cache = jax.lax.cond(refresh, fresh, reuse, cached)
-    return _execute_backend(d, v, scale, plan=plan, cfg=cfg), d, new_cache
+    out = _inject_attn_nan(_execute_backend(d, v, scale, plan=plan,
+                                            cfg=cfg), step)
+    if cfg.sentinel:
+        from repro.core import guardrail
+
+        # Sentinel readings ride the cache carry (DESIGN.md §17): the
+        # probe compares against the *original* q/k, not the snapped
+        # operands — it measures the full approximation error.
+        new_cache = guardrail.attach_sentinel(new_cache, out, q, k, v,
+                                              scale, step, cfg)
+    return out, d, new_cache
 
 
 def _operand_spec(plan: DispatchPlan, ndim: int) -> P:
@@ -876,12 +907,15 @@ def attention_dispatch(
     # bias would need its own spec — both stay on the replicated path.
     if (mesh is not None and plan.sharded and bias is None
             and not with_stats):
-        return _sharded_pipeline(q, k, v, thetas, scale, plan=plan,
-                                 mesh=mesh, grid=grid, cfg=cfg,
-                                 grid_slice=grid_slice, policy=pol,
-                                 step=step, cached=cached_decision,
-                                 want_cache=want_cache,
-                                 total_steps=total_steps)
+        res = _sharded_pipeline(q, k, v, thetas, scale, plan=plan,
+                                mesh=mesh, grid=grid, cfg=cfg,
+                                grid_slice=grid_slice, policy=pol,
+                                step=step, cached=cached_decision,
+                                want_cache=want_cache,
+                                total_steps=total_steps)
+        # The cached body injects faults inside shard_map; the plain
+        # sharded path returns the bare output, so inject here.
+        return res if want_cache else _inject_attn_nan(res, step)
 
     if want_cache:
         out, decision, new_cache = _run_pipeline_cached(
@@ -895,6 +929,7 @@ def attention_dispatch(
     out, decision = _run_pipeline(
         q, k, v, thetas, scale, bias, plan=plan, grid=grid, cfg=cfg,
         grid_slice=grid_slice, policy=pol)
+    out = _inject_attn_nan(out, step)
 
     if with_stats:
         return out, pol.stats(decision)

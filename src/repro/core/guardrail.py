@@ -1,0 +1,263 @@
+"""Runtime quality guardrails (DESIGN.md §17).
+
+TimeRipple's contract — ~85% attention compute saved at <0.06% quality
+loss — is enforced *offline* (policy_sweep PSNR rows, pattern-search
+scoring).  At serve time nothing used to stand between a sparse-kernel
+NaN, a drifted decision cache, or a corrupt pattern artifact and a
+broken video shipped to a user.  This module is that missing layer, in
+two halves:
+
+**In-graph sentinels** (cheap, traced into the sampler):
+
+  * non-finite detection — an ``isfinite`` reduction over the attention
+    output per dispatch call, accumulated into the decision-cache carry
+    (:class:`~repro.core.decision_cache.CachedDecision.nonfinite`), and
+    over the latents per denoising step (the samplers' ``sentinel``
+    flag).  O(N) elementwise passes next to O(N²·d) attention — noise.
+  * a sampled drift proxy — every ``cfg.sentinel_probe_every`` steps,
+    one (batch, head) slice of the sparse output is re-computed densely
+    and the relative error is max-accumulated into
+    ``CachedDecision.probe_err``.  One dense (N, d) attention per probe
+    step per call: a bounded, scheduled cost, not a per-step one.
+
+**The host-side degradation ladder** (:class:`DegradationLadder`): the
+engine reads the sentinels after every batch (plus a host ``isfinite``
+over the returned latents, which covers samplers that thread no cache)
+and, on a trip, steps the bucket's policy down one rung —
+``rainfusion``/``static`` → ``ripple`` → ``dense`` — then re-serves the
+batch under the degraded bucket key, so the result that ships is
+finite.  Degradation is *sticky with a cool-down*: the bucket family
+stays at its rung until ``cooldown_batches`` consecutive clean batches,
+then one batch probes the original policy (re-promotion probe); a clean
+probe restores the base policy, a tripped one falls back.  The ladder
+keys on the bucket *family* (bucket key minus the policy and pattern
+token), so a degraded bucket recompiles under its effective policy
+instead of replaying the tripped program, and one ladder shared across
+router replicas makes the state survive failover.
+
+Everything here is deliberately dependency-light: the dispatch layer
+imports it lazily from the cached pipeline, the engine from its serve
+loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Hashable, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DEGRADATION_LADDER", "DegradationLadder", "GuardrailConfig",
+           "attach_sentinel", "dense_probe_error", "next_policy",
+           "nonfinite_count"]
+
+
+# ---------------------------------------------------------------------------
+# In-graph sentinels
+# ---------------------------------------------------------------------------
+
+
+def nonfinite_count(x: jax.Array, lead_ndim: Optional[int] = None):
+    """i32 count of non-finite entries of ``x``.  With ``lead_ndim`` the
+    count keeps that many leading dims (one cell per (batch, head, ...)
+    slice — the decision-cache leaf shape, shard-local under shard_map);
+    without it the reduction is total (the samplers' latent sentinel)."""
+    bad = ~jnp.isfinite(x)
+    if lead_ndim is None:
+        return jnp.sum(bad).astype(jnp.int32)
+    axes = tuple(range(lead_ndim, x.ndim))
+    return jnp.sum(bad, axis=axes).astype(jnp.int32)
+
+
+def dense_probe_error(q, k, v, out, scale) -> jax.Array:
+    """Relative L2 error of one attention slice vs its dense recompute.
+    ``q``/``k``/``v``/``out`` are single (N, d) slices.  A NaN anywhere
+    propagates into the statistic — the probe doubles as a second
+    non-finite sentinel."""
+    q32, k32, v32 = (a.astype(jnp.float32) for a in (q, k, v))
+    logits = (q32 @ k32.T) * jnp.asarray(scale, jnp.float32)
+    ref = jax.nn.softmax(logits, axis=-1) @ v32
+    diff = jnp.linalg.norm(ref - out.astype(jnp.float32))
+    return diff / (jnp.linalg.norm(ref) + 1e-6)
+
+
+def attach_sentinel(cache, out, q, k, v, scale, step, cfg):
+    """Fold this dispatch call's sentinel readings into the decision
+    cache carry: accumulate the non-finite count of ``out`` and, on the
+    ``cfg.sentinel_probe_every`` cadence, max-accumulate the dense-probe
+    relative error of the leading (batch, head) slice.  Both leaves are
+    lead-shaped like ``hits``/``ref_stat``, so shard_map carries each
+    shard's own readings (zero halo, DESIGN.md §13) and the sampler aux
+    channel reduces them at the end."""
+    lead = out.shape[:-2]
+    nf = nonfinite_count(out, lead_ndim=len(lead))
+    if cache.nonfinite is not None:
+        nf = cache.nonfinite + nf
+    prev_pe = cache.probe_err if cache.probe_err is not None \
+        else jnp.zeros(lead, jnp.float32)
+    every = int(cfg.sentinel_probe_every)
+    if every > 0 and step is not None:
+        idx = (0,) * len(lead)
+
+        def probe(pe):
+            err = dense_probe_error(q[idx], k[idx], v[idx], out[idx], scale)
+            return pe.at[idx].set(jnp.maximum(pe[idx], err)) if lead \
+                else jnp.maximum(pe, err)
+
+        due = jnp.equal(jnp.mod(jnp.asarray(step, jnp.int32), every), 0)
+        new_pe = jax.lax.cond(due, probe, lambda pe: pe, prev_pe)
+    else:
+        new_pe = prev_pe
+    return dataclasses.replace(cache, nonfinite=nf, probe_err=new_pe)
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder
+# ---------------------------------------------------------------------------
+
+# One rung down per sentinel trip: the structured / artifact-replaying
+# policies fall back to the adaptive per-step Δ-check (ripple), and
+# everything sparse bottoms out at dense — the backstop that cannot
+# emit a reuse-induced NaN.  Unknown (out-of-tree) policies and the
+# engine-default ``None`` jump straight to dense: the ladder cannot
+# reason about their failure modes.
+DEGRADATION_LADDER: Mapping[str, str] = {
+    "rainfusion": "ripple",
+    "static": "ripple",
+    "svg": "ripple",
+    "equal_mse": "ripple",
+    "ripple": "dense",
+}
+
+
+def next_policy(policy: Optional[str]) -> Optional[str]:
+    """The rung below ``policy`` (``None`` when already at the dense
+    floor)."""
+    if policy == "dense":
+        return None
+    return DEGRADATION_LADDER.get(policy, "dense")
+
+
+def _chain(base: Optional[str]) -> List[Optional[str]]:
+    chain: List[Optional[str]] = [base]
+    cur = base
+    while True:
+        nxt = next_policy(cur)
+        if nxt is None:
+            return chain
+        chain.append(nxt)
+        cur = nxt
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailConfig:
+    """Host-side trip thresholds and stickiness of the ladder."""
+
+    # Non-finite entries tolerated per batch before tripping (across the
+    # latents and every attention-output sentinel).  0 = any NaN trips.
+    max_nonfinite: int = 0
+    # Dense-probe relative-error trip threshold (CachedDecision.probe_err,
+    # only populated when cfg.sentinel_probe_every > 0).  0 disables the
+    # drift trip — the probe is a diagnostic then.  A non-finite probe
+    # statistic always trips regardless.
+    drift_tol: float = 0.0
+    # Consecutive clean batches at a degraded rung before one batch
+    # probes the original policy again (re-promotion).
+    cooldown_batches: int = 8
+
+
+@dataclasses.dataclass
+class _Health:
+    level: int = 0        # rungs below the base policy
+    clean: int = 0        # clean batches at the current rung
+    probing: bool = False  # next batch runs the base policy as a probe
+
+
+class DegradationLadder:
+    """Per-bucket-family degradation state (thread-safe; share one
+    instance across router replicas so degraded state survives
+    failover).  The engine calls :meth:`effective_policy` before each
+    batch, :meth:`trip` when a sentinel fires, :meth:`record_clean`
+    otherwise."""
+
+    def __init__(self, config: Optional[GuardrailConfig] = None):
+        self.config = config or GuardrailConfig()
+        self._state: Dict[Hashable, _Health] = {}
+        self._lock = threading.Lock()
+        self.degraded_count = 0    # rungs stepped down (ladder trips)
+        self.dense_fallbacks = 0   # trips that landed on the dense floor
+        self.repromotions = 0      # probes that restored the base policy
+        self.failed_probes = 0     # probes that tripped again
+
+    def effective_policy(self, family: Hashable, base: Optional[str]
+                         ) -> Tuple[Optional[str], bool]:
+        """(policy to serve this batch under, is this a re-promotion
+        probe).  Sticky: stays at the degraded rung until
+        ``cooldown_batches`` clean batches, then probes ``base``."""
+        with self._lock:
+            h = self._state.get(family)
+            if h is None or h.level == 0:
+                return base, False
+            if h.probing:
+                return base, True
+            if h.clean >= self.config.cooldown_batches:
+                h.probing = True
+                return base, True
+            return _chain(base)[min(h.level, len(_chain(base)) - 1)], False
+
+    def trip(self, family: Hashable, base: Optional[str]
+             ) -> Optional[str]:
+        """A sentinel fired for ``family``.  Returns the policy to
+        re-serve the batch under, or ``None`` when the ladder is already
+        at the dense floor (the engine then errors the batch — a dense
+        NaN is a model/params problem, not a reuse one)."""
+        chain = _chain(base)
+        with self._lock:
+            h = self._state.setdefault(family, _Health())
+            if h.probing:
+                # The base-policy probe tripped: fall back to the rung
+                # the family was parked at, cool-down restarts.
+                h.probing = False
+                h.clean = 0
+                self.failed_probes += 1
+                return chain[min(h.level, len(chain) - 1)]
+            if h.level + 1 >= len(chain):
+                return None
+            h.level += 1
+            h.clean = 0
+            self.degraded_count += 1
+            pol = chain[h.level]
+            if pol == "dense":
+                self.dense_fallbacks += 1
+            return pol
+
+    def record_clean(self, family: Hashable) -> None:
+        """A batch served without tripping: advance the cool-down, or
+        restore the base policy if this batch was a re-promotion probe."""
+        with self._lock:
+            h = self._state.get(family)
+            if h is None or h.level == 0:
+                return
+            if h.probing:
+                h.level = 0
+                h.probing = False
+                h.clean = 0
+                self.repromotions += 1
+            else:
+                h.clean += 1
+
+    def degraded(self, family: Hashable) -> bool:
+        with self._lock:
+            h = self._state.get(family)
+            return h is not None and h.level > 0
+
+    def metrics(self) -> Dict[str, int]:
+        with self._lock:
+            return {"degraded_count": self.degraded_count,
+                    "dense_fallbacks": self.dense_fallbacks,
+                    "repromotions": self.repromotions,
+                    "failed_probes": self.failed_probes,
+                    "degraded_buckets": sum(
+                        1 for h in self._state.values() if h.level > 0)}

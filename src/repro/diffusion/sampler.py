@@ -36,12 +36,19 @@ def ddim_sample(
     decision_state=None,
     step_offset=0,
     total_steps: Optional[int] = None,
+    sentinel: bool = False,
 ):
     """DDIM sampler. denoise_fn(x, t_int (B,), step_idx) -> eps.
 
     With ``decision_state`` the model's decision cache rides the scan
     carry (``denoise_fn(x, t, step, state) -> (eps, state)``) and the
     sampler returns ``(x, final_state)``.
+
+    With ``sentinel`` (guardrails, DESIGN.md §17) a running i32 count of
+    non-finite latent entries rides the carry — one elementwise
+    ``isfinite`` per step — and is appended to the return, so the
+    serving engine can trip its degradation ladder without a host
+    round-trip per step.
 
     Chunked execution (streaming delivery, DESIGN.md §15.3): pass
     ``total_steps=T`` (the full schedule length) and run the scan in
@@ -63,7 +70,7 @@ def ddim_sample(
     bshape = (-1,) + (1,) * (x_T.ndim - 1)
 
     def body(carry, si):
-        x, rng, dstate = carry
+        x, rng, dstate, nf = carry
         t = ts[si]
         t_prev = jnp.where(si + 1 < total, ts[jnp.minimum(si + 1,
                                                           total - 1)], -1)
@@ -83,15 +90,17 @@ def ddim_sample(
         else:
             noise = jnp.zeros_like(x)
         x = jnp.sqrt(ab_prev) * x0 + dir_xt + sigma * noise
-        return (x, rng, dstate), None
+        if sentinel:
+            nf = nf + jnp.sum(~jnp.isfinite(x)).astype(jnp.int32)
+        return (x, rng, dstate, nf), None
 
-    (x, _, dstate), _ = jax.lax.scan(
+    (x, _, dstate, nf), _ = jax.lax.scan(
         body, (x_T, rng if rng is not None else jax.random.PRNGKey(0),
-               decision_state),
+               decision_state, jnp.zeros((), jnp.int32)),
         jnp.arange(num_steps) + step_offset)
     if decision_state is not None:
-        return x, dstate
-    return x
+        return (x, dstate, nf) if sentinel else (x, dstate)
+    return (x, nf) if sentinel else x
 
 
 def euler_flow_sample(
@@ -103,6 +112,7 @@ def euler_flow_sample(
     decision_state=None,
     step_offset=0,
     total_steps: Optional[int] = None,
+    sentinel: bool = False,
 ):
     """Euler ODE integration of rectified flow from t=1 (noise) to t=0.
     denoise_fn(x, t_cont (B,), step_idx) -> velocity (noise - x0).
@@ -111,25 +121,30 @@ def euler_flow_sample(
     carry (``denoise_fn(x, t, step, state) -> (v, state)``) and the
     sampler returns ``(x, final_state)``.  ``step_offset`` /
     ``total_steps`` slice the integration for chunked streaming exactly
-    as in :func:`ddim_sample`."""
+    as in :func:`ddim_sample`; ``sentinel`` appends a running non-finite
+    latent count to the return, as there."""
     total = num_steps if total_steps is None else total_steps
     B = x_T.shape[0]
     ts = jnp.linspace(1.0, 0.0, total + 1)
 
     def body(carry, si):
-        x, dstate = carry
+        x, dstate, nf = carry
         t, t_next = ts[si], ts[si + 1]
         if dstate is None:
             v = denoise_fn(x, jnp.full((B,), t), si)
         else:
             v, dstate = denoise_fn(x, jnp.full((B,), t), si, dstate)
-        return (x + (t_next - t) * v, dstate), None
+        x = x + (t_next - t) * v
+        if sentinel:
+            nf = nf + jnp.sum(~jnp.isfinite(x)).astype(jnp.int32)
+        return (x, dstate, nf), None
 
-    (x, dstate), _ = jax.lax.scan(body, (x_T, decision_state),
-                                  jnp.arange(num_steps) + step_offset)
+    (x, dstate, nf), _ = jax.lax.scan(
+        body, (x_T, decision_state, jnp.zeros((), jnp.int32)),
+        jnp.arange(num_steps) + step_offset)
     if decision_state is not None:
-        return x, dstate
-    return x
+        return (x, dstate, nf) if sentinel else (x, dstate)
+    return (x, nf) if sentinel else x
 
 
 def cfg_wrap(denoise_fn: Callable, guidance: float) -> Callable:

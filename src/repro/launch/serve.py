@@ -44,7 +44,7 @@ log = get_logger("launch.serve")
 
 
 def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
-                  reuse_every=None, stream_every=None):
+                  reuse_every=None, stream_every=None, sentinel=False):
     """Returns sample_fn(noise, txt, rngs) -> latents (or ``(latents,
     aux)`` with decision-cache telemetry) and the latent shape.
     ``rngs`` is the engine's (B, 2) per-request key batch: the initial
@@ -64,7 +64,18 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
     land, so the engine can deliver intermediate frames and measure
     time-to-first-frame (DESIGN.md §15.3).  The decision-cache state
     crosses chunks through the generator's loop carry, so the cadence
-    and drift guard behave exactly as in one scan."""
+    and drift guard behave exactly as in one scan.
+
+    ``sentinel=True`` arms the in-graph quality sentinels (DESIGN.md
+    §17): the samplers carry a running non-finite latent count
+    (``aux["latent_nonfinite"]``) and, on cache-threading vdit configs,
+    the dispatch layer accumulates per-call attention-output sentinels
+    into the decision cache (``aux["sentinel_nonfinite"]`` /
+    ``aux["sentinel_drift"]``) — the counters the engine's degradation
+    ladder trips on."""
+    if sentinel:
+        arch = dataclasses.replace(
+            arch, ripple=dataclasses.replace(arch.ripple, sentinel=True))
     if policy:
         arch = dataclasses.replace(
             arch, ripple=dataclasses.replace(arch.ripple, policy=policy))
@@ -96,6 +107,19 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
             return {"ctx": txt}
         return {"txt": txt}
 
+    def cache_aux(dstate, aux):
+        aux["cache_hits"] = dstate.hits.sum()
+        aux["cache_refreshes"] = dstate.refreshes.sum()
+        if dstate.elided is not None:
+            # Ring-path telemetry (DESIGN.md §14): total ring hops
+            # the block map let every seq shard skip this request.
+            aux["ring_elided_hops"] = dstate.elided.sum()
+        if dstate.nonfinite is not None:
+            aux["sentinel_nonfinite"] = dstate.nonfinite.sum()
+        if dstate.probe_err is not None:
+            aux["sentinel_drift"] = dstate.probe_err.max()
+        return aux
+
     if stream_every:
         K = max(int(stream_every), 1)
 
@@ -108,9 +132,11 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                         arch, params, x, t, cond, step, steps, NULL_CTX,
                         use_ripple=use_ripple, dstate=ds)
                     return out.astype(x.dtype), ds
-                return ddim_sample(denoise, x, ddpm, count,
-                                   decision_state=dstate,
-                                   step_offset=step0, total_steps=steps)
+                out = ddim_sample(denoise, x, ddpm, count,
+                                  decision_state=dstate,
+                                  step_offset=step0, total_steps=steps,
+                                  sentinel=sentinel)
+                return out if sentinel else out + (None,)
 
             def denoise(x, t, step):
                 return _denoise_call(
@@ -118,28 +144,37 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                     use_ripple=use_ripple).astype(x.dtype)
 
             if fam == "mmdit":
-                return euler_flow_sample(denoise, x, count,
-                                         step_offset=step0,
-                                         total_steps=steps), None
-            return ddim_sample(denoise, x, ddpm, count, step_offset=step0,
-                               total_steps=steps), None
+                out = euler_flow_sample(denoise, x, count,
+                                        step_offset=step0,
+                                        total_steps=steps,
+                                        sentinel=sentinel)
+            else:
+                out = ddim_sample(denoise, x, ddpm, count,
+                                  step_offset=step0, total_steps=steps,
+                                  sentinel=sentinel)
+            if sentinel:
+                return out[0], None, out[1]
+            return out, None, None
 
         def sample_fn(noise, txt, rngs):
             dstate = (vdit_decision_state(arch, shape.img_res,
                                           noise.shape[0])
                       if thread_cache else None)
             x = noise
+            nf_total = jnp.zeros((), jnp.int32)
             for s0 in range(0, steps, K):
                 count = min(K, steps - s0)
-                x, dstate = chunk_fn(x, txt, rngs,
-                                     jnp.asarray(s0, jnp.int32), dstate,
-                                     count=count)
+                x, dstate, nf = chunk_fn(x, txt, rngs,
+                                         jnp.asarray(s0, jnp.int32),
+                                         dstate, count=count)
                 aux = {}
                 if dstate is not None:
-                    aux = {"cache_hits": dstate.hits.sum(),
-                           "cache_refreshes": dstate.refreshes.sum()}
-                    if dstate.elided is not None:
-                        aux["ring_elided_hops"] = dstate.elided.sum()
+                    cache_aux(dstate, aux)
+                if nf is not None:
+                    # Per-chunk counts accumulate so the final chunk's
+                    # aux reports the whole trajectory.
+                    nf_total = nf_total + nf
+                    aux["latent_nonfinite"] = nf_total
                 yield x, aux
 
         return sample_fn, lat_shape
@@ -157,14 +192,12 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
 
             dstate = vdit_decision_state(arch, shape.img_res,
                                          noise.shape[0])
-            lat, final = ddim_sample(denoise, noise, ddpm, steps,
-                                     decision_state=dstate)
-            aux = {"cache_hits": final.hits.sum(),
-                   "cache_refreshes": final.refreshes.sum()}
-            if final.elided is not None:
-                # Ring-path telemetry (DESIGN.md §14): total ring hops
-                # the block map let every seq shard skip this request.
-                aux["ring_elided_hops"] = final.elided.sum()
+            out = ddim_sample(denoise, noise, ddpm, steps,
+                              decision_state=dstate, sentinel=sentinel)
+            lat, final = out[0], out[1]
+            aux = cache_aux(final, {})
+            if sentinel:
+                aux["latent_nonfinite"] = out[2]
             return lat, aux
 
         def denoise(x, t, step):
@@ -173,14 +206,20 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                 use_ripple=use_ripple).astype(x.dtype)
 
         if fam == "mmdit":
-            return euler_flow_sample(denoise, noise, steps)
-        return ddim_sample(denoise, noise, ddpm, steps)
+            out = euler_flow_sample(denoise, noise, steps,
+                                    sentinel=sentinel)
+        else:
+            out = ddim_sample(denoise, noise, ddpm, steps,
+                              sentinel=sentinel)
+        if sentinel:
+            return out[0], {"latent_nonfinite": out[1]}
+        return out
 
     return sample_fn, lat_shape
 
 
 def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
-                         mesh=None):
+                         mesh=None, sentinel=False):
     """(engine sampler_factory, plan_fn) over a set of generate cells,
     keyed by the engine's (latent_shape, steps, policy, reuse_every,
     stream_every) bucket identity.  The engine hands both callables the
@@ -197,7 +236,8 @@ def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
         sp = by_bucket[(tuple(latent_shape), steps)]
         fn, _ = build_sampler(arch, sp, params, use_ripple=use_ripple,
                               policy=policy, reuse_every=reuse_every,
-                              stream_every=stream_every)
+                              stream_every=stream_every,
+                              sentinel=sentinel)
         return fn
 
     def plan_fn(latent_shape, steps, policy=None):
@@ -205,6 +245,28 @@ def make_sampler_factory(arch, shapes, params, *, use_ripple=True,
         return attention_plan(arch, sp, mesh=mesh, policy=policy)
 
     return factory, plan_fn
+
+
+def _maybe_kill_replica(front, fault, completed: int):
+    """Fire a ``kill_replica`` fault (DESIGN.md §17.3) once ``completed``
+    results have been consumed: fail the deepest router replica so its
+    pending requests demonstrably requeue onto survivors."""
+    from repro.serving.router import Router
+
+    if fault is None or not isinstance(front, Router):
+        return
+    spec = fault.spec("kill_replica")
+    if spec is None or completed < int(spec.param("after", 1)):
+        return
+    if fault.take("kill_replica") is None:
+        return
+    depths = front.depths()
+    if not depths:
+        return
+    idx = max(depths, key=depths.get)
+    log.warning("fault injection: killing replica %d (depth %d)",
+                idx, depths[idx])
+    front.fail_replica(idx)
 
 
 def main(argv=None):
@@ -282,6 +344,27 @@ def main(argv=None):
                          "missing or corrupt.  Default: the "
                          "REPRO_PATTERN_ARTIFACT env var / user cache "
                          "(loaded lazily, missing file tolerated)")
+    ap.add_argument("--no-guardrail", action="store_true",
+                    help="disable the runtime quality guardrails "
+                         "(DESIGN.md §17): in-graph NaN/drift sentinels "
+                         "and the per-bucket degradation ladder.  On by "
+                         "default")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="arm the deterministic chaos harness "
+                         "(serving.faults, DESIGN.md §17.3), e.g. "
+                         "'attn_nan:step=1;kill_replica:after=1'.  "
+                         "Default: the REPRO_FAULTS env var")
+    ap.add_argument("--batch-timeout", type=float, default=None,
+                    metavar="S",
+                    help="hang-watchdog floor per batch in seconds "
+                         "(scaled by the service-time estimator once "
+                         "observed); a hung batch marks the replica "
+                         "unhealthy and its requests fail over.  "
+                         "Default: no watchdog")
+    ap.add_argument("--probe-interval", type=float, default=0.5,
+                    metavar="S",
+                    help="router health-probe cadence for re-admitting "
+                         "recovered replicas (only with --replicas > 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
@@ -330,10 +413,28 @@ def main(argv=None):
     log.info("traffic buckets: %s",
              [(s.name, s.img_res, s.steps) for s in shapes])
 
+    from repro.serving import faults as fault_lib
+
+    if args.inject_faults:
+        fault_lib.install_faults(args.inject_faults)
+    else:
+        fault_lib.install_from_env()
+    fault = fault_lib.active_faults()
+
+    guardrail = not args.no_guardrail
+    ladder = None
+    if guardrail:
+        from repro.core.guardrail import DegradationLadder
+
+        # One ladder shared across every replica: degraded-bucket state
+        # survives a replica failover (DESIGN.md §17.2).
+        ladder = DegradationLadder()
+
     defs = model_fns(arch)
     params = init_params(defs, jax.random.PRNGKey(args.seed))
     factory, plan_fn = make_sampler_factory(
-        arch, shapes, params, use_ripple=not args.no_ripple, mesh=mesh)
+        arch, shapes, params, use_ripple=not args.no_ripple, mesh=mesh,
+        sentinel=guardrail)
 
     def make_engine():
         return DiffusionEngine(sampler_factory=factory,
@@ -342,12 +443,15 @@ def main(argv=None):
                                plan_fn=plan_fn,
                                default_policy=args.policy,
                                default_reuse_every=args.reuse_every,
-                               scheduler=args.scheduler)
+                               scheduler=args.scheduler,
+                               guardrail=ladder,
+                               batch_timeout_s=args.batch_timeout)
 
     if args.replicas > 1:
         from repro.serving.router import Router
 
-        front = Router([make_engine() for _ in range(args.replicas)])
+        front = Router([make_engine() for _ in range(args.replicas)],
+                       probe_interval_s=args.probe_interval)
     else:
         front = make_engine()
     front.start()
@@ -368,16 +472,25 @@ def main(argv=None):
             log.warning("%s", e)
             continue
         submitted.append((sp, req))
-    for sp, req in submitted:
+    for done, (sp, req) in enumerate(submitted):
+        _maybe_kill_replica(front, fault, done)
         r = front.result(req.request_id)
         log.info("request %d (%s, %d steps) done in %.2fs "
-                 "(ttff %.3fs%s); latents %s",
+                 "(ttff %.3fs%s%s); latents %s",
                  req.request_id, sp.name, sp.steps, r.walltime_s,
                  r.ttff_s,
                  "" if r.deadline_met is None
                  else f", deadline {'met' if r.deadline_met else 'MISSED'}",
+                 ", DEGRADED" if r.degraded else "",
                  r.latents.shape)
     front.stop()
+    counters = dict(front.metrics()) if hasattr(front, "metrics") else {}
+    if fault is not None:
+        counters.update(fault.counters())
+    if ladder is not None:
+        counters.update(ladder.metrics())
+    if counters:
+        log.info("serving counters: %s", counters)
     log.info("served %d/%d requests (%d shed) over %d bucket(s) "
              "in %.2fs total", len(submitted), args.requests, shed,
              len(shapes), time.time() - t0)

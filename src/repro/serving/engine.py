@@ -48,11 +48,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.guardrail import DegradationLadder, GuardrailConfig
+from repro.serving import faults as fault_lib
 from repro.serving import slo as slo_lib
 from repro.serving.slo import ServiceEstimator, ShedError
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+# Error-message markers that mean "the *replica* failed, not the
+# request" — the router requeues matching failures onto a healthy
+# replica instead of surfacing them (§15.4, §17.4).  Substring-matched
+# because errors cross the engine/router seam as strings.
+FAILOVER_MARKERS = ("engine stopped", "watchdog")
+
+
+def is_failover_error(msg: object) -> bool:
+    """Does this error text name a replica-level failure (stop /
+    watchdog trip) rather than a request-level one?"""
+    text = str(msg)
+    return any(marker in text for marker in FAILOVER_MARKERS)
 
 # (latent_shape, steps, policy, reuse_every, seq_shards, txt_shape,
 # stream_every); legacy single-sampler engines use steps=-1 so requests
@@ -172,6 +187,9 @@ class GenResult:
     ttff_s: float = -1.0
     # Deadline outcome (None = the request carried no deadline).
     deadline_met: Optional[bool] = None
+    # Was the serving bucket degraded below its requested reuse policy
+    # by the guardrail ladder when this result was produced (§17.2)?
+    degraded: bool = False
 
 
 class DiffusionEngine:
@@ -210,7 +228,12 @@ class DiffusionEngine:
                  scheduler: str = "edf",
                  admission_control: bool = True,
                  error_ttl_s: float = 60.0,
-                 estimator: Optional[ServiceEstimator] = None):
+                 estimator: Optional[ServiceEstimator] = None,
+                 guardrail: Any = None,
+                 batch_timeout_s: Optional[float] = None,
+                 max_retries: int = 1,
+                 retry_backoff_s: float = 0.05,
+                 bisect_on_error: bool = True):
         if scheduler not in ("edf", "hottest"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if sampler_factory is None:
@@ -244,6 +267,37 @@ class DiffusionEngine:
         self.error_ttl_s = error_ttl_s
         self.estimator = estimator if estimator is not None \
             else ServiceEstimator()
+        # Guardrail ladder (§17.2): True -> own ladder with defaults, a
+        # GuardrailConfig -> own ladder with it, a DegradationLadder ->
+        # shared (router replicas share one so degraded state survives
+        # failover), None/False -> sentinels not enforced.
+        if guardrail is None or guardrail is False:
+            self._ladder: Optional[DegradationLadder] = None
+        elif isinstance(guardrail, DegradationLadder):
+            self._ladder = guardrail
+        elif isinstance(guardrail, GuardrailConfig):
+            self._ladder = DegradationLadder(guardrail)
+        elif guardrail is True:
+            self._ladder = DegradationLadder()
+        else:
+            raise ValueError(f"guardrail must be True, a GuardrailConfig "
+                             f"or a DegradationLadder, got {guardrail!r}")
+        if self._ladder is not None and not self._factory_takes_policy:
+            raise ValueError(
+                "guardrail degradation rewrites the bucket policy, but "
+                "this engine's sampler factory does not take a policy "
+                "argument — it could not serve a degraded bucket")
+        # Watchdog / retry / quarantine knobs (§17.4).  batch_timeout_s
+        # is the hang-watchdog floor (scaled by the estimator's
+        # timeout_hint once the bucket has observations); None disables
+        # the watchdog and runs batches inline.
+        self.batch_timeout_s = batch_timeout_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.bisect_on_error = bisect_on_error
+        self.watchdog_trips = 0
+        self.batch_retries = 0
+        self.quarantined = 0
         self.attn_plan = attn_plan  # DispatchPlan metadata (or None)
         self.plan_fn = plan_fn      # (latent_shape, steps) -> DispatchPlan
         # bucket deques hold (enqueue_time, request) for starvation
@@ -312,7 +366,10 @@ class DiffusionEngine:
         """Enqueue one request.  Raises
         :class:`~repro.serving.slo.ShedError` when admission control
         proves the request's deadline cannot be met under the current
-        queue depth (shed at the door — zero compute spent)."""
+        queue depth (shed at the door — zero compute spent).  Malformed
+        requests raise ValueError here, at the door, instead of taking
+        down a whole continuous batch inside the serve loop."""
+        self._validate(req)
         if req.policy is not None and not self._factory_takes_policy:
             # Silently serving the default strategy while the bucket key
             # pretends otherwise would be worse than refusing.
@@ -346,6 +403,36 @@ class DiffusionEngine:
                         f"request {req.request_id} shed: {reason}")
             self._buckets.setdefault(key, deque()).append((now, req))
             self._lock.notify_all()
+
+    def _validate(self, req: GenRequest) -> None:
+        """Reject malformed requests at submit (§17 satellite): a bad
+        field would otherwise stack fine, then crash the sampler and
+        fail every batchmate."""
+        rid = req.request_id
+        if not isinstance(req.steps, (int, np.integer)) or req.steps <= 0:
+            raise ValueError(
+                f"request {rid}: steps must be a positive int, "
+                f"got {req.steps!r}")
+        if req.latent_shape is not None:
+            shape = tuple(req.latent_shape)
+            if not shape or not all(
+                    isinstance(d, (int, np.integer)) and d > 0
+                    for d in shape):
+                raise ValueError(
+                    f"request {rid}: latent_shape must be a non-empty "
+                    f"tuple of positive ints, got {req.latent_shape!r}")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(
+                f"request {rid}: deadline_s must be an absolute "
+                f"time.time() deadline (> 0), got {req.deadline_s!r}")
+        if req.reuse_every is not None and req.reuse_every <= 0:
+            raise ValueError(
+                f"request {rid}: reuse_every must be positive, "
+                f"got {req.reuse_every!r}")
+        if req.stream_every is not None and req.stream_every <= 0:
+            raise ValueError(
+                f"request {rid}: stream_every must be positive, "
+                f"got {req.stream_every!r}")
 
     def result(self, request_id: int, timeout: float = 300.0) -> GenResult:
         deadline = time.time() + timeout
@@ -419,24 +506,36 @@ class DiffusionEngine:
             return sum(len(dq) for dq in self._buckets.values())
 
     def metrics(self) -> Dict[str, int]:
-        """Serving counters (DESIGN.md §15): batches served, admission
-        sheds, deadline outcomes."""
+        """Serving counters (DESIGN.md §15/§17): batches served,
+        admission sheds, deadline outcomes, robustness counters, and —
+        when a guardrail ladder is attached — its degradation
+        counters."""
         with self._lock:
-            return {"batches_served": self._batches_served,
-                    "shed_count": self.shed_count,
-                    "deadlines_met": self.deadlines_met,
-                    "deadlines_missed": self.deadlines_missed}
+            m = {"batches_served": self._batches_served,
+                 "shed_count": self.shed_count,
+                 "deadlines_met": self.deadlines_met,
+                 "deadlines_missed": self.deadlines_missed,
+                 "watchdog_trips": self.watchdog_trips,
+                 "batch_retries": self.batch_retries,
+                 "quarantined": self.quarantined}
+        if self._ladder is not None:
+            m.update(self._ladder.metrics())
+        return m
 
     # -- batching loop ----------------------------------------------------------
 
     def _evict_expired_errors_locked(self):
+        # Strictly-after comparison: a tombstone lives *through* its
+        # expiry instant, so a result() retry landing exactly at TTL
+        # expiry still gets the stored error instead of watching this
+        # very call evict it and then reporting a spurious timeout.
         now = time.time()
-        for rid in [r for r, exp in self._error_expiry.items() if exp <= now]:
+        for rid in [r for r, exp in self._error_expiry.items() if exp < now]:
             self._error_expiry.pop(rid, None)
             self._results.pop(rid, None)
             self._partials.pop(rid, None)
         for rid in [r for r, exp in self._finished_expiry.items()
-                    if exp <= now]:
+                    if exp < now]:
             self._finished_expiry.pop(rid, None)
             self._partials.pop(rid, None)
 
@@ -522,15 +621,23 @@ class DiffusionEngine:
             log.info("evicted compiled sampler for bucket %s", evicted)
         return fn
 
-    def _publish_chunk(self, batch, lat_np: np.ndarray, ttff: Dict[int, float]):
+    def _publish_chunk(self, batch, lat_np: np.ndarray, pub: Dict,
+                       chunk_idx: int, abandoned: threading.Event):
         """Deliver one streamed chunk to every request's subscribers and
-        stamp TTFF on first delivery."""
+        stamp TTFF on first delivery.  ``pub`` survives re-serves (§17):
+        chunks a previous attempt already delivered are not re-published
+        (``pub["count"]``), and a watchdog-abandoned worker's late
+        chunks are dropped (``abandoned``)."""
         now = time.time()
         with self._lock:
+            if abandoned.is_set():
+                return
             for i, (t_enq, r) in enumerate(batch):
-                if r.request_id not in ttff:
-                    ttff[r.request_id] = now - t_enq
+                if chunk_idx < pub["count"].get(r.request_id, 0):
+                    continue
+                pub["ttff"].setdefault(r.request_id, now - t_enq)
                 self._partials.setdefault(r.request_id, []).append(lat_np[i])
+                pub["count"][r.request_id] = chunk_idx + 1
             self._lock.notify_all()
 
     @staticmethod
@@ -559,41 +666,152 @@ class DiffusionEngine:
             log.info("bucket %s ring: %d elided hop(s)", key,
                      int(jax.device_get(aux["ring_elided_hops"])))
 
-    def _serve(self, key: BucketKey, batch: List[Tuple[float, GenRequest]]):
-        t0 = time.time()
-        shape = key[0]
-        ttff: Dict[int, float] = {}
-        try:
-            fn = self._sampler(key)
-            txt = jnp.stack([jnp.asarray(r.txt) for _, r in batch])
-            rngs = jnp.stack([jax.random.PRNGKey(r.seed) for _, r in batch])
-            noise = jax.vmap(lambda k: jax.random.normal(k, shape))(rngs)
-            # The full (B, 2) key batch goes to the sampler — every
-            # request keeps its own randomness inside one batch.
-            out = fn(noise, txt, rngs)
-            if inspect.isgenerator(out):
-                # Streaming bucket (§15.3): each yielded chunk is
-                # published to stream() subscribers as it lands; the
-                # last chunk is the final latents.
-                lat = aux = None
-                for chunk in out:
-                    lat, aux = self._split_out(chunk)
+    # -- guardrail / watchdog serve path (DESIGN.md §17) ----------------------
+
+    @staticmethod
+    def _family(key: BucketKey):
+        """Bucket identity minus the policy and its pattern token — the
+        unit the degradation ladder keys on: every policy rung of one
+        (shape, steps, cadence, shards, txt, stream) family shares one
+        health record."""
+        return key[:2] + key[3:7]
+
+    @staticmethod
+    def _rekey(key: BucketKey, policy: Optional[str]) -> BucketKey:
+        """The same bucket one ladder rung down: policy and pattern
+        token rewritten, everything else identical — so the degraded
+        bucket compiles its own sampler instead of replaying the
+        tripped program."""
+        return key[:2] + (policy,) + key[3:7] + (_pattern_token(policy),)
+
+    def _sentinel_verdict(self, lat: Optional[np.ndarray],
+                          aux: Optional[dict]) -> Optional[str]:
+        """Read the batch's sentinels: ``None`` when clean, else a trip
+        reason.  The host ``isfinite`` over the returned latents covers
+        samplers that thread no cache; the aux counters cover the
+        in-graph sentinels (latent carry + attention-output carry +
+        drift probe)."""
+        gcfg = self._ladder.config
+        if lat is not None and not np.all(np.isfinite(lat)):
+            return "non-finite final latents"
+        if aux:
+            nf = 0
+            for k in ("latent_nonfinite", "sentinel_nonfinite"):
+                if k in aux:
+                    nf += int(jax.device_get(aux[k]))
+            if nf > gcfg.max_nonfinite:
+                return f"{nf} non-finite sentinel entr(ies)"
+            if "sentinel_drift" in aux:
+                drift = float(jax.device_get(aux["sentinel_drift"]))
+                if not np.isfinite(drift):
+                    return "non-finite drift probe"
+                if gcfg.drift_tol > 0 and drift > gcfg.drift_tol:
+                    return (f"drift probe {drift:.3g} > "
+                            f"tol {gcfg.drift_tol:.3g}")
+        return None
+
+    def _run_batch(self, key: BucketKey,
+                   batch: List[Tuple[float, GenRequest]], pub: Dict,
+                   abandoned: threading.Event):
+        """Run one sampler invocation, optionally under the hang
+        watchdog.  Returns ``(res, hung, budget)`` where ``res`` holds
+        ``lat``/``aux`` on success, ``err`` (the exception) on failure,
+        or ``sentinel`` (a trip reason) when a streamed chunk went
+        non-finite — caught *before* publication, so subscribers never
+        see the bad frames."""
+        res: Dict[str, Any] = {}
+
+        def work():
+            try:
+                fault = fault_lib.active_faults()
+                if fault is not None:
+                    fault.check_poison([r.request_id for _, r in batch])
+                    fault.maybe_raise()
+                    if fault.maybe_hang():
+                        return  # hung past the watchdog; batch is lost
+                fn = self._sampler(key)
+                shape = key[0]
+                txt = jnp.stack([jnp.asarray(r.txt) for _, r in batch])
+                rngs = jnp.stack([jax.random.PRNGKey(r.seed)
+                                  for _, r in batch])
+                noise = jax.vmap(lambda k: jax.random.normal(k, shape))(rngs)
+                # The full (B, 2) key batch goes to the sampler — every
+                # request keeps its own randomness inside one batch.
+                out = fn(noise, txt, rngs)
+                if inspect.isgenerator(out):
+                    # Streaming bucket (§15.3): each yielded chunk is
+                    # published to stream() subscribers as it lands; the
+                    # last chunk is the final latents.
+                    lat = aux = None
+                    for ci, chunk in enumerate(out):
+                        lat, aux = self._split_out(chunk)
+                        lat = np.asarray(jax.device_get(lat))
+                        if (self._ladder is not None
+                                and not np.all(np.isfinite(lat))):
+                            res["sentinel"] = \
+                                f"non-finite streamed chunk {ci}"
+                            return
+                        self._publish_chunk(batch, lat, pub, ci, abandoned)
+                    if lat is None:
+                        raise RuntimeError(
+                            "streaming sampler yielded nothing")
+                else:
+                    lat, aux = self._split_out(out)
                     lat = np.asarray(jax.device_get(lat))
-                    self._publish_chunk(batch, lat, ttff)
-                if lat is None:
-                    raise RuntimeError("streaming sampler yielded nothing")
-            else:
-                lat, aux = self._split_out(out)
-                lat = np.asarray(jax.device_get(lat))
-            self._log_aux(key, aux)
-            err = None
-        except Exception as e:  # noqa: BLE001 — fail the batch, not the engine
-            log.exception("bucket %s batch failed", key)
-            lat, err = None, repr(e)
-        dt = time.time() - t0
+                res["lat"], res["aux"] = lat, aux
+            except Exception as e:  # noqa: BLE001 — fail the batch, not the engine
+                log.exception("bucket %s batch failed", key)
+                res["err"] = e
+
+        if self.batch_timeout_s is None:
+            work()
+            return res, False, 0.0
+        budget = self.estimator.timeout_hint(key, self.batch_timeout_s)
+        worker = threading.Thread(target=work, daemon=True)
+        worker.start()
+        worker.join(timeout=budget)
+        return res, worker.is_alive(), budget
+
+    def _trip_watchdog(self, key: BucketKey,
+                       batch: List[Tuple[float, GenRequest]],
+                       budget: float, abandoned: threading.Event):
+        """A batch hung past its watchdog budget: the worker cannot be
+        killed (it is stuck inside compiled code), so the *replica*
+        steps down — mark the engine stopped (``healthy()`` goes False),
+        error the hung and queued requests with failover-marked messages
+        so the router requeues them elsewhere, and suppress any late
+        chunk publishes from the zombie worker."""
+        abandoned.set()
+        log.error("watchdog: bucket %s batch of %d hung past %.1fs — "
+                  "marking replica unhealthy", key, len(batch), budget)
         now = time.time()
-        if err is None:
-            self.estimator.observe(key, dt)
+        with self._lock:
+            self.watchdog_trips += 1
+            self._stop = True
+            err = f"watchdog: batch hung after {budget:.1f}s"
+            for t_enq, r in batch:
+                if r.deadline_s is not None:
+                    self.deadlines_missed += 1
+                self._results[r.request_id] = GenResult(
+                    r.request_id, None, now - t_enq, error=err,
+                    deadline_met=False if r.deadline_s is not None
+                    else None)
+                self._error_expiry[r.request_id] = now + self.error_ttl_s
+            for dq in self._buckets.values():
+                for _, r in dq:
+                    self._results[r.request_id] = GenResult(
+                        r.request_id, None, 0.0,
+                        error="engine stopped (watchdog)")
+                    self._error_expiry[r.request_id] = (
+                        now + self.error_ttl_s)
+            self._buckets.clear()
+            self._lock.notify_all()
+
+    def _publish_batch(self, key: BucketKey,
+                       batch: List[Tuple[float, GenRequest]],
+                       lat: np.ndarray, dt: float, pub: Dict,
+                       err: Optional[str], degraded: bool):
+        now = time.time()
         with self._lock:
             bi = self._batches_served
             self._batches_served += 1
@@ -608,15 +826,107 @@ class DiffusionEngine:
                 self._results[r.request_id] = GenResult(
                     r.request_id, None if err else lat[i], dt, error=err,
                     batch_index=bi,
-                    ttff_s=ttff.get(r.request_id,
-                                    -1.0 if err else now - t_enq),
-                    deadline_met=met)
+                    ttff_s=pub["ttff"].get(r.request_id,
+                                           -1.0 if err else now - t_enq),
+                    deadline_met=met, degraded=degraded)
                 if err is not None:
                     self._error_expiry[r.request_id] = (
                         time.time() + self.error_ttl_s)
             self._lock.notify_all()
-        log.info("served bucket %s batch of %d in %.2fs", key, len(batch),
-                 dt)
+
+    def _serve(self, key: BucketKey, batch: List[Tuple[float, GenRequest]]):
+        pub: Dict[str, Dict] = {"ttff": {}, "count": {}}
+        self._serve_rec(key, batch, 0, pub, threading.Event())
+
+    def _serve_rec(self, key: BucketKey,
+                   batch: List[Tuple[float, GenRequest]], depth: int,
+                   pub: Dict, abandoned: threading.Event):
+        """Serve one (sub-)batch with the full §17 escalation chain:
+        sentinel trip -> degrade one ladder rung and re-serve; hang ->
+        watchdog (replica down); transient error -> retry with backoff,
+        then bisect so a single poison request is quarantined alone
+        while its batchmates succeed."""
+        t0 = time.time()
+        base_pol = key[2]
+        fam = self._family(key)
+        attempt = 0
+        while True:
+            eff_key = key
+            if self._ladder is not None:
+                eff_pol, _probing = self._ladder.effective_policy(
+                    fam, base_pol)
+                if eff_pol != base_pol:
+                    eff_key = self._rekey(key, eff_pol)
+            res, hung, budget = self._run_batch(eff_key, batch, pub,
+                                                abandoned)
+            if hung:
+                self._trip_watchdog(eff_key, batch, budget, abandoned)
+                return
+            sent = res.get("sentinel")
+            exc = res.get("err")
+            if exc is None and sent is None and "lat" not in res:
+                exc = RuntimeError("sampler worker produced no output")
+            if exc is None and sent is None and self._ladder is not None:
+                sent = self._sentinel_verdict(res.get("lat"),
+                                              res.get("aux"))
+            if sent is not None and self._ladder is not None:
+                nxt = self._ladder.trip(fam, base_pol)
+                if nxt is not None:
+                    log.warning(
+                        "bucket %s guardrail trip (%s): degrading to %r "
+                        "and re-serving", key, sent, nxt)
+                    continue
+                exc = RuntimeError(
+                    f"guardrail: {sent} at the dense floor — no "
+                    "degradation step left")
+            elif sent is None and exc is None and self._ladder is not None:
+                self._ladder.record_clean(fam)
+            if exc is None:
+                dt = time.time() - t0
+                self._log_aux(eff_key, res.get("aux"))
+                self.estimator.observe(key, dt)
+                if eff_key != key:
+                    self.estimator.observe(eff_key, dt)
+                self._publish_batch(
+                    key, batch, res["lat"], dt, pub, None,
+                    degraded=(self._ladder is not None
+                              and self._ladder.degraded(fam)))
+                log.info("served bucket %s batch of %d in %.2fs%s", key,
+                         len(batch), dt,
+                         " (degraded)" if eff_key != key else "")
+                return
+            # Error path.  Sentinel dead-ends (dense floor) are not
+            # transient: no retry, no bisection — every rung failed.
+            attempt += 1
+            if sent is None and attempt <= self.max_retries:
+                backoff = self.retry_backoff_s * (2 ** (attempt - 1))
+                with self._lock:
+                    self.batch_retries += 1
+                log.warning("bucket %s batch failed (attempt %d/%d), "
+                            "retrying in %.2fs: %r", key, attempt,
+                            self.max_retries + 1, backoff, exc)
+                time.sleep(backoff)
+                continue
+            if sent is None and self.bisect_on_error and len(batch) > 1:
+                mid = len(batch) // 2
+                log.warning("bucket %s: bisecting failed batch of %d to "
+                            "isolate the poison request", key, len(batch))
+                self._serve_rec(key, batch[:mid], depth + 1, pub,
+                                abandoned)
+                self._serve_rec(key, batch[mid:], depth + 1, pub,
+                                abandoned)
+                return
+            if depth > 0 and len(batch) == 1:
+                # Bisection bottomed out on one request: quarantine it —
+                # it fails alone, its former batchmates already served.
+                with self._lock:
+                    self.quarantined += 1
+                log.error("bucket %s: request %d quarantined after "
+                          "bisection: %r", key,
+                          batch[0][1].request_id, exc)
+            self._publish_batch(key, batch, None, time.time() - t0, pub,
+                                repr(exc), degraded=False)
+            return
 
     def _loop(self):
         while True:
@@ -624,6 +934,9 @@ class DiffusionEngine:
             if key is None:
                 return  # stopped and drained
             self._serve(key, batch)
+            fault = fault_lib.active_faults()
+            if fault is not None:
+                fault.maybe_corrupt_artifact(self._batches_served)
 
 
 class LMEngine:

@@ -37,7 +37,8 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.serving.engine import DiffusionEngine, GenRequest, GenResult
+from repro.serving.engine import (DiffusionEngine, GenRequest, GenResult,
+                                  is_failover_error)
 from repro.serving.slo import ShedError
 from repro.utils.logging import get_logger
 
@@ -50,11 +51,21 @@ class Router:
     """Load-balancing front door over ``replicas`` (started/stopped as a
     group).  All public methods are thread-safe."""
 
-    def __init__(self, replicas: List[DiffusionEngine]):
+    def __init__(self, replicas: List[DiffusionEngine],
+                 probe_interval_s: Optional[float] = None):
         if not replicas:
             raise ValueError("need at least one engine replica")
         self._replicas = list(replicas)
         self._healthy = [True] * len(replicas)
+        # Health probing (§17.4): every probe_interval_s the router
+        # re-checks downed replicas and re-admits any whose engine is
+        # healthy again (externally restarted via engine.start()).
+        # None = no probe thread; probe_health() can still be called
+        # manually.
+        self.probe_interval_s = probe_interval_s
+        self.readmitted_count = 0
+        self._probe_stop = threading.Event()
+        self._probe_thread: Optional[threading.Thread] = None
         # rid -> replica index currently responsible for the request
         self._assigned: Dict[int, int] = {}
         # rid -> original request, kept until result() hands it out so
@@ -78,8 +89,19 @@ class Router:
             self._healthy = [True] * len(self._replicas)
         for eng in self._replicas:
             eng.start()
+        if self.probe_interval_s is not None:
+            self._probe_stop.clear()
+            self._probe_thread = threading.Thread(
+                target=self._probe_loop, daemon=True)
+            self._probe_thread.start()
 
     def stop(self, drain: bool = True):
+        # Stop the probe thread FIRST: marking replicas down below must
+        # not race a probe re-admitting them.
+        self._probe_stop.set()
+        if self._probe_thread is not None:
+            self._probe_thread.join()
+            self._probe_thread = None
         # Claim every still-healthy replica under the lock (marking it
         # down) so a concurrent fail_replica()/_mark_down cannot stop
         # the same engine twice or stop a just-downed replica with
@@ -157,7 +179,7 @@ class Router:
                 res = self._replicas[idx].result(request_id,
                                                  timeout=remaining)
             except RuntimeError as e:
-                if "engine stopped" in str(e):
+                if is_failover_error(e):
                     # the replica died under this request: requeue to a
                     # survivor and keep waiting — unless no survivor
                     # would take it, then surface the original error
@@ -216,7 +238,7 @@ class Router:
                     # and only finish if the request truly stays here.
                     rec = self._replicas[idx].peek_result(request_id)
                     if (rec is not None and rec.error is not None
-                            and "engine stopped" in rec.error):
+                            and is_failover_error(rec.error)):
                         self._requeue_one(request_id, dead=idx)
                     with self._lock:
                         if self._assigned.get(request_id) in (None, idx):
@@ -257,9 +279,34 @@ class Router:
         log.info("replica %d failed: requeued %d request(s) onto %s",
                  idx, moved, self.healthy_replicas())
 
+    def probe_health(self) -> List[int]:
+        """Re-admit downed replicas whose engine reports healthy again
+        (restarted externally via ``engine.start()``).  Returns the
+        re-admitted indices.  A watchdog-tripped or failed replica stays
+        down until someone actually restarts its engine — the probe
+        verifies recovery, it does not cause it."""
+        readmitted = []
+        with self._lock:
+            for i, h in enumerate(self._healthy):
+                if not h and self._replicas[i].healthy():
+                    self._healthy[i] = True
+                    self.readmitted_count += 1
+                    readmitted.append(i)
+        for i in readmitted:
+            log.info("replica %d recovered: re-admitted to rotation", i)
+        return readmitted
+
+    def _probe_loop(self):
+        while not self._probe_stop.wait(self.probe_interval_s):
+            try:
+                self.probe_health()
+            except Exception:  # noqa: BLE001 — probing must not die
+                log.exception("health probe failed")
+
     def metrics(self) -> Dict[str, int]:
         m = {"router_shed_count": self.shed_count,
-             "router_requeued": self.requeued_count}
+             "router_requeued": self.requeued_count,
+             "router_readmitted": self.readmitted_count}
         for i, eng in enumerate(self._replicas):
             for k, v in eng.metrics().items():
                 m[f"replica{i}_{k}"] = v

@@ -81,6 +81,19 @@ class ServiceEstimator:
         with self._lock:
             return self._ewma.get(key)
 
+    def timeout_hint(self, key: Hashable, floor_s: float,
+                     mult: float = 8.0) -> float:
+        """Watchdog budget for one batch of ``key`` (DESIGN.md §17.4):
+        ``mult`` × the EWMA service time once observed, never below
+        ``floor_s`` — so the hang detector scales with what the bucket
+        actually costs (first-batch compiles included in the EWMA)
+        instead of a blind constant, and an unobserved bucket gets the
+        caller's floor rather than a guess of zero."""
+        est = self.expected(key)
+        if est is None:
+            return floor_s
+        return max(floor_s, mult * est)
+
 
 def _batches_needed(queued_ahead: int, max_batch: int) -> int:
     """Minimum sampler invocations before a request joining a bucket

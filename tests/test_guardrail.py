@@ -1,0 +1,311 @@
+"""Runtime guardrail + chaos-harness tests (DESIGN.md §17): the
+in-graph sentinels, the degradation ladder's trip / cool-down /
+re-promotion state machine, the fault-spec grammar, and the engine's
+escalation chain end to end — sentinel trip -> degrade-and-re-serve,
+hang -> watchdog, transient error -> retry, poison -> bisection
+quarantine — driven by deterministic fault injection."""
+
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decision_cache import CachedDecision
+from repro.core.guardrail import (DegradationLadder, GuardrailConfig,
+                                  attach_sentinel, dense_probe_error,
+                                  next_policy, nonfinite_count)
+from repro.serving import faults as fault_lib
+from repro.serving.engine import (DiffusionEngine, GenRequest,
+                                  is_failover_error)
+from repro.serving.faults import FaultPlan, parse_faults
+
+
+def _txt(val, tokens=1, dim=1):
+    return np.full((tokens, dim), float(val), np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_faults():
+    """Every test starts and ends with no fault plan installed — an
+    armed plan leaking across tests would corrupt unrelated suites."""
+    fault_lib.clear_faults()
+    yield
+    fault_lib.clear_faults()
+
+
+class TestSentinels:
+    def test_nonfinite_count_total_and_lead_shaped(self):
+        x = jnp.ones((2, 3, 4))
+        x = x.at[0, 1, 2].set(jnp.nan).at[1, 0, 0].set(jnp.inf)
+        assert int(nonfinite_count(x)) == 2
+        per = nonfinite_count(x, lead_ndim=2)
+        assert per.shape == (2, 3)
+        assert int(per[0, 1]) == 1 and int(per[1, 0]) == 1
+        assert int(per.sum()) == 2
+
+    def test_dense_probe_error_zero_on_dense_output(self):
+        k0 = jax.random.PRNGKey(0)
+        q, k, v = (jax.random.normal(kk, (4, 8))
+                   for kk in jax.random.split(k0, 3))
+        scale = 8 ** -0.5
+        ref = jax.nn.softmax((q @ k.T) * scale, axis=-1) @ v
+        assert float(dense_probe_error(q, k, v, ref, scale)) < 1e-5
+        # a wildly wrong output has O(1) relative error
+        assert float(dense_probe_error(q, k, v, jnp.zeros_like(ref),
+                                       scale)) > 0.5
+
+    def test_attach_sentinel_accumulates_nonfinite(self):
+        cfg = types.SimpleNamespace(sentinel_probe_every=0)
+        k0 = jax.random.PRNGKey(1)
+        q, k, v = (jax.random.normal(kk, (2, 3, 4, 8))
+                   for kk in jax.random.split(k0, 3))
+        out = jnp.ones((2, 3, 4, 8)).at[0, 0, 1, :].set(jnp.nan)
+        cache = attach_sentinel(CachedDecision(), out, q, k, v,
+                                8 ** -0.5, step=0, cfg=cfg)
+        assert cache.nonfinite.shape == (2, 3)
+        assert int(cache.nonfinite.sum()) == 8
+        # second call accumulates into the carry
+        cache = attach_sentinel(cache, out, q, k, v, 8 ** -0.5,
+                                step=1, cfg=cfg)
+        assert int(cache.nonfinite.sum()) == 16
+        np.testing.assert_allclose(np.asarray(cache.probe_err), 0.0)
+
+    def test_attach_sentinel_probe_measures_drift(self):
+        cfg = types.SimpleNamespace(sentinel_probe_every=1)
+        k0 = jax.random.PRNGKey(2)
+        q, k, v = (jax.random.normal(kk, (2, 4, 8))
+                   for kk in jax.random.split(k0, 3))
+        scale = 8 ** -0.5
+        dense = jax.vmap(
+            lambda qq, kk, vv: jax.nn.softmax(
+                (qq @ kk.T) * scale, axis=-1) @ vv)(q, k, v)
+        clean = attach_sentinel(CachedDecision(), dense, q, k, v, scale,
+                                step=0, cfg=cfg)
+        assert float(clean.probe_err.max()) < 1e-5
+        drifted = attach_sentinel(CachedDecision(), jnp.zeros_like(dense),
+                                  q, k, v, scale, step=0, cfg=cfg)
+        assert float(drifted.probe_err.max()) > 0.5
+
+
+class TestLadderStateMachine:
+    def test_next_policy_rungs(self):
+        assert next_policy("rainfusion") == "ripple"
+        assert next_policy("static") == "ripple"
+        assert next_policy("ripple") == "dense"
+        assert next_policy("dense") is None
+        # unknown / default policies jump straight to the backstop
+        assert next_policy("mystery") == "dense"
+        assert next_policy(None) == "dense"
+
+    def test_trip_steps_down_and_dead_ends_at_dense(self):
+        lad = DegradationLadder()
+        assert lad.effective_policy("f", "rainfusion") == ("rainfusion",
+                                                           False)
+        assert lad.trip("f", "rainfusion") == "ripple"
+        assert lad.effective_policy("f", "rainfusion") == ("ripple", False)
+        assert lad.trip("f", "rainfusion") == "dense"
+        assert lad.trip("f", "rainfusion") is None  # floor: engine errors
+        m = lad.metrics()
+        assert m["degraded_count"] == 2
+        assert m["dense_fallbacks"] == 1
+        assert m["degraded_buckets"] == 1
+        assert lad.degraded("f") and not lad.degraded("other")
+
+    def test_cooldown_probe_and_repromotion(self):
+        lad = DegradationLadder(GuardrailConfig(cooldown_batches=2))
+        lad.trip("f", "ripple")
+        assert lad.effective_policy("f", "ripple") == ("dense", False)
+        lad.record_clean("f")
+        lad.record_clean("f")  # cool-down met: next batch probes base
+        assert lad.effective_policy("f", "ripple") == ("ripple", True)
+        lad.record_clean("f")  # clean probe restores the base policy
+        assert lad.metrics()["repromotions"] == 1
+        assert not lad.degraded("f")
+        assert lad.effective_policy("f", "ripple") == ("ripple", False)
+
+    def test_failed_probe_falls_back_and_restarts_cooldown(self):
+        lad = DegradationLadder(GuardrailConfig(cooldown_batches=1))
+        lad.trip("f", "ripple")
+        lad.record_clean("f")
+        assert lad.effective_policy("f", "ripple") == ("ripple", True)
+        assert lad.trip("f", "ripple") == "dense"  # probe tripped
+        m = lad.metrics()
+        assert m["failed_probes"] == 1 and m["repromotions"] == 0
+        # parked back at dense, cool-down restarted
+        assert lad.effective_policy("f", "ripple") == ("dense", False)
+
+
+class TestFaultSpecGrammar:
+    def test_parse_kinds_params_counts_seed(self):
+        plan = parse_faults("seed=7;attn_nan:step=2;"
+                            "raise:count=3,msg=transient;poison:rid=5")
+        assert plan.seed == 7
+        assert plan.spec("attn_nan").param("step") == 2
+        s = plan.spec("raise")
+        assert s.count == 3 and s.param("msg") == "transient"
+        assert plan.spec("poison").count == -1  # unlimited by default
+        assert plan.spec("kill_replica") is None
+
+    def test_unknown_kind_and_malformed_param_fail_loudly(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            parse_faults("attn_nam:step=1")
+        with pytest.raises(ValueError, match="malformed fault param"):
+            parse_faults("hang:seconds")
+
+    def test_take_respects_counts(self):
+        plan = parse_faults("raise:count=2")
+        assert plan.take("raise") is not None
+        assert plan.take("raise") is not None
+        assert plan.take("raise") is None  # exhausted
+        assert plan.counters() == {"fault_raise": 2}
+        unlimited = FaultPlan(parse_faults("poison:rid=1").specs)
+        for _ in range(5):
+            assert unlimited.take("poison") is not None
+
+    def test_install_and_clear(self):
+        fault_lib.install_faults("hang:seconds=1")
+        assert fault_lib.active_faults().spec("hang") is not None
+        fault_lib.clear_faults()
+        assert fault_lib.active_faults() is None
+
+
+class TestAttnNanInjection:
+    def test_traced_flip_fires_only_at_armed_step(self):
+        from repro.core.dispatch import _inject_attn_nan
+
+        out = jnp.ones((2, 8))
+        assert bool(jnp.isfinite(_inject_attn_nan(out, 1)).all())  # unarmed
+        fault_lib.install_faults("attn_nan:step=1")
+        assert not bool(jnp.isfinite(_inject_attn_nan(out, 1)).any())
+        assert bool(jnp.isfinite(_inject_attn_nan(out, 0)).all())
+        assert fault_lib.active_faults().counters()["fault_attn_nan"] >= 1
+
+
+def _nan_under_sparse_factory(healthy=None):
+    """Policy-aware toy factory: the base (sparse) policy emits NaNs —
+    unless ``healthy`` says the 'kernel bug' is fixed — while the dense
+    rung is always clean.  The exact shape of a real sparse-backend NaN
+    as the ladder sees it."""
+    def factory(latent_shape, steps, policy=None):
+        def fn(noise, txt, rngs):
+            if policy != "dense" and not (healthy or {}).get("fixed"):
+                return jnp.full_like(noise, jnp.nan)
+            return jnp.zeros_like(noise)
+        return fn
+    return factory
+
+
+class TestEngineEscalation:
+    def test_sentinel_trip_degrades_to_dense_and_completes(self):
+        eng = DiffusionEngine(sampler_factory=_nan_under_sparse_factory(),
+                              max_batch=2, max_wait_s=0.01, guardrail=True)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), steps=2,
+                              latent_shape=(4,)))
+        r = eng.result(0, timeout=30)
+        eng.stop()
+        assert np.all(np.isfinite(r.latents))
+        assert r.degraded is True
+        m = eng.metrics()
+        assert m["degraded_count"] == 1 and m["dense_fallbacks"] == 1
+
+    def test_degradation_is_sticky_then_repromotes(self):
+        healthy = {}
+        eng = DiffusionEngine(
+            sampler_factory=_nan_under_sparse_factory(healthy),
+            max_batch=1, max_wait_s=0.01,
+            guardrail=GuardrailConfig(cooldown_batches=2))
+        eng.start()
+        # rid 0 trips (one rung charged), 1 rides the sticky dense rung,
+        # 2 is the cool-down probe — still broken, so it falls back, and
+        # 3 rides dense again while the new cool-down runs
+        for rid in range(4):
+            eng.submit(GenRequest(request_id=rid, txt=_txt(rid), steps=2,
+                                  latent_shape=(4,)))
+            r = eng.result(rid, timeout=30)
+            assert np.all(np.isfinite(r.latents)) and r.degraded
+        healthy["fixed"] = True  # the 'kernel bug' goes away
+        eng.submit(GenRequest(request_id=4, txt=_txt(4), steps=2,
+                              latent_shape=(4,)))
+        assert eng.result(4, timeout=30).degraded is False  # clean probe
+        eng.submit(GenRequest(request_id=5, txt=_txt(5), steps=2,
+                              latent_shape=(4,)))
+        r = eng.result(5, timeout=30)
+        eng.stop()
+        assert r.degraded is False  # back on the base policy for good
+        m = eng.metrics()
+        assert m["degraded_count"] == 1  # exactly one rung ever charged
+        assert m["repromotions"] == 1 and m["failed_probes"] == 1
+
+    def test_dense_floor_failure_errors_not_loops(self):
+        def factory(latent_shape, steps, policy=None):
+            return lambda noise, txt, rngs: jnp.full_like(noise, jnp.nan)
+
+        eng = DiffusionEngine(sampler_factory=factory, max_batch=1,
+                              max_wait_s=0.01, guardrail=True)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), steps=2,
+                              latent_shape=(4,)))
+        with pytest.raises(RuntimeError, match="dense floor"):
+            eng.result(0, timeout=30)
+        eng.stop()
+
+    def test_guardrail_requires_policy_aware_factory(self):
+        with pytest.raises(ValueError, match="policy"):
+            DiffusionEngine(lambda n, t, r: n, latent_shape=(2,),
+                            guardrail=True)
+
+    def test_hang_fault_trips_watchdog_and_marks_unhealthy(self):
+        fault_lib.install_faults("hang:seconds=2")
+
+        def sample_fn(noise, txt, rngs):
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01, batch_timeout_s=0.2)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        with pytest.raises(RuntimeError, match="watchdog") as ei:
+            eng.result(0, timeout=30)
+        assert is_failover_error(ei.value)  # the router would requeue it
+        assert eng.healthy() is False
+        assert eng.metrics()["watchdog_trips"] == 1
+        eng.stop()
+
+    def test_transient_raise_fault_is_retried(self):
+        fault_lib.install_faults("raise:count=1,msg=flaky-driver")
+
+        def sample_fn(noise, txt, rngs):
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01, max_retries=1,
+                              retry_backoff_s=0.01)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        r = eng.result(0, timeout=30)
+        eng.stop()
+        assert r.latents.shape == (2,)
+        assert eng.metrics()["batch_retries"] == 1
+
+    def test_poison_request_quarantined_alone_by_bisection(self):
+        fault_lib.install_faults("poison:rid=2")
+
+        def sample_fn(noise, txt, rngs):
+            return noise
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=4,
+                              max_wait_s=0.05, max_retries=0,
+                              retry_backoff_s=0.01)
+        for rid in range(3):  # queue before start: one 3-request batch
+            eng.submit(GenRequest(request_id=rid, txt=_txt(rid)))
+        eng.start()
+        for rid in (0, 1):  # batchmates survive the bisection
+            assert eng.result(rid, timeout=30).latents.shape == (2,)
+        with pytest.raises(RuntimeError, match="poison"):
+            eng.result(2, timeout=30)
+        eng.stop()
+        assert eng.metrics()["quarantined"] == 1

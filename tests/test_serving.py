@@ -302,6 +302,36 @@ class TestMixedPromptLengths:
         assert 2 in batches
 
 
+class TestSubmitValidation:
+    def test_rejects_malformed_requests_at_the_door(self):
+        """§17 satellite: a malformed field used to stack fine and then
+        crash the sampler, failing every batchmate.  Now submit()
+        raises ValueError before the request is queued."""
+        eng = DiffusionEngine(lambda n, t, r: n, latent_shape=(2,))
+        eng.start()
+        with pytest.raises(ValueError, match="steps"):
+            eng.submit(GenRequest(request_id=0, txt=_txt(0), steps=0))
+        with pytest.raises(ValueError, match="steps"):
+            eng.submit(GenRequest(request_id=1, txt=_txt(1), steps=-3))
+        with pytest.raises(ValueError, match="latent_shape"):
+            eng.submit(GenRequest(request_id=2, txt=_txt(2),
+                                  latent_shape=(0, 2)))
+        with pytest.raises(ValueError, match="latent_shape"):
+            eng.submit(GenRequest(request_id=3, txt=_txt(3),
+                                  latent_shape=()))
+        with pytest.raises(ValueError, match="deadline_s"):
+            eng.submit(GenRequest(request_id=4, txt=_txt(4),
+                                  deadline_s=-5.0))
+        with pytest.raises(ValueError, match="reuse_every"):
+            eng.submit(GenRequest(request_id=5, txt=_txt(5),
+                                  reuse_every=0))
+        with pytest.raises(ValueError, match="stream_every"):
+            eng.submit(GenRequest(request_id=6, txt=_txt(6),
+                                  stream_every=-1))
+        assert eng.pending() == 0  # nothing malformed was queued
+        eng.stop()
+
+
 class TestErroredResultRetrievable:
     def test_retry_after_error_sees_original_error_not_timeout(self):
         """Regression: ``result()`` used to *pop* an errored result
@@ -334,6 +364,35 @@ class TestErroredResultRetrievable:
         time.sleep(0.15)
         with pytest.raises(TimeoutError):
             eng.result(0, timeout=0.05)
+
+    def test_error_tombstone_lives_through_its_expiry_instant(
+            self, monkeypatch):
+        """Regression (§17 satellite): the eviction predicate used to be
+        ``exp <= now``, so a result() retry landing exactly at the TTL
+        expiry instant evicted the very tombstone it came for and raised
+        a spurious TimeoutError instead of the stored batch error."""
+        import repro.serving.engine as engine_mod
+
+        def sample_fn(noise, txt, rngs):
+            raise ValueError("boom-ttl")
+
+        eng = DiffusionEngine(sample_fn, latent_shape=(2,), max_batch=1,
+                              max_wait_s=0.01, error_ttl_s=60.0)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0)))
+        with pytest.raises(RuntimeError, match="boom-ttl"):
+            eng.result(0, timeout=30)
+        eng.stop()
+        # Retry landing *exactly* at the expiry instant: still the error.
+        frozen = eng._error_expiry[0]
+        monkeypatch.setattr(engine_mod.time, "time", lambda: frozen)
+        with pytest.raises(RuntimeError, match="boom-ttl"):
+            eng.result(0, timeout=30)
+        monkeypatch.undo()
+        # Strictly after the instant: evicted, back to TimeoutError.
+        eng._error_expiry[0] = time.time() - 0.001
+        with pytest.raises(TimeoutError):
+            eng.result(0, timeout=0.01)
 
     def test_result_timeout_is_clamped_nonnegative(self):
         """A result() deadline in the past must raise TimeoutError
@@ -485,3 +544,39 @@ class TestStreamingDelivery:
             eng.submit(GenRequest(request_id=0, txt=_txt(0),
                                   stream_every=2))
         eng.stop()
+
+    def test_degraded_state_survives_streaming_chunk_boundary(self):
+        """§17: a NaN chunk mid-stream trips the ladder *before*
+        publication — subscribers never see the bad frame — and the
+        batch re-serves under the dense rung without re-publishing the
+        chunks the first attempt already delivered."""
+        def factory(latent_shape, steps, policy=None, reuse_every=None,
+                    stream_every=None):
+            if stream_every is None:
+                return lambda noise, txt, rngs: noise
+
+            def gen_fn(noise, txt, rngs):
+                for k in range(1, 4):
+                    bad = policy != "dense" and k == 2
+                    yield (jnp.full_like(noise, jnp.nan) if bad
+                           else noise + k), None
+
+            return gen_fn
+
+        eng = DiffusionEngine(sampler_factory=factory, latent_shape=(2,),
+                              max_batch=1, max_wait_s=0.01,
+                              guardrail=True)
+        eng.start()
+        eng.submit(GenRequest(request_id=0, txt=_txt(0), stream_every=1))
+        chunks = list(eng.stream(0, timeout=30))
+        r = eng.result(0, timeout=30)
+        eng.stop()
+        assert r.degraded is True
+        assert np.all(np.isfinite(r.latents))
+        # exactly one copy of each of the 3 chunks, every one finite:
+        # chunk 1 came from the tripped attempt (delivered before the
+        # NaN), chunks 2-3 from the dense re-serve
+        assert len(chunks) == 3
+        assert all(np.all(np.isfinite(c)) for c in chunks)
+        np.testing.assert_allclose(chunks[-1], r.latents)
+        assert eng.metrics()["dense_fallbacks"] == 1

@@ -48,6 +48,16 @@ class TestServiceEstimator:
         est.observe("a", 1.0)
         assert est.lower_bound("b") is None
 
+    def test_timeout_hint_scales_with_ewma_above_floor(self):
+        """Watchdog budget (§17.4): the caller's floor until the bucket
+        has observations, then mult x the EWMA — never below the floor."""
+        est = ServiceEstimator()
+        assert est.timeout_hint("k", 5.0) == 5.0
+        est.observe("k", 2.0)
+        assert est.timeout_hint("k", 5.0) == pytest.approx(16.0)
+        assert est.timeout_hint("k", 60.0) == 60.0  # floor still wins
+        assert est.timeout_hint("k", 5.0, mult=2.0) == pytest.approx(5.0)
+
 
 class TestAdmissionDecision:
     NOW = 1000.0
@@ -464,3 +474,90 @@ class TestRouter:
                                  latent_shape=(2,)))
         assert router.result(0, timeout=30).latents.shape == (2,)
         router.stop()
+
+
+class TestRouterHealthProbes:
+    @staticmethod
+    def _replica():
+        def factory(latent_shape, steps):
+            return lambda noise, txt, rngs: noise
+
+        return DiffusionEngine(sampler_factory=factory, max_batch=1,
+                               max_wait_s=0.0)
+
+    def test_probe_health_readmits_restarted_replica(self):
+        """§17: a downed replica whose engine is healthy again (ops
+        restarted it) rejoins the rotation on the next health probe —
+        and only then; a still-dead engine stays out."""
+        router = Router([self._replica() for _ in range(2)])
+        router.start()
+        router.fail_replica(0)
+        assert router.healthy_replicas() == [1]
+        assert router.probe_health() == []  # engine still stopped
+        router._replicas[0].start()         # the restart
+        assert router.probe_health() == [0]
+        assert router.healthy_replicas() == [0, 1]
+        assert router.metrics()["router_readmitted"] == 1
+        # traffic spreads over the re-admitted replica again
+        placed = [router.submit(GenRequest(request_id=i, txt=_txt(i),
+                                           latent_shape=(2,)))
+                  for i in range(4)]
+        for i in range(4):
+            router.result(i, timeout=30)
+        router.stop()
+        assert 0 in placed
+
+    def test_probe_thread_readmits_on_interval(self):
+        router = Router([self._replica() for _ in range(2)],
+                        probe_interval_s=0.05)
+        router.start()
+        router.fail_replica(0)
+        router._replicas[0].start()
+        deadline = time.time() + 5.0
+        while (router.healthy_replicas() != [0, 1]
+               and time.time() < deadline):
+            time.sleep(0.02)
+        healthy = router.healthy_replicas()
+        router.stop()
+        assert healthy == [0, 1]  # the background probe re-admitted it
+
+
+class TestGuardrailFailover:
+    def test_degraded_state_survives_replica_failover(self):
+        """§17.2: router replicas share one DegradationLadder, so a
+        bucket family degraded on the dying replica is served at its
+        degraded rung by the survivor — no second trip, no second NaN
+        batch shipped while the survivor rediscovers the bug."""
+        import jax.numpy as jnp
+
+        from repro.core.guardrail import DegradationLadder
+
+        ladder = DegradationLadder()
+
+        def factory(latent_shape, steps, policy=None):
+            def fn(noise, txt, rngs):
+                if policy != "dense":
+                    return jnp.full_like(noise, jnp.nan)
+                return jnp.zeros_like(noise)
+            return fn
+
+        def replica():
+            return DiffusionEngine(sampler_factory=factory, max_batch=1,
+                                   max_wait_s=0.0, guardrail=ladder)
+
+        router = Router([replica() for _ in range(2)])
+        router.start()
+        victim = router.submit(GenRequest(request_id=0, txt=_txt(0),
+                                          latent_shape=(2,), steps=2))
+        r0 = router.result(0, timeout=30)
+        assert r0.degraded and np.all(np.isfinite(r0.latents))
+        assert ladder.metrics()["degraded_count"] == 1
+        router.fail_replica(victim)
+        router.submit(GenRequest(request_id=1, txt=_txt(1),
+                                 latent_shape=(2,), steps=2))
+        r1 = router.result(1, timeout=30)
+        router.stop()
+        assert r1.degraded and np.all(np.isfinite(r1.latents))
+        # the survivor served straight from the shared degraded rung:
+        # no new trip was charged
+        assert ladder.metrics()["degraded_count"] == 1
