@@ -9,6 +9,10 @@ devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8) runs
 the attention dispatch sharded under shard_map (DESIGN.md §10).
 
     PYTHONPATH=src python examples/serve_video.py [--steps 20] [--requests 4]
+
+``--deadline-ms`` stamps a per-request SLO (admission control may shed),
+``--stream-every K`` streams intermediate latents and reports TTFF, and
+``--no-guardrail`` turns off the §17 sentinels + degradation ladder.
 """
 
 import argparse
@@ -24,10 +28,12 @@ from repro.configs import get_smoke_config
 from repro.core import dispatch as dispatch_lib
 from repro.data.synthetic import DataSpec, latent_video_batch
 from repro.launch.mesh import parse_mesh_spec
-from repro.launch.serve import build_sampler
-from repro.launch.workloads import build_workload, model_fns
+from repro.launch.serve import make_sampler_factory
+from repro.launch.workloads import (build_workload, latent_shape_for,
+                                    model_fns)
 from repro.models.params import init_params
 from repro.serving.engine import DiffusionEngine, GenRequest
+from repro.serving.slo import ShedError
 from repro.training import train_loop
 
 
@@ -67,6 +73,16 @@ def main():
                     help="reuse policy for the accelerated pass "
                          "(core.policy registry: ripple, svg, equal_mse, "
                          "dense, or anything registered out-of-tree)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO: stamp deadline_s = now + this "
+                         "and report deadline_met / admission sheds")
+    ap.add_argument("--stream-every", type=int, default=None, metavar="K",
+                    help="stream intermediate latents every K denoising "
+                         "steps and report time-to-first-frame")
+    ap.add_argument("--no-guardrail", action="store_true",
+                    help="disable the runtime quality guardrails "
+                         "(DESIGN.md §17): in-graph sentinels plus the "
+                         "per-bucket degradation ladder.  On by default")
     args = ap.parse_args()
 
     if args.mesh:
@@ -84,29 +100,66 @@ def main():
                           batch=1, steps=args.steps)
     arch = dataclasses.replace(arch, shapes=(gen_shape,))
 
+    guardrail = not args.no_guardrail
+    ladder = None
+    if guardrail:
+        from repro.core.guardrail import DegradationLadder
+
+        ladder = DegradationLadder()
+
     results = {}
     # --policy dense must not overwrite the baseline's results slot
     accel = args.policy if args.policy != "dense" else "dense_policy"
+    lat_shape = tuple(latent_shape_for(arch, gen_shape))
     for label, ripple in (("dense", False), (accel, True)):
-        sample_fn, lat_shape = build_sampler(arch, gen_shape, params,
-                                             use_ripple=ripple,
-                                             policy=args.policy)
-        engine = DiffusionEngine(sample_fn, lat_shape, max_batch=2)
+        # Factory mode (not a prebuilt sample_fn): streaming buckets and
+        # guardrail degradation both need the engine to compile per
+        # (policy, stream_every) bucket identity.
+        factory, plan_fn = make_sampler_factory(arch, (gen_shape,), params,
+                                                use_ripple=ripple,
+                                                sentinel=guardrail)
+        engine = DiffusionEngine(sampler_factory=factory, plan_fn=plan_fn,
+                                 max_batch=2,
+                                 default_policy=args.policy if ripple
+                                 else None,
+                                 guardrail=ladder)
         engine.start()
         m = arch.model
         t0 = time.time()
+        submitted = []
         for i in range(args.requests):
             txt = 0.05 * np.random.default_rng(i).standard_normal(
                 (m.txt_tokens, m.txt_dim)).astype(np.float32)
-            engine.submit(GenRequest(request_id=i, txt=txt, seed=i))
-        outs = [engine.result(i, timeout=600) for i in range(args.requests)]
+            req = GenRequest(request_id=i, txt=txt, seed=i,
+                             steps=args.steps, latent_shape=lat_shape,
+                             stream_every=args.stream_every)
+            if args.deadline_ms is not None:
+                req.deadline_s = time.time() + args.deadline_ms / 1e3
+            try:
+                engine.submit(req)
+                submitted.append(i)
+            except ShedError as e:
+                print(f"[{label}] request {i} shed at admission: {e}")
+        if args.stream_every:
+            for i in submitted:
+                chunks = sum(1 for _ in engine.stream(i, timeout=600))
+                print(f"[{label}] request {i}: {chunks} streamed chunks")
+        outs = [engine.result(i, timeout=600) for i in submitted]
         engine.stop()
         wall = time.time() - t0
-        results[label] = outs
-        print(f"[{label}] {args.requests} requests in {wall:.2f}s "
-              f"(mean/request {np.mean([o.walltime_s for o in outs]):.2f}s)")
+        results[label] = {i: o for i, o in zip(submitted, outs)}
+        extra = ""
+        if args.stream_every:
+            extra += (f", mean TTFF "
+                      f"{np.mean([o.ttff_s for o in outs]):.2f}s")
+        if args.deadline_ms is not None:
+            met = sum(1 for o in outs if o.deadline_met)
+            extra += f", {met}/{len(outs)} deadlines met"
+        print(f"[{label}] {len(outs)} requests in {wall:.2f}s "
+              f"(mean/request {np.mean([o.walltime_s for o in outs]):.2f}s"
+              f"{extra})")
 
-    for i in range(args.requests):
+    for i in sorted(set(results["dense"]) & set(results[accel])):
         p = psnr(results["dense"][i].latents, results[accel][i].latents)
         print(f"request {i}: {accel}-vs-dense PSNR {p:.1f} dB")
     print("NOTE: CPU wall time does not reflect TPU speedup; the realized "

@@ -41,12 +41,14 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import RippleConfig
 from repro.core.policy import ReuseDecision, get_policy
 
 __all__ = ["CachedDecision", "cache_from_decision", "drift_stat",
-           "initial_state", "refresh_due", "supports_cache"]
+           "initial_state", "merge_states", "refresh_due", "slice_state",
+           "state_from_arrays", "state_to_arrays", "supports_cache"]
 
 
 @dataclasses.dataclass
@@ -171,6 +173,85 @@ def cache_from_decision(decision: ReuseDecision, stat: jax.Array,
 def bump_hit(cached: CachedDecision) -> CachedDecision:
     """The cache-hit branch's counter update."""
     return dataclasses.replace(cached, hits=cached.hits + 1)
+
+
+# -- checkpoint (de)serialization (DESIGN.md §18) ---------------------------
+#
+# The serving engine persists the per-layer decision state at streaming
+# chunk boundaries so a warm restart / router failover can resume
+# mid-flight with the *same* cached plan — resuming without it would
+# apply a freshly-zeroed decision at a non-refresh step and break the
+# bitwise resume-equals-monolithic contract.  Leaves cross the disk
+# boundary as host arrays keyed by field name (the journal layer turns
+# them into raw byte buffers; np.savez cannot hold bfloat16).
+
+_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(CachedDecision))
+
+
+def state_to_arrays(state: CachedDecision):
+    """Host-array mapping of every leaf (None leaves stay None)."""
+    return {name: (None if getattr(state, name) is None
+                   else np.asarray(jax.device_get(getattr(state, name))))
+            for name in _STATE_FIELDS}
+
+
+def state_from_arrays(arrays) -> CachedDecision:
+    """Inverse of :func:`state_to_arrays`; unknown keys are rejected so
+    a checkpoint written by a different code version fails loudly."""
+    extra = set(arrays) - set(_STATE_FIELDS)
+    if extra:
+        raise ValueError(f"unknown CachedDecision fields in checkpoint: "
+                         f"{sorted(extra)}")
+    return CachedDecision(**{
+        name: (None if arrays.get(name) is None
+               else jnp.asarray(arrays[name]))
+        for name in _STATE_FIELDS})
+
+
+def slice_state(state: CachedDecision, index: int,
+                batch_axis: int = 1) -> CachedDecision:
+    """One request's slice of a batched (layer-stacked) state: every
+    leaf loses all but entry ``index`` of ``batch_axis`` (kept as a
+    size-1 dim, so :func:`merge_states` is its exact inverse).  The
+    ring-path ``elided`` leaf is per-shard, not per-request — the
+    engine gates checkpointing to unsharded buckets, so a populated
+    ``elided`` here is a contract violation, not a slicing case."""
+    if state.elided is not None:
+        raise ValueError("cannot slice a context-parallel (ring) decision "
+                         "state per request; checkpointing is gated to "
+                         "seq_shards == 1")
+
+    def f(leaf):
+        if leaf is None:
+            return None
+        return jax.lax.slice_in_dim(leaf, index, index + 1,
+                                    axis=batch_axis)
+
+    return CachedDecision(**{name: f(getattr(state, name))
+                             for name in _STATE_FIELDS})
+
+
+def merge_states(states, batch_axis: int = 1) -> CachedDecision:
+    """Concatenate per-request states back into one batched state (the
+    resume path's batch assembly).  Leaf presence must agree across all
+    inputs — a mixed batch of cache-threading and cache-less
+    checkpoints cannot share one sampler invocation."""
+    states = list(states)
+    if not states:
+        raise ValueError("merge_states needs at least one state")
+    out = {}
+    for name in _STATE_FIELDS:
+        leaves = [getattr(s, name) for s in states]
+        nones = [lf is None for lf in leaves]
+        if all(nones):
+            out[name] = None
+        elif any(nones):
+            raise ValueError(f"checkpoint states disagree on field "
+                             f"{name!r} (some None, some not)")
+        else:
+            out[name] = (leaves[0] if len(leaves) == 1
+                         else jnp.concatenate(leaves, axis=batch_axis))
+    return CachedDecision(**out)
 
 
 def initial_state(q_shape: Tuple[int, ...], *,

@@ -293,12 +293,10 @@ def _store_disk(key: str, entry: dict, path: Optional[str] = None):
     p = path or autotune_cache_path()
     cache = _load_disk_cache(path)
     cache[key] = entry
-    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
-    tmp = p + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"__schema__": _AUTOTUNE_SCHEMA, **cache}, f, indent=1,
-                  sort_keys=True)
-    os.replace(tmp, p)
+    from repro.utils.diskio import atomic_write_text
+
+    atomic_write_text(p, json.dumps(
+        {"__schema__": _AUTOTUNE_SCHEMA, **cache}, indent=1, sort_keys=True))
 
 
 def autotune_key(backend: str, n_bucket: int, d: int, dv: int) -> str:

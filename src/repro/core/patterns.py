@@ -480,13 +480,15 @@ def load_pattern_artifact(path: Optional[str] = None
 
 def save_pattern_artifact(artifact: PatternArtifact,
                           path: Optional[str] = None) -> str:
-    """Atomic write (tmp + rename), same idiom as the autotune cache."""
+    """Atomic, durable write (tmp + fsync + rename via
+    :func:`repro.utils.diskio.atomic_write_text`), same idiom as the
+    autotune cache — an artifact produced just before a crash must be
+    either fully present or absent on restart, never torn."""
+    from repro.utils.diskio import atomic_write_text
+
     p = path or pattern_artifact_path()
-    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
-    tmp = p + ".tmp"
-    with open(tmp, "w", encoding="utf-8") as f:
-        json.dump(artifact.to_json(), f, indent=1, sort_keys=True)
-    os.replace(tmp, p)
+    atomic_write_text(p, json.dumps(artifact.to_json(), indent=1,
+                                    sort_keys=True))
     return p
 
 

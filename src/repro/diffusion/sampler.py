@@ -61,7 +61,13 @@ def ddim_sample(
     a traced int32 scalar, letting one compiled chunk serve every
     offset.  The deterministic path (``rng=None``, the serving default)
     carries no cross-chunk RNG; chunked stochastic sampling (``eta >
-    0``) needs the caller to split a fresh key per chunk."""
+    0``) needs the caller to split a fresh key per chunk.
+
+    That chunk-chaining exactness is also the crash-recovery contract
+    (DESIGN.md §18): a run resumed from a chunk-boundary checkpoint
+    ``(x, decision_state, step_offset)`` replays exactly the remaining
+    schedule slice, so warm restart and router failover reproduce the
+    uninterrupted trajectory bitwise."""
     total = num_steps if total_steps is None else total_steps
     T = schedule.num_train_steps
     ts = jnp.linspace(T - 1, 0, total).astype(jnp.int32)

@@ -18,7 +18,12 @@ import argparse
 import dataclasses
 import functools
 import importlib
+import json
+import os
+import signal
+import sys
 import time
+import types
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +42,8 @@ from repro.launch.workloads import (_denoise_call, attention_plan,
 from repro.distributed.sharding import NULL_CTX
 from repro.models.params import init_params
 from repro.serving.engine import DiffusionEngine
-from repro.serving.slo import ShedError
+from repro.serving.slo import ServiceEstimator, ShedError
+from repro.utils.diskio import atomic_write_text
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
@@ -156,13 +162,30 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                 return out[0], None, out[1]
             return out, None, None
 
-        def sample_fn(noise, txt, rngs):
-            dstate = (vdit_decision_state(arch, shape.img_res,
-                                          noise.shape[0])
-                      if thread_cache else None)
+        def sample_fn(noise, txt, rngs, resume=None):
+            # Mid-flight resume (DESIGN.md §18): ``resume={"step": S,
+            # "dstate": state}`` starts the chunk loop at offset S with
+            # the checkpointed decision state; ``noise`` is then the
+            # checkpointed x_t, not fresh noise.  Because checkpoints
+            # land only at chunk boundaries, the resumed run replays
+            # the exact chunk partitioning of the uninterrupted one —
+            # the PR 7 chaining contract makes the result bitwise-equal.
+            start = 0
+            dstate = None
+            if resume is not None:
+                start = int(resume.get("step", 0))
+                dstate = resume.get("dstate")
+                if thread_cache and dstate is None and start > 0:
+                    # A mid-flight start without the cached decision
+                    # state would apply a zeroed plan at a non-refresh
+                    # step; replaying from 0 is slower but exact.
+                    start = 0
+            if thread_cache and dstate is None:
+                dstate = vdit_decision_state(arch, shape.img_res,
+                                             noise.shape[0])
             x = noise
             nf_total = jnp.zeros((), jnp.int32)
-            for s0 in range(0, steps, K):
+            for s0 in range(start, steps, K):
                 count = min(K, steps - s0)
                 x, dstate, nf = chunk_fn(x, txt, rngs,
                                          jnp.asarray(s0, jnp.int32),
@@ -175,6 +198,10 @@ def build_sampler(arch, shape, params, *, use_ripple=True, policy=None,
                     # aux reports the whole trajectory.
                     nf_total = nf_total + nf
                     aux["latent_nonfinite"] = nf_total
+                # Chunk-boundary checkpoint state for the engine's
+                # store (§18): the step offset the *next* chunk would
+                # start from, plus the decision state that step needs.
+                aux["__ckpt__"] = {"step": s0 + count, "dstate": dstate}
                 yield x, aux
 
         return sample_fn, lat_shape
@@ -267,6 +294,33 @@ def _maybe_kill_replica(front, fault, completed: int):
     log.warning("fault injection: killing replica %d (depth %d)",
                 idx, depths[idx])
     front.fail_replica(idx)
+
+
+def _maybe_crash(fault, completed: int, *, store=None):
+    """Fire a ``crash`` fault (DESIGN.md §18): SIGKILL this process —
+    no drain, no clean-shutdown marker — once ``completed`` results have
+    been consumed.  With ``wait_ckpt=1`` (default) and a checkpoint
+    store attached, first block until at least one in-flight request
+    has a chunk checkpoint on disk (entries are discarded at finish, so
+    an existing entry *is* in-flight work), making "killed
+    mid-generation" deterministic instead of a race with the sampler."""
+    if fault is None:
+        return
+    spec = fault.spec("crash")
+    if spec is None or completed < int(spec.param("after", 1)):
+        return
+    if int(spec.param("wait_ckpt", 1)) and store is not None:
+        deadline = time.time() + float(spec.param("wait_s", 60.0))
+        while store.count() == 0 and time.time() < deadline:
+            time.sleep(0.05)
+        if store.count() == 0:
+            log.warning("crash fault: no checkpoint landed within the "
+                        "wait budget; killing anyway")
+    if fault.take("crash") is None:
+        return
+    log.warning("fault injection: SIGKILL self (hard crash, no drain)")
+    sys.stderr.flush()
+    os.kill(os.getpid(), signal.SIGKILL)
 
 
 def main(argv=None):
@@ -365,6 +419,32 @@ def main(argv=None):
                     metavar="S",
                     help="router health-probe cadence for re-admitting "
                          "recovered replicas (only with --replicas > 1)")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="crash-safe serving (DESIGN.md §18): write the "
+                         "request-lifecycle WAL, chunk-boundary "
+                         "generation checkpoints, and the service-time "
+                         "estimator snapshot under DIR.  SIGTERM drains "
+                         "gracefully and leaves a clean-shutdown marker; "
+                         "SIGKILL leaves a recoverable journal")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover the journal directory's pending "
+                         "requests (submitted, never finished/shed) and "
+                         "resume any with a chunk checkpoint mid-flight "
+                         "before serving new traffic; requires --journal")
+    ap.add_argument("--journal-fsync", default="always",
+                    choices=("always", "interval", "never"),
+                    help="journal durability policy: fsync every append "
+                         "(default), every few appends, or never (flush "
+                         "only — survives SIGKILL but not power loss)")
+    ap.add_argument("--checkpoint-max", type=int, default=64, metavar="N",
+                    help="bound on distinct requests with an on-disk "
+                         "generation checkpoint (least-recently-written "
+                         "evicted first)")
+    ap.add_argument("--summary-json", default=None, metavar="PATH",
+                    help="write a machine-readable final summary "
+                         "(completed/errors/recovered/resumed_from_step/"
+                         "counters) to PATH — the crash-restart smoke's "
+                         "assertion surface")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
@@ -430,6 +510,71 @@ def main(argv=None):
         # survives a replica failover (DESIGN.md §17.2).
         ladder = DegradationLadder()
 
+    # -- crash-safety state (DESIGN.md §18) ---------------------------------
+    if args.resume and not args.journal:
+        ap.error("--resume requires --journal DIR")
+    journal = store = None
+    estimator = None
+    recovered = []
+    rid_base = 0
+    est_path = None
+    if args.journal:
+        from repro.serving import journal as journal_lib
+
+        # Scan *before* opening: Journal() removes the clean marker.
+        rec = journal_lib.recover(args.journal)
+        if rec.events:
+            log.info("journal %s: %d event(s), %d pending, clean=%s, "
+                     "torn_tail=%s", args.journal, rec.events,
+                     len(rec.pending), rec.clean, rec.torn)
+        journal = journal_lib.Journal(args.journal,
+                                      fsync=args.journal_fsync)
+        store = journal_lib.CheckpointStore(
+            args.journal, max_entries=args.checkpoint_max,
+            fsync=args.journal_fsync != "never")
+        est_path = os.path.join(args.journal, "estimator.json")
+        if os.path.exists(est_path):
+            try:
+                with open(est_path, "r", encoding="utf-8") as f:
+                    estimator = ServiceEstimator.from_json(f.read())
+                log.info("restored service-time estimator from %s",
+                         est_path)
+            except (OSError, ValueError):
+                log.warning("could not restore estimator from %s; "
+                            "starting cold", est_path)
+        # New request ids must never collide with journaled history —
+        # a reused id would alias lifecycle records across requests.
+        known = (set(rec.pending) | set(rec.finished) | set(rec.shed))
+        rid_base = max(known, default=-1) + 1
+        if args.resume and rec.pending:
+            if not rec.clean:
+                log.warning("crash detected (no matching clean-shutdown "
+                            "marker): recovering %d pending request(s)",
+                            len(rec.pending))
+            for rid, reqd in sorted(rec.pending.items()):
+                try:
+                    req = journal_lib.request_from_dict(reqd)
+                except (KeyError, ValueError, TypeError):
+                    log.exception("journaled request %s is unreadable; "
+                                  "skipping", rid)
+                    continue
+                # The absolute deadline has almost certainly expired
+                # across the restart; shedding a journaled request at
+                # the recovery door would break the every-journaled-
+                # request-completes contract.
+                req.deadline_s = None
+                req.recovered = True
+                ck = store.get(rid) if req.stream_every else None
+                if ck and 0 < ck["step"] < req.steps \
+                        and ck["step"] % req.stream_every == 0:
+                    req.resume = {"step": ck["step"], "x": ck["x"],
+                                  "dstate": ck.get("dstate")}
+                    log.info("request %d resumes from step %d/%d",
+                             rid, ck["step"], req.steps)
+                recovered.append(req)
+    if estimator is None and args.journal:
+        estimator = ServiceEstimator()
+
     defs = model_fns(arch)
     params = init_params(defs, jax.random.PRNGKey(args.seed))
     factory, plan_fn = make_sampler_factory(
@@ -445,13 +590,17 @@ def main(argv=None):
                                default_reuse_every=args.reuse_every,
                                scheduler=args.scheduler,
                                guardrail=ladder,
-                               batch_timeout_s=args.batch_timeout)
+                               batch_timeout_s=args.batch_timeout,
+                               estimator=estimator,
+                               journal=journal,
+                               checkpoint_store=store)
 
     if args.replicas > 1:
         from repro.serving.router import Router
 
         front = Router([make_engine() for _ in range(args.replicas)],
-                       probe_interval_s=args.probe_interval)
+                       probe_interval_s=args.probe_interval,
+                       checkpoint_store=store)
     else:
         front = make_engine()
     front.start()
@@ -459,31 +608,74 @@ def main(argv=None):
                                    seed=args.seed, policy=args.policy,
                                    reuse_every=args.reuse_every,
                                    stream_every=args.stream_every)
+    terminating = {"sigterm": False}
+    if args.journal:
+        def _graceful(signum, frame):
+            # Graceful drain (§18): queued requests stay journaled-
+            # pending, in-flight chunks are already checkpointed; the
+            # finally block below stops without drain and writes the
+            # clean-shutdown marker.
+            terminating["sigterm"] = True
+            log.warning("SIGTERM: graceful drain — pending work stays "
+                        "journaled for --resume")
+            raise SystemExit(143)
+
+        signal.signal(signal.SIGTERM, _graceful)
     t0 = time.time()
     shed = 0
     submitted = []
-    for sp, req in traffic:
-        if args.deadline_ms is not None:
-            req.deadline_s = time.time() + args.deadline_ms / 1e3
-        try:
-            front.submit(req)
-        except ShedError as e:
-            shed += 1
-            log.warning("%s", e)
-            continue
-        submitted.append((sp, req))
-    for done, (sp, req) in enumerate(submitted):
-        _maybe_kill_replica(front, fault, done)
-        r = front.result(req.request_id)
-        log.info("request %d (%s, %d steps) done in %.2fs "
-                 "(ttff %.3fs%s%s); latents %s",
-                 req.request_id, sp.name, sp.steps, r.walltime_s,
-                 r.ttff_s,
-                 "" if r.deadline_met is None
-                 else f", deadline {'met' if r.deadline_met else 'MISSED'}",
-                 ", DEGRADED" if r.degraded else "",
-                 r.latents.shape)
-    front.stop()
+    completed = []
+    errors = {}
+    try:
+        for req in recovered:
+            sp = types.SimpleNamespace(name="recovered", steps=req.steps)
+            try:
+                front.submit(req)
+            except ShedError as e:
+                shed += 1
+                log.warning("%s", e)
+                continue
+            submitted.append((sp, req))
+        for sp, req in traffic:
+            req.request_id += rid_base
+            if args.deadline_ms is not None:
+                req.deadline_s = time.time() + args.deadline_ms / 1e3
+            try:
+                front.submit(req)
+            except ShedError as e:
+                shed += 1
+                log.warning("%s", e)
+                continue
+            submitted.append((sp, req))
+        for done, (sp, req) in enumerate(submitted):
+            _maybe_kill_replica(front, fault, done)
+            _maybe_crash(fault, done, store=store)
+            try:
+                r = front.result(req.request_id)
+            except (RuntimeError, TimeoutError) as e:
+                errors[req.request_id] = str(e)
+                log.error("request %d failed: %s", req.request_id, e)
+                continue
+            completed.append(req.request_id)
+            log.info("request %d (%s, %d steps) done in %.2fs "
+                     "(ttff %.3fs%s%s%s); latents %s",
+                     req.request_id, sp.name, sp.steps, r.walltime_s,
+                     r.ttff_s,
+                     "" if r.deadline_met is None
+                     else f", deadline "
+                          f"{'met' if r.deadline_met else 'MISSED'}",
+                     ", DEGRADED" if r.degraded else "",
+                     ", RECOVERED" if req.recovered else "",
+                     r.latents.shape)
+    except SystemExit:
+        if not terminating["sigterm"]:
+            raise
+    finally:
+        front.stop(drain=not terminating["sigterm"])
+        if journal is not None:
+            journal.close(clean=True)
+            if estimator is not None and est_path is not None:
+                atomic_write_text(est_path, estimator.to_json())
     counters = dict(front.metrics()) if hasattr(front, "metrics") else {}
     if fault is not None:
         counters.update(fault.counters())
@@ -491,9 +683,31 @@ def main(argv=None):
         counters.update(ladder.metrics())
     if counters:
         log.info("serving counters: %s", counters)
-    log.info("served %d/%d requests (%d shed) over %d bucket(s) "
-             "in %.2fs total", len(submitted), args.requests, shed,
-             len(shapes), time.time() - t0)
+    resumed_from = max(
+        [int(v) for k, v in counters.items()
+         if k.endswith("last_resume_step")] or [0])
+    log.info("served %d/%d requests (%d shed, %d recovered, deepest "
+             "resume step %d) over %d bucket(s) in %.2fs total",
+             len(completed), args.requests + len(recovered), shed,
+             len(recovered), resumed_from, len(shapes),
+             time.time() - t0)
+    if args.summary_json:
+        summary = {
+            "submitted": [req.request_id for _, req in submitted],
+            "completed": completed,
+            "errors": {str(k): v for k, v in errors.items()},
+            "shed": shed,
+            "recovered": len(recovered),
+            "resumed_from_step": resumed_from,
+            "sigterm": terminating["sigterm"],
+            "counters": {k: (float(v) if isinstance(v, float) else int(v))
+                         for k, v in counters.items()},
+        }
+        with open(args.summary_json, "w", encoding="utf-8") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        log.info("wrote summary to %s", args.summary_json)
+    if terminating["sigterm"]:
+        sys.exit(143)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,18 @@ latents every K denoising steps; the engine publishes each chunk to
 time-to-first-frame (``GenResult.ttff_s``, measured from submit) as a
 first-class latency metric next to completion time.
 
+Crash safety (DESIGN.md §18): with a ``journal`` attached the engine
+writes a WAL record per lifecycle event (submitted before enqueue /
+chunk / finished / shed); with a ``checkpoint_store`` each streamed
+chunk additionally persists the per-request ``(x_t, decision-cache
+state, step_offset)`` snapshot the sampler exposes via its chunk aux
+(``aux["__ckpt__"]``).  A request carrying a ``resume`` payload lands
+in a bucket keyed by its resume step and is served from the checkpoint
+through the sampler's ``resume=`` keyword — bitwise-equal to the
+uninterrupted run via the PR 7 ``step_offset``/``total_steps`` chunked
+contract.  Failover-marked errors are never journaled as finished, so
+a crashed replica's requests stay pending for warm restart.
+
 LMEngine: KV-cache prefill + decode loop (used by the decode_32k /
 long_500k shape cells and the LM serving example).
 """
@@ -91,9 +103,15 @@ def is_failover_error(msg: object) -> bool:
 # pattern artifact's content-hash version, DESIGN.md §16) — a
 # ``static``/``rainfusion`` sampler bakes the artifact's constant masks
 # into its compiled program, so traffic after an artifact swap must
-# never share the stale compiled entry.
+# never share the stale compiled entry; the final element is the
+# **resume step** (DESIGN.md §18): 0 for fresh traffic, the checkpoint
+# step_offset for requests resuming mid-flight after a crash/failover —
+# batchmates must share it (one sampler invocation has one step range),
+# but it is *excluded* from the compiled-sampler LRU key (``key[:8]``)
+# because the chunked sampler's traced step offset serves every resume
+# point with one compiled program.
 BucketKey = Tuple[Tuple[int, ...], int, Optional[str], Optional[int], int,
-                  Tuple[int, ...], Optional[int], Optional[str]]
+                  Tuple[int, ...], Optional[int], Optional[str], int]
 
 
 def _seq_shards() -> int:
@@ -173,6 +191,16 @@ class GenRequest:
     # denoising steps through DiffusionEngine.stream (§15.3).  None ->
     # monolithic delivery.  Part of the bucket identity.
     stream_every: Optional[int] = None
+    # Mid-flight resume payload (DESIGN.md §18): ``{"step": int, "x":
+    # latent array at that step, "dstate": decision-cache field->array
+    # mapping or None}`` from a chunk-boundary checkpoint.  Attached by
+    # the warm-restart recovery path and router failover, never by
+    # clients; the resume step joins the bucket identity so batchmates
+    # share one step range.
+    resume: Optional[dict] = dataclasses.field(default=None, repr=False)
+    # Was this request resubmitted from a journal recovery scan
+    # (counts toward ``recovered_count``)?
+    recovered: bool = False
 
 
 @dataclasses.dataclass
@@ -233,7 +261,9 @@ class DiffusionEngine:
                  batch_timeout_s: Optional[float] = None,
                  max_retries: int = 1,
                  retry_backoff_s: float = 0.05,
-                 bisect_on_error: bool = True):
+                 bisect_on_error: bool = True,
+                 journal: Any = None,
+                 checkpoint_store: Any = None):
         if scheduler not in ("edf", "hottest"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if sampler_factory is None:
@@ -321,6 +351,16 @@ class DiffusionEngine:
         self.shed_count = 0
         self.deadlines_met = 0
         self.deadlines_missed = 0
+        # Crash-safety seam (DESIGN.md §18): a serving.journal.Journal
+        # records request lifecycle events (submit-before-enqueue, WAL
+        # order), a serving.journal.CheckpointStore persists chunk-
+        # boundary generation state.  Replicas behind one router share
+        # both (same journal directory).
+        self._journal = journal
+        self._store = checkpoint_store
+        self.recovered_count = 0    # journal-recovered resubmissions seen
+        self.resumed_count = 0      # requests served from a checkpoint
+        self.last_resume_step = 0   # deepest checkpoint step resumed from
         self._lock = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -389,20 +429,34 @@ class DiffusionEngine:
                 "sampler factory does not take a stream_every argument")
         key = self._bucket_key(req)
         now = time.time()
-        with self._lock:
-            if self._stop:
-                raise RuntimeError("engine is stopped")
-            if self.admission_control and req.deadline_s is not None:
-                dq = self._buckets.get(key)
-                reason = slo_lib.admission_decision(
-                    req.deadline_s, now, len(dq) if dq else 0,
-                    self.max_batch, self.estimator.lower_bound(key))
-                if reason is not None:
-                    self.shed_count += 1
-                    raise ShedError(
-                        f"request {req.request_id} shed: {reason}")
-            self._buckets.setdefault(key, deque()).append((now, req))
-            self._lock.notify_all()
+        # WAL order (§18): the lifecycle record lands *before* the
+        # request is accepted, so a crash after this point can lose the
+        # result but never the request.  A later shed/refusal is its own
+        # record (or surfaces synchronously to the caller) — recovery
+        # resubmits anything journaled-but-unfinished, at-least-once.
+        if self._journal is not None:
+            self._journal.record_submitted(req)
+        try:
+            with self._lock:
+                if self._stop:
+                    raise RuntimeError("engine is stopped")
+                if self.admission_control and req.deadline_s is not None:
+                    dq = self._buckets.get(key)
+                    reason = slo_lib.admission_decision(
+                        req.deadline_s, now, len(dq) if dq else 0,
+                        self.max_batch, self.estimator.lower_bound(key))
+                    if reason is not None:
+                        self.shed_count += 1
+                        raise ShedError(
+                            f"request {req.request_id} shed: {reason}")
+                self._buckets.setdefault(key, deque()).append((now, req))
+                if req.recovered:
+                    self.recovered_count += 1
+                self._lock.notify_all()
+        except ShedError as e:
+            if self._journal is not None:
+                self._journal.record_shed(req.request_id, str(e))
+            raise
 
     def _validate(self, req: GenRequest) -> None:
         """Reject malformed requests at submit (§17 satellite): a bad
@@ -433,6 +487,20 @@ class DiffusionEngine:
             raise ValueError(
                 f"request {rid}: stream_every must be positive, "
                 f"got {req.stream_every!r}")
+        if req.resume is not None:
+            step = req.resume.get("step") if isinstance(req.resume, dict) \
+                else None
+            if (not isinstance(step, (int, np.integer)) or step < 0
+                    or step >= req.steps or "x" not in req.resume):
+                raise ValueError(
+                    f"request {rid}: resume payload needs an int step in "
+                    f"[0, steps) and an 'x' latent, got {req.resume!r:.80}")
+            if req.stream_every and step % req.stream_every != 0:
+                raise ValueError(
+                    f"request {rid}: resume step {step} is not a chunk "
+                    f"boundary of stream_every={req.stream_every} — the "
+                    "chunk partitioning would diverge from the "
+                    "uninterrupted run (DESIGN.md §18)")
 
     def result(self, request_id: int, timeout: float = 300.0) -> GenResult:
         deadline = time.time() + timeout
@@ -517,7 +585,14 @@ class DiffusionEngine:
                  "deadlines_missed": self.deadlines_missed,
                  "watchdog_trips": self.watchdog_trips,
                  "batch_retries": self.batch_retries,
-                 "quarantined": self.quarantined}
+                 "quarantined": self.quarantined,
+                 "recovered_count": self.recovered_count,
+                 "resumed_count": self.resumed_count,
+                 "last_resume_step": self.last_resume_step}
+        if self._journal is not None:
+            m.update({k: int(v) for k, v in self._journal.metrics().items()})
+        if self._store is not None:
+            m.update({k: int(v) for k, v in self._store.metrics().items()})
         if self._ladder is not None:
             m.update(self._ladder.metrics())
         return m
@@ -553,7 +628,8 @@ class DiffusionEngine:
                 _seq_shards(),
                 tuple(np.shape(req.txt)),
                 req.stream_every,
-                _pattern_token(req.policy or self.default_policy))
+                _pattern_token(req.policy or self.default_policy),
+                int(req.resume["step"]) if req.resume else 0)
 
     def _next_bucket(self) -> Optional[BucketKey]:
         """SLO-aware drain order (DESIGN.md §15.1, logic in
@@ -595,7 +671,12 @@ class DiffusionEngine:
 
     def _sampler(self, key: BucketKey) -> Callable:
         """Bounded LRU over compiled samplers; MRU (the hottest bucket)
-        survives eviction."""
+        survives eviction.  The LRU is keyed on the bucket identity
+        *minus* the resume step (``key[:8]``): the chunked sampler
+        traces its step offset, so resumed traffic reuses the fresh
+        bucket's compiled entry instead of recompiling per resume
+        point."""
+        key = key[:8]
         fn = self._compiled.get(key)
         if fn is None:
             shape, steps, pol, reuse = key[:4]
@@ -682,7 +763,8 @@ class DiffusionEngine:
         token rewritten, everything else identical — so the degraded
         bucket compiles its own sampler instead of replaying the
         tripped program."""
-        return key[:2] + (policy,) + key[3:7] + (_pattern_token(policy),)
+        return (key[:2] + (policy,) + key[3:7]
+                + (_pattern_token(policy),) + key[8:])
 
     def _sentinel_verdict(self, lat: Optional[np.ndarray],
                           aux: Optional[dict]) -> Optional[str]:
@@ -710,6 +792,112 @@ class DiffusionEngine:
                             f"tol {gcfg.drift_tol:.3g}")
         return None
 
+    # -- crash-safety seam (DESIGN.md §18) ------------------------------------
+
+    @staticmethod
+    def _accepts_resume(fn: Callable) -> bool:
+        """Does this sampler take a ``resume=`` keyword?  Factories
+        that predate the checkpoint seam don't — resumed requests then
+        fall back to deterministic replay-from-step-0, which is slower
+        but returns identical latents."""
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            return False
+        return "resume" in params or any(
+            p.kind == p.VAR_KEYWORD for p in params.values())
+
+    def _assemble_resume(self, key: BucketKey,
+                         batch: List[Tuple[float, GenRequest]],
+                         fn: Callable) -> Optional[Dict[str, Any]]:
+        """Build the batch-level resume payload ``{"x", "step",
+        "dstate"}`` from the per-request checkpoints, or ``None`` for
+        fresh traffic / samplers without resume support.  The bucket
+        key pins the resume step, so every batchmate shares it; their
+        latents stack on axis 0 and their decision-state slices merge
+        back along the batch axis."""
+        step = key[8] if len(key) > 8 else 0
+        if step <= 0:
+            return None
+        payloads = [r.resume for _, r in batch]
+        if any(p is None for p in payloads):
+            return None  # defensive: bucket identity should prevent this
+        if not self._accepts_resume(fn):
+            log.warning(
+                "bucket %s: sampler takes no resume argument; replaying "
+                "%d checkpointed request(s) from step 0", key, len(batch))
+            return None
+        from repro.core import decision_cache
+
+        xs = jnp.stack([jnp.asarray(p["x"]) for p in payloads])
+        dstates = [p.get("dstate") for p in payloads]
+        merged = None
+        if all(d is not None for d in dstates):
+            merged = decision_cache.merge_states(
+                [decision_cache.state_from_arrays(d) for d in dstates])
+        elif any(d is not None for d in dstates):
+            log.warning("bucket %s: mixed cache/cache-less checkpoints "
+                        "in one batch; resuming without decision state",
+                        key)
+        return {"x": xs, "step": int(step), "dstate": merged}
+
+    def _record_chunk(self, key: BucketKey,
+                      batch: List[Tuple[float, GenRequest]],
+                      lat_np: np.ndarray, ck: Optional[Dict],
+                      ci: int, abandoned: threading.Event):
+        """Durable side of one delivered chunk (§18): a ``chunk``
+        journal record per request, and — when a checkpoint store is
+        attached, the sampler exposed its ``__ckpt__`` state, and the
+        bucket is unsharded — the per-request ``(x_t, dstate, step)``
+        checkpoint.  Runs outside the engine lock (fsync latency must
+        not block submitters); a watchdog-abandoned zombie writes
+        nothing."""
+        if (self._journal is None and self._store is None) \
+                or abandoned.is_set():
+            return
+        step = ck.get("step") if ck else None
+        stream = key[6] or 0
+        base_ci = (key[8] // stream) if len(key) > 8 and stream else 0
+        if self._journal is not None:
+            for _, r in batch:
+                try:
+                    self._journal.record_chunk(r.request_id, base_ci + ci,
+                                               step)
+                except RuntimeError:
+                    return  # journal closed mid-shutdown
+        steps = key[1]
+        if (self._store is None or ck is None or step is None
+                or key[4] != 1 or (steps > 0 and int(step) >= steps)):
+            # No store, no sampler state, a context-parallel bucket
+            # (per-shard state cannot be re-sliced per request), or the
+            # final chunk (the request is about to finish and the
+            # checkpoint would be discarded immediately).
+            return
+        arrays = None
+        dstate = ck.get("dstate")
+        if dstate is not None:
+            from repro.core import decision_cache
+
+            arrays = decision_cache.state_to_arrays(dstate)
+            if any(a is not None and a.ndim < 2 for a in arrays.values()):
+                # Not a layer-stacked batched state: no batch axis to
+                # slice per request — skip checkpointing, keep serving.
+                arrays = None
+        for i, (_, r) in enumerate(batch):
+            per = None
+            if arrays is not None:
+                # Batch axis 1 of every (layers, batch, ...) leaf,
+                # kept as a size-1 dim so merge_states is the inverse.
+                per = {k: (None if v is None else v[:, i:i + 1])
+                       for k, v in arrays.items()}
+            try:
+                self._store.put(r.request_id, step=int(step),
+                                x=lat_np[i], seed=r.seed,
+                                bucket=key[:8], dstate=per)
+            except OSError as e:
+                log.warning("checkpoint write failed for request %d: %s",
+                            r.request_id, e)
+
     def _run_batch(self, key: BucketKey,
                    batch: List[Tuple[float, GenRequest]], pub: Dict,
                    abandoned: threading.Event):
@@ -734,10 +922,22 @@ class DiffusionEngine:
                 txt = jnp.stack([jnp.asarray(r.txt) for _, r in batch])
                 rngs = jnp.stack([jax.random.PRNGKey(r.seed)
                                   for _, r in batch])
-                noise = jax.vmap(lambda k: jax.random.normal(k, shape))(rngs)
-                # The full (B, 2) key batch goes to the sampler — every
-                # request keeps its own randomness inside one batch.
-                out = fn(noise, txt, rngs)
+                resume = self._assemble_resume(key, batch, fn)
+                if resume is not None:
+                    # Mid-flight resume (§18): the checkpointed x_t
+                    # replaces the initial noise and the sampler starts
+                    # at the checkpoint's step offset with the cached
+                    # decision state — the remaining schedule slice is
+                    # bitwise-identical to the uninterrupted run.
+                    noise = resume.pop("x")
+                    out = fn(noise, txt, rngs, resume=resume)
+                else:
+                    noise = jax.vmap(
+                        lambda k: jax.random.normal(k, shape))(rngs)
+                    # The full (B, 2) key batch goes to the sampler —
+                    # every request keeps its own randomness inside one
+                    # batch.
+                    out = fn(noise, txt, rngs)
                 if inspect.isgenerator(out):
                     # Streaming bucket (§15.3): each yielded chunk is
                     # published to stream() subscribers as it lands; the
@@ -745,6 +945,9 @@ class DiffusionEngine:
                     lat = aux = None
                     for ci, chunk in enumerate(out):
                         lat, aux = self._split_out(chunk)
+                        ck = None
+                        if isinstance(aux, dict):
+                            ck = aux.pop("__ckpt__", None)
                         lat = np.asarray(jax.device_get(lat))
                         if (self._ladder is not None
                                 and not np.all(np.isfinite(lat))):
@@ -752,6 +955,8 @@ class DiffusionEngine:
                                 f"non-finite streamed chunk {ci}"
                             return
                         self._publish_chunk(batch, lat, pub, ci, abandoned)
+                        self._record_chunk(key, batch, lat, ck, ci,
+                                           abandoned)
                     if lat is None:
                         raise RuntimeError(
                             "streaming sampler yielded nothing")
@@ -832,7 +1037,28 @@ class DiffusionEngine:
                 if err is not None:
                     self._error_expiry[r.request_id] = (
                         time.time() + self.error_ttl_s)
+            if err is None and len(key) > 8 and key[8] > 0:
+                self.resumed_count += len(batch)
+                self.last_resume_step = max(self.last_resume_step,
+                                            int(key[8]))
             self._lock.notify_all()
+        # Durable terminal records, outside the lock (§18).  Failover-
+        # marked errors (replica died, watchdog) are *not* journaled as
+        # finished — the request is still owed a result, so it must stay
+        # pending for recovery; request-level errors (poison, quarantine,
+        # guardrail dead-ends) are, so a restart never resurrects them.
+        if self._journal is not None or self._store is not None:
+            for _, r in batch:
+                if err is not None and is_failover_error(err):
+                    continue
+                if self._journal is not None:
+                    try:
+                        self._journal.record_finished(r.request_id,
+                                                      error=err)
+                    except RuntimeError:
+                        break  # journal closed mid-shutdown
+                if self._store is not None:
+                    self._store.discard(r.request_id)
 
     def _serve(self, key: BucketKey, batch: List[Tuple[float, GenRequest]]):
         pub: Dict[str, Dict] = {"ttff": {}, "count": {}}

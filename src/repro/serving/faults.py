@@ -36,6 +36,14 @@ Fault kinds and where they fire:
                      the bisection quarantine's deterministic prey.
   ``kill_replica``   host drivers (serve.py / serve_mixed): fail a
                      router replica after ``after`` completed results.
+  ``crash``          host drivers: SIGKILL the whole serving process
+                     after ``after`` completed results — a hard kill,
+                     no drain, no clean-shutdown marker (DESIGN.md
+                     §18).  With ``wait_ckpt=1`` (default) the driver
+                     first waits for at least one in-flight request's
+                     chunk checkpoint to land, so "mid-generation" is
+                     deterministic; the restart drill then recovers
+                     from the journal with ``--resume``.
 
 ``count`` (default 1; ``-1`` = unlimited) bounds how many times a
 host-level fault fires; ``attn_nan`` is trace-scoped instead (armed
@@ -64,7 +72,7 @@ __all__ = ["ENV_VAR", "FaultPlan", "FaultSpec", "active_faults",
 ENV_VAR = "REPRO_FAULTS"
 
 _KINDS = ("attn_nan", "artifact_corrupt", "hang", "raise", "poison",
-          "kill_replica")
+          "kill_replica", "crash")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -94,6 +94,43 @@ class ServiceEstimator:
             return floor_s
         return max(floor_s, mult * est)
 
+    # -- warm-restart persistence (DESIGN.md §18) --------------------------
+
+    def to_json(self) -> str:
+        """Serialize the per-bucket statistics.  Keys are stored as
+        ``repr`` strings — bucket keys are tuples of ints/strings/None,
+        which round-trip exactly through ``ast.literal_eval``."""
+        import json
+
+        with self._lock:
+            return json.dumps({
+                "alpha": self.alpha,
+                "min": {repr(k): v for k, v in self._min.items()},
+                "ewma": {repr(k): v for k, v in self._ewma.items()},
+            })
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServiceEstimator":
+        """Rebuild an estimator from :meth:`to_json` output, so a warm
+        restart keeps its admission bounds and watchdog budgets instead
+        of re-learning them (and re-admitting provably-infeasible
+        traffic) from scratch.  Unparseable keys are skipped, not
+        fatal — stale persisted state must never block a restart."""
+        import ast
+        import json
+
+        d = json.loads(text)
+        est = cls(alpha=float(d.get("alpha", 0.3)))
+        for attr, src in (("_min", d.get("min", {})),
+                          ("_ewma", d.get("ewma", {}))):
+            out = getattr(est, attr)
+            for ks, v in src.items():
+                try:
+                    out[ast.literal_eval(ks)] = float(v)
+                except (ValueError, SyntaxError):
+                    continue
+        return est
+
 
 def _batches_needed(queued_ahead: int, max_batch: int) -> int:
     """Minimum sampler invocations before a request joining a bucket
